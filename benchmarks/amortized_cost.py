@@ -1,0 +1,32 @@
+"""Paper Figure 7 (appendix): amortized cost incl. index build — the
+break-even query count after which the MIPS preprocessing pays off."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import build_ivf, clustered_db, random_queries, timeit
+from benchmarks.sampling_speed import amortized_sampler, brute_force_sampler
+from repro.core.gumbel import default_kl
+
+N, D = 160_000, 64
+
+
+def run(report) -> None:
+    db = clustered_db(N, D)
+    t0 = time.perf_counter()
+    state = build_ivf(db)
+    jax.block_until_ready(state.centroids)
+    t_build = time.perf_counter() - t0
+    k = default_kl(N)
+    ours = amortized_sampler(db, state, k, k)
+    brute = brute_force_sampler(db)
+    q = random_queries(db, 4)
+    t_o = timeit(lambda: ours(q[0], jax.random.key(0)))
+    t_b = timeit(lambda: brute(q[0], jax.random.key(0)))
+    be = t_build / max(t_b - t_o, 1e-12)
+    report(
+        "fig7/amortized_breakeven", t_build * 1e6,
+        f"breakeven_queries={be:.0f} (paper: ~8600 on 1.28M)",
+    )

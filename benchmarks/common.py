@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: synthetic log-linear problems + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mips
+
+
+def clustered_db(n: int, d: int, seed: int = 0, n_centers: int = 256):
+    """Unit-norm feature database with cluster structure (ImageNet-feature
+    style — what makes IVF work, per the paper's §4.1.1)."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    centers = jax.random.normal(k1, (n_centers, d))
+    assign = jax.random.randint(k2, (n,), 0, n_centers)
+    db = centers[assign] + 0.5 * jax.random.normal(k3, (n, d))
+    return db / jnp.linalg.norm(db, axis=1, keepdims=True)
+
+
+def random_queries(db, num: int, temperature: float = 0.05, seed: int = 1):
+    """θ drawn uniformly from the dataset, scaled by 1/τ (paper §4.1.2)."""
+    ids = jax.random.randint(jax.random.key(seed), (num,), 0, db.shape[0])
+    return db[ids] / temperature
+
+
+def timeit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-clock seconds per call (jit-compiled, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_ivf(db, n_probe_hint: int = 16):
+    n = db.shape[0]
+    return mips.build(
+        "ivf", db, n_clusters=max(16, int(np.sqrt(n))), kmeans_iters=4
+    )

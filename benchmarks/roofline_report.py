@@ -1,0 +1,38 @@
+"""Roofline table from the dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_baseline.json (produced by repro.launch.dryrun) and prints the
+three roofline terms per (arch x shape x mesh). No compilation happens
+here; the 512-device dry-run is its own step."""
+from __future__ import annotations
+
+import json
+import os
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_OPT = os.path.join(_ROOT, "dryrun_optimized.json")
+_BASE = os.path.join(_ROOT, "dryrun_baseline.json")
+
+
+def run(report) -> None:
+    default = _OPT if os.path.exists(_OPT) else _BASE
+    path = os.environ.get("DRYRUN_JSON", default)
+    if not os.path.exists(path):
+        report("roofline/missing", 0.0, f"run repro.launch.dryrun first ({path})")
+        return
+    with open(path) as f:
+        cells = json.load(f)
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        dom = max(
+            ("compute", "memory", "collective"),
+            key=lambda t: c[f"t_{t}_ms"],
+        )
+        report(
+            name,
+            c[f"t_{dom}_ms"] * 1e3,  # dominant term, us
+            f"comp={c['t_compute_ms']:.2f}ms mem={c['t_memory_ms']:.2f}ms "
+            f"coll={c['t_collective_ms']:.2f}ms bn={c['bottleneck']} "
+            f"useful={c['useful_frac']*100:.1f}%",
+        )

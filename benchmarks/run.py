@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Select subsets with
+``python -m benchmarks.run [fig2|table1|fig4|table2|fig7|roofline]``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        amortized_cost,
+        learning,
+        partition_tradeoff,
+        roofline_report,
+        sampling_accuracy,
+        sampling_speed,
+    )
+
+    suites = {
+        "fig2": sampling_speed.run,
+        "table1": sampling_accuracy.run,
+        "fig4": partition_tradeoff.run,
+        "table2": learning.run,
+        "fig7": amortized_cost.run,
+        "roofline": roofline_report.run,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    rows: list[tuple[str, float, str]] = []
+
+    def report(name: str, us_per_call: float, derived: str = "") -> None:
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    for key in wanted:
+        suites[key](report)
+
+
+if __name__ == "__main__":
+    main()

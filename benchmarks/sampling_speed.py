@@ -1,0 +1,65 @@
+"""Paper Figure 2: per-query sampling time, ours vs brute force, vs n.
+
+Ours = IVF top-k probe + Poissonized fixed-B lazy Gumbels (k = l = √(n·ln
+1/δ)); brute force = dense logits + n Gumbels + argmax. Preprocessing (the
+IVF build) is excluded, as in the figure; amortization break-even is
+reported by benchmarks/amortized_cost.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_ivf, clustered_db, random_queries, timeit
+from repro.core import mips
+from repro.core.gumbel import default_kl, sample_fixed_b
+from repro.kernels import ref  # noqa: F401  (keeps kernel import warm)
+
+D = 64
+SIZES = (10_000, 20_000, 40_000, 80_000, 160_000)
+
+
+def brute_force_sampler(db):
+    def f(theta, key):
+        y = db @ theta
+        g = jax.random.gumbel(key, y.shape)
+        return jnp.argmax(y + g)
+
+    return jax.jit(f)
+
+
+def amortized_sampler(db, state, k, l, n_probe=16):
+    n = db.shape[0]
+    m_cap = int(l + 6 * math.sqrt(l) + 8)
+
+    def f(theta, key):
+        topk = mips.topk("ivf", state, theta, k, n_probe=n_probe)
+        score_fn = lambda ids: db[ids] @ theta
+        return sample_fixed_b(
+            key, topk, n, score_fn, l=l, m_cap=m_cap
+        ).index
+
+    return jax.jit(f)
+
+
+def run(report) -> None:
+    for n in SIZES:
+        db = clustered_db(n, D)
+        q = random_queries(db, 8)
+        key = jax.random.key(0)
+        brute = brute_force_sampler(db)
+        t_brute = timeit(lambda: brute(q[0], key))
+        state = build_ivf(db)
+        k = default_kl(n)
+        ours = amortized_sampler(db, state, k, k)
+        t_ours = timeit(lambda: ours(q[0], key))
+        report(
+            f"fig2/sampling_n{n//1000}k_brute", t_brute * 1e6, ""
+        )
+        report(
+            f"fig2/sampling_n{n//1000}k_ours",
+            t_ours * 1e6,
+            f"speedup={t_brute / t_ours:.2f}x k={k}",
+        )

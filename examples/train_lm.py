@@ -1,0 +1,51 @@
+"""End-to-end training driver: a ~100M-parameter LM with the amortized
+softmax head, checkpointed + resumable.
+
+Default runs a CPU-feasible reduced step count; pass ``--steps 300`` for
+the full run (same config, more steps) on capable hardware.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps N] [--head MODE]
+"""
+import argparse
+
+from repro.launch.steps import TrainConfig
+from repro.models.config import ArchConfig
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import RunConfig, Trainer
+
+# ~100M params: 8 layers, d=768, untied 16k vocab
+CFG_100M = ArchConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=8,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab=16_384,
+    head_mode="amortized",
+)
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--head", default="amortized",
+                    choices=["exact", "topk_only", "amortized"])
+    ap.add_argument("--workdir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = CFG_100M.scaled(head_mode=args.head)
+    from repro.models.model import param_count
+
+    print(f"params: {param_count(cfg):,}  head={args.head}")
+    run = RunConfig(
+        num_steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_every=max(10, args.steps // 3), log_every=5,
+        train=TrainConfig(opt=OptConfig(lr=6e-4, warmup_steps=10,
+                                        total_steps=args.steps)),
+    )
+    out = Trainer(cfg, run, args.workdir).train()
+    print(out)

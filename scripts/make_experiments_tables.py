@@ -1,0 +1,86 @@
+"""Generate EXPERIMENTS.md roofline tables from the dry-run JSONs."""
+import json
+import math
+import sys
+
+sys.path.insert(0, "src")
+import os
+
+os.environ["JAX_PLATFORMS"] = "cpu"
+
+from repro.configs import get  # noqa: E402
+from repro.launch.specs import SHAPES  # noqa: E402
+from repro.models.model import active_param_count  # noqa: E402
+
+_ACTIVE = {}
+
+
+def active(arch):
+    if arch not in _ACTIVE:
+        _ACTIVE[arch] = active_param_count(get(arch))
+    return _ACTIVE[arch]
+
+
+def model_flops(c):
+    n_tok = SHAPES[c["shape"]]["batch"] * (
+        SHAPES[c["shape"]]["seq"] if c["kind"] != "decode" else 1
+    )
+    mult = 6 if c["kind"] == "train" else 2
+    return mult * active(c["arch"]) * n_tok
+
+
+def rows(path):
+    cells = json.load(open(path))
+    out = {}
+    for c in cells:
+        if c["status"] != "ok":
+            continue
+        ndev = 512 if c["mesh"] == "2x16x16" else 256
+        mf = model_flops(c)
+        c["useful"] = mf / (c["flops_per_device"] * ndev)
+        c["mf"] = mf
+        out[(c["arch"], c["shape"], c["mesh"])] = c
+    return out
+
+
+def fmt_table(data, mesh="16x16"):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) |"
+          " bottleneck | MODEL/HLO flops | HBM/dev (GB) |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for (a, s, m), c in sorted(data.items()):
+        if m != mesh:
+            continue
+        hbm = c["mem"]["args_gb"] + c["mem"]["temp_gb"]
+        print(
+            f"| {a} | {s} | {c['t_compute_ms']:.1f} | {c['t_memory_ms']:.1f} "
+            f"| {c['t_collective_ms']:.1f} | {c['bottleneck']} "
+            f"| {c['useful']*100:.1f}% | {hbm:.1f} |"
+        )
+
+
+def fmt_compare(base, opt):
+    print("\n### Baseline -> optimized (single-pod)\n")
+    print("| arch | shape | mem ms (base→opt) | coll ms (base→opt) |"
+          " comp ms (base→opt) | useful% (base→opt) |")
+    print("|---|---|---|---|---|---|")
+    for key in sorted(opt):
+        a, s, m = key
+        if m != "16x16" or key not in base:
+            continue
+        b, o = base[key], opt[key]
+        print(
+            f"| {a} | {s} "
+            f"| {b['t_memory_ms']:.0f} → {o['t_memory_ms']:.0f} "
+            f"| {b['t_collective_ms']:.0f} → {o['t_collective_ms']:.0f} "
+            f"| {b['t_compute_ms']:.0f} → {o['t_compute_ms']:.0f} "
+            f"| {b['useful']*100:.1f} → {o['useful']*100:.1f} |"
+        )
+
+
+if __name__ == "__main__":
+    base = rows("dryrun_baseline.json")
+    opt = rows(sys.argv[1] if len(sys.argv) > 1 else "dryrun_optimized.json")
+    fmt_table(opt, "16x16")
+    fmt_table(opt, "2x16x16")
+    fmt_compare(base, opt)

@@ -1,0 +1,27 @@
+"""The paper's own setting: a log-linear model over a fixed feature
+database (ImageNet-style: n ≈ 1.28M ResNet features d=256; Word-Embedding
+style: n ≈ 2M fastText vectors d=300), queried with a stream of parameter
+vectors θ. There is no trunk — the model IS the head. Consumed by
+benchmarks/ and examples/ directly through repro.core."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LogLinearConfig:
+    name: str
+    n: int  # output-space size
+    d: int  # feature dim
+    temperature: float = 0.05  # paper §4.1.2
+    mips: str = "ivf"
+    delta: float = 1e-4
+
+
+IMAGENET = LogLinearConfig(name="imagenet", n=1_281_167, d=256)
+WORD_EMBEDDINGS = LogLinearConfig(name="word-embeddings", n=2_000_126, d=300)
+
+# CPU-feasible reductions used by the benchmark harness in this container
+# (same arch family, smaller n; the harness sweeps n as in paper Fig. 2).
+IMAGENET_BENCH = LogLinearConfig(name="imagenet-bench", n=160_000, d=256)
+WORDS_BENCH = LogLinearConfig(name="words-bench", n=160_000, d=300)
+
+CONFIG = IMAGENET

@@ -1,0 +1,37 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+- gumbel: lazy-Gumbel sampling (Alg 1/2 + Poissonized TPU variant)
+- partition / expectation: Alg 3 / Alg 4 stratified estimators
+- complement: exact uniform sampling from [n] \\ S (static shapes)
+- mips: exact / IVF / SRP-LSH top-k indexes
+- amortized_head: the estimators packaged as an LM softmax head
+"""
+from repro.core.amortized_head import HeadConfig, head_loss, head_sample, make_index
+from repro.core.complement import complement_map, sample_complement
+from repro.core.expectation import expectation_estimate
+from repro.core.gumbel import (
+    SampleResult,
+    TopK,
+    default_kl,
+    gumbel_max_dense,
+    sample_adaptive_b,
+    sample_fixed_b,
+)
+from repro.core.partition import partition_estimate
+
+__all__ = [
+    "HeadConfig",
+    "head_loss",
+    "head_sample",
+    "make_index",
+    "complement_map",
+    "sample_complement",
+    "expectation_estimate",
+    "SampleResult",
+    "TopK",
+    "default_kl",
+    "gumbel_max_dense",
+    "sample_adaptive_b",
+    "sample_fixed_b",
+    "partition_estimate",
+]

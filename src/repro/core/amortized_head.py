@@ -1,0 +1,253 @@
+"""Amortized log-linear head: the paper's algorithms as an LM softmax layer.
+
+The softmax head of a language model is a log-linear model: features
+``φ(x_i)`` are the output-embedding rows ``E_i``, parameters ``θ`` are the
+final hidden state ``h``; ``y_i = h · E_i``. This module packages the
+paper's estimators as a drop-in head with three modes (the three columns of
+the paper's Table 2):
+
+* ``exact``      — dense logits + logsumexp, O(n d) per token (baseline).
+* ``topk_only``  — truncate the distribution to S (Vijayanarasimhan et al.
+  2014 baseline; biased, fails for spread-out distributions).
+* ``amortized``  — the paper: ``log Ẑ`` from Algorithm 3 over S ∪ T. The
+  gradient of the surrogate loss w.r.t. (h, E) is *exactly* Algorithm 4's
+  expectation estimator applied to ``f = φ`` (∇_h log Ẑ = Σ p̂_i E_i), so
+  plain autodiff through the estimator gives the paper's learning method.
+
+Sampling (decode) uses the lazy-Gumbel samplers of :mod:`repro.core.gumbel`.
+
+All token-level work is chunked (``lax.map`` over token chunks) so the
+(tokens, k+l, d) gather never materializes at full sequence length —
+peak activation memory is O(chunk · (k+l) · d).
+
+Padded vocabularies: models pad ``n`` (logical vocab) up to a multiple of
+256 for TP sharding. Pad rows sit at the END of the table; every estimator
+here draws tail ids from ``[0, n_logical)`` only and the exact mode masks
+logits ``>= n_logical``, so pads contribute exactly zero probability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mips
+from repro.core.complement import sample_complement
+from repro.core.gumbel import SampleResult, TopK, default_kl, sample_fixed_b
+
+__all__ = ["HeadConfig", "head_loss", "head_sample", "make_index"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadConfig:
+    n: int  # logical vocab size (pad rows beyond n are never touched)
+    k: int = 0  # |S|; 0 -> default_kl(n, delta)
+    l: int = 0  # |T|; 0 -> same as k
+    mode: str = "amortized"  # exact | topk_only | amortized
+    mips: str = "exact"  # exact | ivf  (index used for the top-k probe)
+    n_probe: int = 8
+    use_kernel: bool = False
+    chunk: int = 256  # token chunk for gathers
+    delta: float = 1e-4
+    c: float = 0.0  # assumed approximate-top-k gap (Def 3.1)
+    min_amortized_n: int = 4096  # below this, amortization can't win: exact
+    score_dtype: str = "f32"  # "bf16": halve candidate-gather HBM traffic
+    #   (logsumexp still accumulates in f32; §Perf iteration 3b)
+
+    def resolved(self) -> "HeadConfig":
+        k = self.k or default_kl(self.n, self.delta, self.c)
+        l = self.l or k
+        mode = self.mode
+        if mode != "exact" and self.n < self.min_amortized_n:
+            # √n savings are nil for tiny output spaces (DESIGN.md
+            # §Arch-applicability, e.g. hubert's 504-way head).
+            mode = "exact"
+        k = min(k, self.n // 2)
+        l = min(l, self.n // 2)
+        return dataclasses.replace(self, k=k, l=l, mode=mode)
+
+
+class HeadLossOut(NamedTuple):
+    loss: jax.Array  # (T,) per-token negative log-likelihood
+    log_z: jax.Array  # (T,) partition estimates (diagnostics)
+
+
+def make_index(cfg: HeadConfig, emb: jax.Array) -> Any:
+    """Build the MIPS index over the (logical) embedding rows. Host-side."""
+    cfg = cfg.resolved()
+    if cfg.mode == "exact" or cfg.mips == "exact":
+        return None  # exact top-k runs directly off `emb`
+    return mips.build(cfg.mips, emb[: cfg.n])
+
+
+def _topk(cfg: HeadConfig, emb: jax.Array, index: Any, h: jax.Array) -> TopK:
+    """(t, d) queries -> TopK[(t,k)]. Scores recomputed later for grads."""
+    if index is None:
+        scores = h.astype(jnp.float32) @ emb[: cfg.n].astype(jnp.float32).T
+        vals, ids = jax.lax.top_k(scores, cfg.k)
+        return TopK(ids.astype(jnp.int32), vals)
+    return mips.topk_batch(
+        cfg.mips, index, h, cfg.k, n_probe=cfg.n_probe, use_kernel=cfg.use_kernel
+    )
+
+
+def _pad_chunk(x: jax.Array, chunk: int) -> tuple[jax.Array, int]:
+    t = x.shape[0]
+    rem = (-t) % chunk
+    if rem:
+        pad = [(0, rem)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad)
+    return x, t
+
+
+def head_loss(
+    emb: jax.Array,
+    h: jax.Array,
+    targets: jax.Array,
+    key: jax.Array,
+    cfg: HeadConfig,
+    index: Any = None,
+) -> HeadLossOut:
+    """Per-token NLL ``log Z - y_target``.
+
+    Args:
+      emb: (n_rows, d) output embedding (n_rows >= cfg.n; pads at end).
+      h: (T, d) final hidden states.
+      targets: (T,) int32 target ids in [0, cfg.n).
+    """
+    cfg = cfg.resolved()
+    h = h.astype(jnp.float32)
+    embf = emb.astype(jnp.float32)
+
+    if cfg.mode == "exact":
+        return _exact_loss(embf, h, targets, cfg)
+
+    chunk = min(cfg.chunk, max(1, h.shape[0]))
+    hp, t_true = _pad_chunk(h, chunk)
+    tp, _ = _pad_chunk(targets, chunk)
+    n_chunks = hp.shape[0] // chunk
+    hc = hp.reshape(n_chunks, chunk, -1)
+    tc = tp.reshape(n_chunks, chunk)
+    keys = jax.random.split(key, n_chunks)
+
+    def one_chunk(args):
+        hci, tci, ki = args
+        return _sparse_loss_chunk(embf, hci, tci, ki, cfg, index)
+
+    # remat: re-gather candidate rows in the backward pass per chunk
+    loss, log_z = jax.lax.map(jax.checkpoint(one_chunk), (hc, tc, keys))
+    return HeadLossOut(loss.reshape(-1)[:t_true], log_z.reshape(-1)[:t_true])
+
+
+def _exact_loss(
+    embf: jax.Array, h: jax.Array, targets: jax.Array, cfg: HeadConfig
+) -> HeadLossOut:
+    logits = h @ embf.T  # (T, n_rows)
+    n_rows = embf.shape[0]
+    if n_rows > cfg.n:
+        mask = jnp.arange(n_rows) < cfg.n
+        logits = jnp.where(mask[None, :], logits, -jnp.inf)
+    log_z = jax.nn.logsumexp(logits, axis=-1)
+    y_t = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=1)[
+        :, 0
+    ]
+    return HeadLossOut(log_z - y_t, log_z)
+
+
+def _sparse_loss_chunk(
+    embf: jax.Array,
+    h: jax.Array,
+    targets: jax.Array,
+    key: jax.Array,
+    cfg: HeadConfig,
+    index: Any,
+) -> tuple[jax.Array, jax.Array]:
+    """amortized / topk_only loss for one (chunk, d) token block."""
+    t = h.shape[0]
+    topk = _topk(cfg, embf, index, jax.lax.stop_gradient(h))
+    s_ids = jax.lax.stop_gradient(topk.ids)  # (t, k)
+
+    if cfg.mode == "topk_only":
+        ids_all = jnp.concatenate([s_ids, targets[:, None]], axis=1)
+        log_w = jnp.zeros((t, cfg.k + 1), jnp.float32)
+        # target may duplicate an S entry; mask the duplicate S slot so the
+        # truncated Z counts the target exactly once.
+        dup = s_ids == targets[:, None]
+        log_w = log_w.at[:, : cfg.k].set(jnp.where(dup, -jnp.inf, 0.0))
+    else:  # amortized (Algorithm 3 per token)
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            key, jnp.arange(t, dtype=jnp.uint32)
+        )
+        s_sorted = jnp.sort(s_ids, axis=1)
+        tail = jax.vmap(lambda kk, ss: sample_complement(kk, cfg.n, ss, cfg.l))(
+            keys, s_sorted
+        )  # (t, l)
+        ids_all = jnp.concatenate([s_ids, tail], axis=1)  # (t, k+l)
+        log_w_tail = math.log((cfg.n - cfg.k) / cfg.l)
+        log_w = jnp.concatenate(
+            [
+                jnp.zeros((t, cfg.k), jnp.float32),
+                jnp.full((t, cfg.l), log_w_tail, jnp.float32),
+            ],
+            axis=1,
+        )
+
+    rows = embf[ids_all]  # (t, m, d) — differentiable gather
+    y = jnp.einsum("tmd,td->tm", rows, h)  # recomputed, grads flow
+    log_z = jax.nn.logsumexp(y + log_w, axis=1)
+    y_t = jnp.einsum("td,td->t", embf[targets], h)
+    return log_z - y_t, log_z
+
+
+def head_sample(
+    emb: jax.Array,
+    h: jax.Array,
+    key: jax.Array,
+    cfg: HeadConfig,
+    index: Any = None,
+) -> SampleResult:
+    """Sample next-token ids for a batch of queries h: (T, d).
+
+    Returns SampleResult with (T,)-shaped fields. ``amortized``/``topk_only``
+    both use the top-k probe; ``exact`` uses dense Gumbel-max.
+    """
+    cfg = cfg.resolved()
+    h = h.astype(jnp.float32)
+    embf = emb.astype(jnp.float32)
+    t = h.shape[0]
+
+    if cfg.mode == "exact":
+        logits = h @ embf[: cfg.n].T
+        g = jax.random.gumbel(key, logits.shape, dtype=jnp.float32)
+        pert = logits + g
+        idx = jnp.argmax(pert, axis=-1).astype(jnp.int32)
+        mx = jnp.max(pert, axis=-1)
+        return SampleResult(
+            idx,
+            jnp.ones((t,), bool),
+            jnp.zeros((t,), jnp.int32),
+            mx,
+            jnp.full((t,), -jnp.inf),
+            jnp.zeros((t,), bool),
+        )
+
+    topk = _topk(cfg, embf, index, h)
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(t, dtype=jnp.uint32))
+    m_cap = int(cfg.l + 6 * math.sqrt(cfg.l) + 8)
+
+    def one(kk, tk, hh):
+        score_fn = lambda ids: embf[ids] @ hh
+        return sample_fixed_b(
+            kk,
+            TopK(tk[0], tk[1]),
+            cfg.n,
+            score_fn,
+            l=cfg.l,
+            m_cap=m_cap,
+            c=cfg.c,
+        )
+
+    return jax.vmap(one)(keys, (topk.ids, topk.values), h)

@@ -1,0 +1,69 @@
+"""Expectation estimation under the model distribution (paper Algorithm 4).
+
+``F = E_{i ~ softmax(y)}[f_i]`` is estimated with the same stratified S ∪ T
+sample as Algorithm 3:
+
+    Ĵ = Σ_S e^{y} f + (n-k)/l Σ_T e^{y} f,   F̂ = Ĵ / Ẑ.
+
+Additive error ``εC`` (``|f| <= C``) w.p. 1-δ under Thm 3.5's conditions
+``k²l >= 8 n² e^{2c} ln(4/δ)/ε²`` and ``kl >= (8/3) n e^c ln(2/δ)/ε²``.
+
+Note (used by the amortized LM head): when ``f_i = φ(x_i)`` — the feature
+rows themselves — F̂ equals ``∇_θ log Ẑ`` of Algorithm 3's estimator, so
+autodiff through :func:`repro.core.partition.partition_estimate`'s surrogate
+loss *is* Algorithm 4. The explicit form here serves generic ``f`` and the
+paper's learning benchmark.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.complement import sample_complement
+from repro.core.gumbel import TopK
+
+__all__ = ["ExpectationEstimate", "expectation_estimate", "stratified_softmax"]
+
+
+class ExpectationEstimate(NamedTuple):
+    value: jax.Array  # (...,) float32 — F̂
+    log_z: jax.Array  # () float32 — log Ẑ (shared byproduct)
+
+
+def stratified_softmax(
+    y_s: jax.Array, y_t: jax.Array, log_w_tail: float | jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Normalized weights p̂ over S ∪ T (sum to 1) and log Ẑ."""
+    y_all = jnp.concatenate([y_s, y_t + log_w_tail])
+    log_z = jax.nn.logsumexp(y_all)
+    return jnp.exp(y_all - log_z), log_z
+
+
+def expectation_estimate(
+    key: jax.Array,
+    topk: TopK,
+    n: int,
+    score_fn: Callable[[jax.Array], jax.Array],
+    f_fn: Callable[[jax.Array], jax.Array],
+    *,
+    l: int,
+) -> ExpectationEstimate:
+    """Algorithm 4.
+
+    Args:
+      score_fn: ids -> (m,) unnormalized log-probs.
+      f_fn: ids -> (m, ...) bounded function values.
+    """
+    k = topk.ids.shape[0]
+    s_sorted = jnp.sort(topk.ids).astype(jnp.int32)
+    tail_ids = sample_complement(key, n, s_sorted, l)
+    y_s = score_fn(topk.ids.astype(jnp.int32)).astype(jnp.float32)
+    y_t = score_fn(tail_ids).astype(jnp.float32)
+    log_w_tail = jnp.log((jnp.asarray(n, jnp.float32) - k) / l)
+    p_hat, log_z = stratified_softmax(y_s, y_t, log_w_tail)
+    ids_all = jnp.concatenate([topk.ids.astype(jnp.int32), tail_ids])
+    f_all = f_fn(ids_all).astype(jnp.float32)  # (k+l, ...)
+    value = jnp.tensordot(p_hat, f_all, axes=1)
+    return ExpectationEstimate(value, log_z)

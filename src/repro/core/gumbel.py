@@ -1,0 +1,175 @@
+"""Lazy-Gumbel sampling (paper Algorithms 1 & 2) and the TPU-native variant.
+
+Three samplers, all exact (the first two are the paper's; the third is our
+static-shape TPU adaptation):
+
+* :func:`sample_adaptive_b`  — Algorithm 1. Cutoff ``B = M - S_min - c`` is
+  data-dependent; the number of tail candidates ``m`` has ``E[m] <= n e^c/k``
+  (Thm 3.2) but heavy tails, so the static buffer can overflow (flagged).
+* :func:`sample_fixed_b`     — Algorithm 2. Fixed ``B`` s.t. the expected
+  number of tail exceedances is ``l``; exact w.p. ``1-δ`` for
+  ``k·l >= n e^c ln(1/δ)`` (Thm 3.3), and ``m < 2l`` w.h.p.
+* both use the **Poissonized tail** construction (below) instead of
+  Binomial + without-replacement subset sampling, which has no good
+  static-shape implementation.
+
+Poissonized lazy Gumbels
+------------------------
+A Gumbel variable is the max of a Poisson process with intensity
+``e^{-g} dg`` on the real line (``P(max <= x) = exp(-∫_x^∞ e^-g dg)
+= exp(-e^{-x})``, the Gumbel CDF). Attach an independent such process to
+each of the ``N = n-k`` tail points and keep only atoms above the cutoff B:
+the superposition is a Poisson process with ``K ~ Poisson(N e^{-B})`` atoms,
+positions iid uniform over tail points **with replacement** (collisions are
+handled for free: the per-point max over its atoms reproduces the truncated
+Gumbel law exactly), and heights iid ``B + Exp(1)``. Per tail point i,
+``P(no atom above x) = exp(-e^{-x})`` — exactly the Gumbel CDF — jointly
+independent across points, so the construction is *distributionally
+identical* to sampling a fresh Gumbel per tail point and discarding those
+below B. This removes the without-replacement subset machinery of Alg 2
+while keeping exactness. (Documented in DESIGN.md §3.)
+
+Exactness certificate: every non-materialized point has unnormalized
+log-prob ``y_i <= S_min + c`` (approximate-top-k gap ``c``, Def 3.1) and
+Gumbel ``<= B``, so whenever the materialized winner's perturbed value is
+``>= S_min + c + B`` the sample is *provably* exact; the sampler returns
+this as an ``ok`` flag. Under Alg 1's cutoff the certificate holds by
+construction (modulo buffer overflow); under Alg 2 it fails w.p. <= δ.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.complement import sample_complement
+
+__all__ = [
+    "TopK",
+    "SampleResult",
+    "sample_adaptive_b",
+    "sample_fixed_b",
+    "gumbel_max_dense",
+    "default_kl",
+]
+
+
+class TopK(NamedTuple):
+    """Top-k set S: ids and their unnormalized log-probs (any order)."""
+
+    ids: jax.Array  # (k,) int32
+    values: jax.Array  # (k,) float32
+
+
+class SampleResult(NamedTuple):
+    index: jax.Array  # () int32 — the sampled element of [0, n)
+    ok: jax.Array  # () bool — True => provably exact (given MIPS gap <= c)
+    m: jax.Array  # () int32 — tail candidates materialized
+    max_val: jax.Array  # () float32 — winning perturbed value
+    bound: jax.Array  # () float32 — S_min + c + B: non-materialized points
+    #                     are provably below this (distributed combining
+    #                     re-checks it against the *global* winner)
+    overflow: jax.Array  # () bool — static tail buffer overflowed
+
+
+def default_kl(n: int, delta: float = 1e-4, c: float = 0.0) -> int:
+    """k = l satisfying Thm 3.3's ``k l >= n e^c ln(1/δ)``, rounded up to 64."""
+    kl = math.sqrt(n * math.exp(c) * math.log(1.0 / delta))
+    return max(64, int(math.ceil(kl / 64.0)) * 64)
+
+
+def gumbel_max_dense(key: jax.Array, y: jax.Array) -> jax.Array:
+    """Brute-force Gumbel-max oracle: argmax_i y_i + G_i (linear time)."""
+    g = jax.random.gumbel(key, y.shape, dtype=y.dtype)
+    return jnp.argmax(y + g).astype(jnp.int32)
+
+
+def _finish(
+    key: jax.Array,
+    topk: TopK,
+    n: int,
+    score_fn: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    lam: jax.Array,
+    m_cap: int,
+    c: float,
+    pert_s: jax.Array,
+) -> SampleResult:
+    """Shared tail materialization + argmax given cutoff b and atom rate lam."""
+    k = topk.ids.shape[0]
+    k_m, k_pos, k_h = jax.random.split(key, 3)
+    m = jax.random.poisson(k_m, lam, dtype=jnp.int32)
+    overflow = m > m_cap
+    m_used = jnp.minimum(m, m_cap)
+    s_sorted = jnp.sort(topk.ids).astype(jnp.int32)
+    pos = sample_complement(k_pos, n, s_sorted, m_cap)  # (m_cap,)
+    heights = b + jax.random.exponential(k_h, (m_cap,), dtype=jnp.float32)
+    y_tail = score_fn(pos).astype(jnp.float32)  # (m_cap,)
+    live = jnp.arange(m_cap, dtype=jnp.int32) < m_used
+    pert_t = jnp.where(live, y_tail + heights, -jnp.inf)
+
+    pert = jnp.concatenate([pert_s, pert_t])
+    ids = jnp.concatenate([topk.ids.astype(jnp.int32), pos])
+    best = jnp.argmax(pert)
+    max_val = pert[best]
+    s_min = jnp.min(topk.values.astype(jnp.float32))
+    bound = s_min + c + b
+    ok = (max_val >= bound) & ~overflow
+    return SampleResult(ids[best], ok, m_used, max_val, bound, overflow)
+
+
+def sample_adaptive_b(
+    key: jax.Array,
+    topk: TopK,
+    n: int,
+    score_fn: Callable[[jax.Array], jax.Array],
+    *,
+    m_cap: int,
+    c: float = 0.0,
+) -> SampleResult:
+    """Algorithm 1 (adaptive cutoff). Exact whenever ``ok`` (no overflow).
+
+    ``E[m] <= n e^c / k`` (Thm 3.2); choose ``m_cap`` a small multiple of
+    ``n/k`` — overflow probability decays like ``(n e^c/k)/m_cap``.
+
+    Args:
+      score_fn: maps an int32 id array to unnormalized log-probs ``y``.
+    """
+    k_s, k_t = jax.random.split(key)
+    k = topk.ids.shape[0]
+    g_s = jax.random.gumbel(k_s, (k,), dtype=jnp.float32)
+    pert_s = topk.values.astype(jnp.float32) + g_s
+    m_big = jnp.max(pert_s)
+    s_min = jnp.min(topk.values.astype(jnp.float32))
+    b = m_big - s_min - c  # paper's B = M - S_min - c
+    lam = (jnp.asarray(n, jnp.float32) - k) * jnp.exp(-b)  # tail atom rate
+    return _finish(k_t, topk, n, score_fn, b, lam, m_cap, c, pert_s)
+
+
+def sample_fixed_b(
+    key: jax.Array,
+    topk: TopK,
+    n: int,
+    score_fn: Callable[[jax.Array], jax.Array],
+    *,
+    l: int,
+    m_cap: int | None = None,
+    c: float = 0.0,
+) -> SampleResult:
+    """Algorithm 2 (fixed cutoff): exact w.p. 1-δ for ``k l >= n e^c ln(1/δ)``.
+
+    ``B = ln((n-k)/l)`` so the tail atom count is Poisson(l); the static
+    buffer ``m_cap`` defaults to ``l + 6 sqrt(l) + 8`` (overflow < 1e-8).
+    """
+    k = topk.ids.shape[0]
+    if m_cap is None:
+        m_cap = int(l + 6 * math.sqrt(l) + 8)
+    k_s, k_t = jax.random.split(key)
+    g_s = jax.random.gumbel(k_s, (k,), dtype=jnp.float32)
+    pert_s = topk.values.astype(jnp.float32) + g_s
+    # n may be a traced per-shard scalar (distributed head) — use jnp ops
+    b = jnp.log((jnp.asarray(n, jnp.float32) - k) / l)
+    lam = jnp.float32(l)
+    return _finish(k_t, topk, n, score_fn, b, lam, m_cap, c, pert_s)

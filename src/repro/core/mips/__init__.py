@@ -1,0 +1,31 @@
+"""MIPS indexes: exact oracle, IVF (production), SRP-LSH (theory reference).
+
+Uniform interface::
+
+    state = mips.build(name, db, **cfg)
+    topk  = mips.topk_batch(name, state, q, k, **query_cfg)  # TopK[(b,k)]
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core.gumbel import TopK
+from repro.core.mips import exact, ivf, lsh
+
+_REGISTRY = {"exact": exact, "ivf": ivf, "lsh": lsh}
+
+__all__ = ["build", "topk", "topk_batch", "exact", "ivf", "lsh", "TopK"]
+
+
+def build(name: str, db: jax.Array, **cfg: Any):
+    return _REGISTRY[name].build(db, **cfg)
+
+
+def topk(name: str, state, q: jax.Array, k: int, **cfg: Any) -> TopK:
+    return _REGISTRY[name].topk(state, q, k, **cfg)
+
+
+def topk_batch(name: str, state, q: jax.Array, k: int, **cfg: Any) -> TopK:
+    return _REGISTRY[name].topk_batch(state, q, k, **cfg)

@@ -1,0 +1,38 @@
+"""Brute-force MIPS oracle: exact top-k by dense scoring.
+
+O(n·d) per query — the paper's baseline, and the correctness oracle for the
+approximate indexes. Also the default head path in the distributed dry-run
+(each TP shard scores its local vocab slice; see models/head.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gumbel import TopK
+
+__all__ = ["ExactState", "build", "topk", "topk_batch"]
+
+
+class ExactState(NamedTuple):
+    db: jax.Array  # (n, d)
+
+
+def build(db: jax.Array) -> ExactState:
+    return ExactState(db=db)
+
+
+def topk(state: ExactState, q: jax.Array, k: int) -> TopK:
+    """q: (d,) -> exact TopK."""
+    scores = state.db @ q  # (n,)
+    vals, ids = jax.lax.top_k(scores, k)
+    return TopK(ids.astype(jnp.int32), vals.astype(jnp.float32))
+
+
+def topk_batch(state: ExactState, q: jax.Array, k: int) -> TopK:
+    """q: (b, d) -> TopK with leading batch dim."""
+    scores = q @ state.db.T  # (b, n)
+    vals, ids = jax.lax.top_k(scores, k)
+    return TopK(ids.astype(jnp.int32), vals.astype(jnp.float32))

@@ -1,0 +1,153 @@
+"""IVF (k-means) MIPS index — the production index, per the paper's own
+experiments (§4.1.1, following Douze et al. 2016).
+
+TPU adaptation (DESIGN.md §3): clusters are *padded to a fixed capacity* so
+the probe is two dense MXU matmuls — ``q @ centroidsᵀ`` then a gather+score
+over the ``n_probe`` selected clusters — with fully static shapes. Rows that
+overflow their cluster's capacity spill into an always-scanned overflow
+buffer, so coverage of the database is exact (approximation comes only from
+probing a subset of clusters, exactly as in FAISS-style IVF).
+
+The build step is host-side (numpy-flavored jnp, python loop over Lloyd
+iterations): it runs rarely (preprocessing / periodic refresh during
+training) and its output is a static pytree the jitted query path closes
+over. The gather+score hot loop has a Pallas kernel
+(:mod:`repro.kernels.ivf_gather_score`) selected via ``use_kernel``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gumbel import TopK
+
+__all__ = ["IVFState", "build", "topk", "topk_batch"]
+
+
+class IVFState(NamedTuple):
+    centroids: jax.Array  # (n_c, d) f32
+    member_ids: jax.Array  # (n_c, cap) i32, -1 padded
+    member_vecs: jax.Array  # (n_c, cap, d) — gathered copy, 0 padded
+    overflow_ids: jax.Array  # (o_cap,) i32, -1 padded
+    overflow_vecs: jax.Array  # (o_cap, d)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.member_ids.shape[1]
+
+
+def _kmeans(db: np.ndarray, n_c: int, iters: int, seed: int) -> np.ndarray:
+    """Lloyd's algorithm, host-side. Returns (n_c, d) centroids."""
+    rng = np.random.default_rng(seed)
+    n = db.shape[0]
+    cent = db[rng.choice(n, size=n_c, replace=False)].astype(np.float32)
+    db32 = db.astype(np.float32)
+    for _ in range(iters):
+        # dist^2 = |x|^2 - 2 x·c + |c|^2 ; argmin over c (|x|^2 constant)
+        sq_c = (cent * cent).sum(-1)
+        assign = np.argmin(sq_c[None, :] - 2.0 * (db32 @ cent.T), axis=1)
+        # vectorized per-cluster mean via bincount
+        counts = np.bincount(assign, minlength=n_c).astype(np.float32)
+        sums = np.zeros_like(cent)
+        np.add.at(sums, assign, db32)
+        nonempty = counts > 0
+        cent[nonempty] = sums[nonempty] / counts[nonempty, None]
+        # empty clusters keep their previous centroid (harmless)
+    return cent
+
+
+def build(
+    db: jax.Array,
+    *,
+    n_clusters: int | None = None,
+    cap_factor: float = 3.0,
+    kmeans_iters: int = 10,
+    seed: int = 0,
+) -> IVFState:
+    """Build the padded IVF index. Host-side; returns device arrays."""
+    db_np = np.asarray(db, dtype=np.float32)
+    n, d = db_np.shape
+    if n_clusters is None:
+        n_clusters = max(4, int(math.sqrt(n)))
+    n_c = min(n_clusters, n)
+    cent = _kmeans(db_np, n_c, kmeans_iters, seed)
+    sq_c = (cent * cent).sum(-1)
+    assign = np.argmin(sq_c[None, :] - 2.0 * (db_np @ cent.T), axis=1)
+
+    cap = max(8, int(math.ceil(cap_factor * n / n_c / 8.0)) * 8)
+    member_ids = np.full((n_c, cap), -1, dtype=np.int32)
+    overflow: list[int] = []
+    counts = np.zeros(n_c, dtype=np.int64)
+    for i in range(n):
+        cl = assign[i]
+        if counts[cl] < cap:
+            member_ids[cl, counts[cl]] = i
+            counts[cl] += 1
+        else:
+            overflow.append(i)
+    o_cap = max(8, int(math.ceil(len(overflow) / 8.0)) * 8)
+    overflow_ids = np.full((o_cap,), -1, dtype=np.int32)
+    if overflow:
+        overflow_ids[: len(overflow)] = np.asarray(overflow, dtype=np.int32)
+
+    member_vecs = np.where(
+        (member_ids >= 0)[..., None], db_np[np.maximum(member_ids, 0)], 0.0
+    )
+    overflow_vecs = np.where(
+        (overflow_ids >= 0)[..., None], db_np[np.maximum(overflow_ids, 0)], 0.0
+    )
+    return IVFState(
+        centroids=jnp.asarray(cent),
+        member_ids=jnp.asarray(member_ids),
+        member_vecs=jnp.asarray(member_vecs, dtype=db.dtype),
+        overflow_ids=jnp.asarray(overflow_ids),
+        overflow_vecs=jnp.asarray(overflow_vecs, dtype=db.dtype),
+    )
+
+
+def topk(
+    state: IVFState, q: jax.Array, k: int, *, n_probe: int = 8, use_kernel: bool = False
+) -> TopK:
+    """Approximate top-k for a single query (d,)."""
+    res = topk_batch(state, q[None], k, n_probe=n_probe, use_kernel=use_kernel)
+    return TopK(res.ids[0], res.values[0])
+
+
+def topk_batch(
+    state: IVFState, q: jax.Array, k: int, *, n_probe: int = 8, use_kernel: bool = False
+) -> TopK:
+    """Approximate top-k for a query batch (b, d) -> TopK[(b,k), (b,k)]."""
+    b, d = q.shape
+    qf = q.astype(jnp.float32)
+    c_scores = qf @ state.centroids.T  # (b, n_c)
+    _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        scores, ids = kops.ivf_gather_score(
+            state.member_vecs, state.member_ids, probe, qf
+        )  # (b, n_probe*cap)
+    else:
+        vecs = state.member_vecs[probe]  # (b, n_probe, cap, d)
+        ids = state.member_ids[probe].reshape(b, -1)  # (b, n_probe*cap)
+        scores = jnp.einsum("bpcd,bd->bpc", vecs.astype(jnp.float32), qf)
+        scores = scores.reshape(b, -1)
+
+    o_scores = state.overflow_vecs.astype(jnp.float32) @ qf.T  # (o_cap, b)
+    scores = jnp.concatenate([scores, o_scores.T], axis=1)
+    ids = jnp.concatenate(
+        [ids, jnp.broadcast_to(state.overflow_ids, (b,) + state.overflow_ids.shape)],
+        axis=1,
+    )
+    scores = jnp.where(ids >= 0, scores, -jnp.inf)
+    vals, pos = jax.lax.top_k(scores, k)
+    return TopK(jnp.take_along_axis(ids, pos, axis=1), vals)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: flash decode attention (one query token vs KV cache).
+
+Decode-time attention is memory-bound: one query attends over an S-long KV
+cache. This kernel streams the cache in ``(s_blk, hd)`` tiles and keeps a
+flash-style online softmax (running max / denominator / value accumulator)
+in VMEM, so the (S,) score vector never materializes in HBM. GQA is handled
+by mapping each query head to its KV group in the BlockSpec index_map.
+
+Per-sequence cache lengths arrive via scalar prefetch and mask the tail
+tile, supporting ragged batches in serving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode"]
+
+_NEG = -1e30  # python float: jnp constants would be captured as kernel consts
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_run, s_run, acc, *, scale,
+            s_blk):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_run[0] = _NEG
+        s_run[0] = 0.0
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (s_blk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (s_blk, hd)
+
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+    pos = j * s_blk + jax.lax.iota(jnp.int32, s_blk)
+    scores = jnp.where(pos < len_ref[b], scores, _NEG)
+
+    m_old = m_run[0]
+    m_new = jnp.maximum(m_old, jnp.max(scores))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(scores - m_new)  # (s_blk,)
+    m_run[0] = m_new
+    s_run[0] = s_run[0] * corr + jnp.sum(p)
+    acc[...] = acc[...] * corr + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[0, 0, :] = (acc[...] / s_run[0])[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("s_block", "interpret")
+)
+def flash_decode(
+    q: jax.Array,  # (B, Hq, hd) — one query token per sequence
+    k_cache: jax.Array,  # (B, S, Hkv, hd)
+    v_cache: jax.Array,  # (B, S, Hkv, hd)
+    lengths: jax.Array,  # (B,) int32 valid cache lengths
+    *,
+    s_block: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns attention output (B, Hq, hd), f32."""
+    b, hq, hd = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv  # GQA group size
+    s_blk = min(s_block, s)
+    assert s % s_blk == 0, (s, s_blk)
+    scale = 1.0 / (hd**0.5)
+    grid = (b, hq, s // s_blk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, s_blk=s_blk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda i, h, j, lens: (i, h, 0)),
+                pl.BlockSpec(
+                    (1, s_blk, 1, hd), lambda i, h, j, lens: (i, j, h // g, 0)
+                ),
+                pl.BlockSpec(
+                    (1, s_blk, 1, hd), lambda i, h, j, lens: (i, j, h // g, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd), lambda i, h, j, lens: (i, h, 0)),
+            scratch_shapes=[
+                pltpu.SMEM((1,), jnp.float32),
+                pltpu.SMEM((1,), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, hd), jnp.float32),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)
+    return out

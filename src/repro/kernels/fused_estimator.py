@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused stratified estimator (Algorithms 3 + 4).
+
+Given per-token candidate ids (S ∪ T), strata log-weights, and the query
+hidden state, computes in ONE streaming pass over candidates:
+
+    log Ẑ  = log Σ_i w_i e^{y_i}            (Algorithm 3)
+    F̂      = Σ_i (w_i e^{y_i}/Ẑ) · E_i      (Algorithm 4 with f = φ)
+
+using a flash-attention-style online-softmax recurrence (running max M,
+running sum s, running weighted row-sum v). The embedding rows are fetched
+row-at-a-time straight into VMEM via **scalar-prefetched candidate ids in
+the BlockSpec index_map** — the (tokens, k+l, d) gathered candidate tensor
+never exists in HBM, which is the memory bottleneck of the XLA path.
+
+F̂ here is exactly ∇_h log Ẑ, i.e. the backward pass of the amortized head
+w.r.t. the hidden state — so this kernel serves both inference-time
+partition estimation and the learning path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_estimator"]
+
+_NEG = -1e30  # python float: jnp constants would be captured as kernel consts
+
+
+def _kernel(ids_ref, emb_ref, h_ref, logw_ref, logz_ref, expv_ref,
+            m_run, s_run, v_run):
+    j = pl.program_id(1)
+    nm = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_run[0] = _NEG
+        s_run[0] = 0.0
+        v_run[...] = jnp.zeros_like(v_run)
+
+    row = emb_ref[0].astype(jnp.float32)  # (d,)
+    h = h_ref[0].astype(jnp.float32)  # (d,)
+    y = jnp.dot(row, h, preferred_element_type=jnp.float32) + logw_ref[0, 0]
+
+    m_old = m_run[0]
+    m_new = jnp.maximum(m_old, y)
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(y - m_new)
+    m_run[0] = m_new
+    s_run[0] = s_run[0] * corr + p
+    v_run[...] = v_run[...] * corr + p * row[None, :]
+
+    @pl.when(j == nm - 1)
+    def _finish():
+        s = s_run[0]
+        logz_ref[0, 0] = m_run[0] + jnp.log(s)
+        expv_ref[0, :] = (v_run[...] / s)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_estimator(
+    emb: jax.Array,  # (n, d)
+    ids: jax.Array,  # (t, m) int32 candidate ids (S ∪ T)
+    h: jax.Array,  # (t, d) queries
+    log_w: jax.Array,  # (t, m) strata log-weights (0 for S, log((n-k)/l) for T)
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (log_z (t,), expectation (t, d))."""
+    n, d = emb.shape
+    t, m = ids.shape
+    grid = (t, m)
+    log_z, expv = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, j, ids: (ids[i, j], 0)),
+                pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i, j, ids: (i, j)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1), lambda i, j, ids: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.SMEM((1,), jnp.float32),
+                pltpu.SMEM((1,), jnp.float32),
+                pltpu.VMEM((1, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids.astype(jnp.int32), emb, h, log_w.astype(jnp.float32))
+    return log_z[:, 0], expv

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: IVF probed-cluster gather + score.
+
+The IVF query hot loop scores every member of the ``n_probe`` probed
+clusters against the query. The XLA path materializes the gathered
+``(b, n_probe, cap, d)`` cluster copy in HBM; this kernel instead uses the
+**scalar-prefetched probe ids to drive the BlockSpec index_map**, so each
+grid step DMAs exactly one ``(cap, d_blk)`` cluster tile HBM→VMEM and feeds
+the MXU — the gather never exists as an HBM intermediate.
+
+Grid: ``(b, n_probe, d_blocks)`` — the d axis is innermost and accumulated
+into the f32 output block (init at d_blk==0), so arbitrarily large feature
+dims fit in VMEM with a fixed ``(cap, d_blk)`` working set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ivf_gather_score"]
+
+
+def _kernel(probe_ref, member_ref, q_ref, out_ref):
+    d_idx = pl.program_id(2)
+
+    @pl.when(d_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    members = member_ref[0]  # (cap, d_blk)
+    q = q_ref[0]  # (d_blk,)
+    out_ref[0, :] += jnp.dot(
+        members.astype(jnp.float32), q.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
+def ivf_gather_score(
+    member_vecs: jax.Array,  # (n_c, cap, d)
+    probe: jax.Array,  # (b, n_probe) int32 cluster ids
+    q: jax.Array,  # (b, d)
+    *,
+    d_block: int = 512,
+    interpret: bool = True,  # CPU container: interpret; False on real TPU
+) -> jax.Array:
+    """Returns scores (b, n_probe, cap) = member_vecs[probe] · q."""
+    n_c, cap, d = member_vecs.shape
+    b, n_probe = probe.shape
+    d_blk = min(d_block, d)
+    assert d % d_blk == 0, (d, d_blk)
+    grid = (b, n_probe, d // d_blk)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # cluster tile chosen by the prefetched probe ids
+                pl.BlockSpec(
+                    (1, cap, d_blk), lambda i, j, k, probe: (probe[i, j], 0, k)
+                ),
+                pl.BlockSpec((1, d_blk), lambda i, j, k, probe: (i, k)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, cap), lambda i, j, k, probe: (i, j, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_probe, cap), jnp.float32),
+        interpret=interpret,
+    )(probe.astype(jnp.int32), member_vecs, q)
+    return out

@@ -1,0 +1,43 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On this CPU container every kernel runs in ``interpret=True`` mode (the
+kernel body executes in Python on CPU — correctness only). On a real TPU
+set ``repro.kernels.ops.INTERPRET = False`` (done by launch scripts when
+``jax.default_backend() == 'tpu'``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.fused_estimator import fused_estimator as _fused_estimator
+from repro.kernels.ivf_gather_score import ivf_gather_score as _ivf_gather_score
+
+INTERPRET = jax.default_backend() != "tpu"
+
+__all__ = ["ivf_gather_score", "fused_estimator", "flash_decode", "INTERPRET"]
+
+
+def ivf_gather_score(
+    member_vecs: jax.Array,
+    member_ids: jax.Array,
+    probe: jax.Array,
+    q: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (scores (b, np*cap), ids (b, np*cap)) for the IVF probe."""
+    b = probe.shape[0]
+    scores = _ivf_gather_score(member_vecs, probe, q, interpret=INTERPRET)
+    ids = member_ids[probe].reshape(b, -1)  # tiny int32 gather: XLA
+    return scores.reshape(b, -1), ids
+
+
+def fused_estimator(emb, ids, h, log_w):
+    return _fused_estimator(emb, ids, h, log_w, interpret=INTERPRET)
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, s_block: int = 512):
+    return _flash_decode(
+        q, k_cache, v_cache, lengths, s_block=s_block, interpret=INTERPRET
+    )

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (tested with assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ivf_gather_score_ref", "fused_estimator_ref", "flash_decode_ref"]
+
+
+def ivf_gather_score_ref(
+    member_vecs: jax.Array, probe: jax.Array, q: jax.Array
+) -> jax.Array:
+    """(n_c,cap,d), (b,np), (b,d) -> (b, np, cap) scores."""
+    gathered = member_vecs[probe]  # (b, np, cap, d)
+    return jnp.einsum(
+        "bpcd,bd->bpc", gathered.astype(jnp.float32), q.astype(jnp.float32)
+    )
+
+
+def fused_estimator_ref(
+    emb: jax.Array, ids: jax.Array, h: jax.Array, log_w: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Stratified logsumexp + weighted expectation. -> (log_z (t,), (t, d))."""
+    rows = emb[ids].astype(jnp.float32)  # (t, m, d)
+    y = jnp.einsum("tmd,td->tm", rows, h.astype(jnp.float32)) + log_w
+    log_z = jax.nn.logsumexp(y, axis=1)
+    p = jnp.exp(y - log_z[:, None])
+    expv = jnp.einsum("tm,tmd->td", p, rows)
+    return log_z, expv
+
+
+def flash_decode_ref(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, lengths: jax.Array
+) -> jax.Array:
+    """(B,Hq,hd), (B,S,Hkv,hd) x2, (B,) -> (B,Hq,hd)."""
+    b, hq, hd = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    # expand KV heads to query heads
+    kf = jnp.repeat(kf, g, axis=2)  # (B, S, Hq, hd)
+    vf = jnp.repeat(vf, g, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", qf, kf) / (hd**0.5)
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vf)

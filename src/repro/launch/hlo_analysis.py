@@ -1,0 +1,367 @@
+"""Loop-aware HLO cost model (FLOPs, HBM bytes, collective bytes).
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — the body
+of a ``while`` (every ``lax.scan``: layer stacks, microbatch accumulation,
+token-chunk maps) is counted a single time regardless of trip count, which
+undercounts a 56-layer scanned trunk by ~56x. This module parses the
+post-SPMD optimized HLO text and aggregates:
+
+* FLOPs: every ``dot`` (2·|result|·contraction, from the printed
+  dot_dimension_numbers) and ``convolution`` (approximated likewise),
+  including dots *inside* fusions,
+* HBM bytes: operand + result bytes of every top-level instruction
+  (fusion interiors stay in registers/VMEM, so only fusion boundaries
+  count — a tighter HBM model than XLA's op-level "bytes accessed"),
+* collective bytes: operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (from result shape and
+  replica-group size),
+
+each scaled by the enclosing ``while`` trip counts (parsed from the loop
+condition's ``compare(%iv, constant)``). All shapes in the partitioned
+module are per-device, so results are per-device quantities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][0-9a-z]*)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+# type group is lazy `.*?`: big tuple types contain /*index=N*/ comments
+# (with '='); opcode must be a lowercase word directly before '(' (layout
+# annotations like T(8,128) on TPU stay uppercase)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\("
+)
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id",
+}
+
+
+def _shape_info(type_str: str) -> tuple[float, list[list[int]]]:
+    """Returns (total bytes, list of dims-lists) for a (tuple) type string."""
+    total = 0.0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        n = 1
+        for d in dl:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(dl)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list = dataclasses.field(default_factory=list)
+    types: dict = dataclasses.field(default_factory=dict)  # %name -> type str
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    dot_count: int = 0
+    while_trips: list = dataclasses.field(default_factory=list)
+    # per-site detail for hillclimbing: (comp, op/kind, bytes, mult)
+    coll_sites: list = dataclasses.field(default_factory=list)
+    hbm_sites: dict = dataclasses.field(default_factory=dict)  # op -> bytes
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + int(v * mult)
+        self.dot_count += int(other.dot_count * mult)
+        for comp, kind, b, m in other.coll_sites:
+            self.coll_sites.append((comp, kind, b, m * mult))
+        for k, v in other.hbm_sites.items():
+            self.hbm_sites[k] = self.hbm_sites.get(k, 0.0) + v * mult
+
+    def top_collectives(self, n: int = 10) -> list:
+        return sorted(
+            self.coll_sites, key=lambda s: -(s[2] * s[3])
+        )[:n]
+
+    def top_hbm(self, n: int = 10) -> list:
+        return sorted(self.hbm_sites.items(), key=lambda kv: -kv[1])[:n]
+
+    def _hbm(self, op: str, b: float) -> None:
+        self.hbm_bytes += b
+        self.hbm_sites[op] = self.hbm_sites.get(op, 0.0) + b
+
+
+def _parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = _Comp(m.group(1))
+                # parameter types from the signature (1-level nested tuples)
+                for pm in re.finditer(
+                    r"([\w.\-]+):\s*"
+                    r"((?:\((?:[^()]|\([^()]*\))*\))"
+                    r"|(?:[a-z][0-9a-z]*\[[\d,]*\]\S*))",
+                    m.group(2),
+                ):
+                    cur.types["param:" + pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            name, rtype, opcode = im.groups()
+            cur.types[name] = rtype
+            cur.instrs.append(_Instr(name, opcode, rtype, line))
+    return comps
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(while_line: str, cond: Optional[_Comp]) -> float:
+    """Trip count: XLA's known_trip_count backend_config, else the loop
+    condition's `compare(.., constant(N))` bound."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return max(1, int(m.group(1)))
+    if cond is not None:
+        consts = []
+        for ins in cond.instrs:
+            cm = re.search(r"constant\((\d+)\)", ins.line)
+            if cm:
+                consts.append(int(cm.group(1)))
+        if consts:
+            return max(1, max(consts))
+    return 1.0
+
+
+def _dot_flops(ins: _Instr, comp: _Comp) -> float:
+    rbytes, rshapes = _shape_info(ins.result_type)
+    if not rshapes:
+        return 0.0
+    r_elems = 1
+    for d in rshapes[0]:
+        r_elems *= d
+    # contraction size from lhs operand shape + contracting dims
+    ops = _OPERANDS_RE.findall(ins.line.split("(", 1)[1])
+    k = 1
+    if ops:
+        lhs_t = comp.types.get(ops[0]) or comp.types.get("param:" + ops[0])
+        if lhs_t:
+            _, lshapes = _shape_info(lhs_t)
+            if lshapes:
+                cm = _CONTRACT_RE.search(ins.line)
+                if cm and cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lshapes[0]):
+                            k *= lshapes[0][ci]
+    return 2.0 * r_elems * k
+
+
+def _coll_operand_bytes(ins: _Instr) -> float:
+    rbytes, _ = _shape_info(ins.result_type)
+    gs = 1
+    m = _GROUPS_PAIR_RE.search(ins.line)
+    if m:
+        gs = int(m.group(2))
+    else:
+        m = _GROUPS_SET_RE.search(ins.line)
+        if m:
+            gs = len(m.group(1).split(","))
+    kind = ins.opcode.replace("-start", "")
+    if kind == "all-gather":
+        return rbytes / max(gs, 1)
+    if kind == "reduce-scatter":
+        return rbytes * gs
+    return rbytes
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+_SLICED_MEMO: dict[int, dict[int, float]] = {}
+
+
+def _sliced_param_bytes(body: _Comp) -> dict[int, float]:
+    """Fusion parameters consumed ONLY via (dynamic-)slice/gather read just
+    the slice bytes from HBM. Returns {param_index: sliced bytes}."""
+    key = id(body)
+    if key in _SLICED_MEMO:
+        return _SLICED_MEMO[key]
+    pname_by_idx: dict[int, str] = {}
+    for ins in body.instrs:
+        if ins.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", ins.line)
+            if m:
+                pname_by_idx[int(m.group(1))] = ins.name
+    out: dict[int, float] = {}
+    for idx, pname in pname_by_idx.items():
+        pat = re.compile(r"%" + re.escape(pname) + r"\b")
+        uses = [
+            i for i in body.instrs
+            if i.name != pname and pat.search(i.line.split("=", 1)[-1])
+        ]
+        if uses and all(u.opcode in _SLICE_OPS for u in uses):
+            out[idx] = sum(_shape_info(u.result_type)[0] for u in uses)
+    _SLICED_MEMO[key] = out
+    return out
+
+
+def _analyze_comp(
+    comp: _Comp, comps: dict[str, _Comp], memo: dict[str, HloCost]
+) -> HloCost:
+    if comp.name in memo:
+        return memo[comp.name]
+    cost = HloCost()
+    memo[comp.name] = cost  # breaks cycles (shouldn't occur)
+    for ins in comp.instrs:
+        op = ins.opcode
+        callees = _CALL_RE.findall(ins.line)
+        if op == "while":
+            body = cond = None
+            bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            if bm and bm.group(1) in comps:
+                body = comps[bm.group(1)]
+            if cm and cm.group(1) in comps:
+                cond = comps[cm.group(1)]
+            trips = _trip_count(ins.line, cond)
+            cost.while_trips.append(trips)
+            if body:
+                cost.add(_analyze_comp(body, comps, memo), trips)
+            continue
+        if op == "fusion":
+            body = None
+            for cn in callees:
+                if cn in comps:
+                    body = comps[cn]
+                    sub = _analyze_comp(comps[cn], comps, memo)
+                    # only flops escape a fusion; interior bytes are on-chip
+                    cost.flops += sub.flops
+                    cost.dot_count += sub.dot_count
+            rb, _ = _shape_info(ins.result_type)
+            operands = _OPERANDS_RE.findall(ins.line.split("(", 1)[1])
+            sliced = _sliced_param_bytes(body) if body else {}
+            ob = 0.0
+            for pos, o in enumerate(operands):
+                t = comp.types.get(o) or comp.types.get("param:" + o)
+                if not t or o in ("", comp.name):
+                    continue
+                b, _ = _shape_info(t)
+                # a param consumed only via (dynamic-)slice/gather inside
+                # the fusion reads just the slices, not the whole operand
+                ob += min(b, sliced.get(pos, b))
+            cost._hbm("fusion:" + comp.name[:48], rb + ob)
+            continue
+        if op in ("conditional", "call", "custom-call", "async-start"):
+            for cn in callees:
+                if cn in comps:
+                    cost.add(_analyze_comp(comps[cn], comps, memo), 1.0)
+        if op in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            b = _coll_operand_bytes(ins)
+            kind = op.replace("-start", "")
+            cost.coll_bytes += b
+            cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0.0) + b
+            cost.coll_counts[kind] = cost.coll_counts.get(kind, 0) + 1
+            cost.coll_sites.append((comp.name, kind, b, 1.0))
+            cost._hbm("collective", 2 * b)  # collectives read+write HBM
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(ins, comp)
+            cost.dot_count += 1
+        elif op == "convolution":
+            cost.flops += 2.0 * _shape_info(ins.result_type)[0]  # rough
+        if op not in _NO_TRAFFIC:
+            rb, _ = _shape_info(ins.result_type)
+            # sliced/gathered reads touch only the slice, not the operand
+            if op in ("dynamic-slice", "gather", "slice"):
+                cost._hbm(op, 2 * rb)
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                # traffic ~ 2x the update operand (second/third arg)
+                ops_ = _OPERANDS_RE.findall(ins.line.split("(", 1)[1])
+                ui = 1 if op == "dynamic-update-slice" else 2
+                ub = rb
+                if len(ops_) > ui:
+                    t = comp.types.get(ops_[ui]) or comp.types.get(
+                        "param:" + ops_[ui]
+                    )
+                    if t:
+                        ub, _ = _shape_info(t)
+                cost._hbm(op, 2 * ub)
+                continue
+            if op in ("broadcast", "iota", "reshape"):
+                cost._hbm(op, rb)
+                continue
+            ob = 0.0
+            for o in _OPERANDS_RE.findall(ins.line.split("(", 1)[1]):
+                t = comp.types.get(o) or comp.types.get("param:" + o)
+                if t:
+                    b, _ = _shape_info(t)
+                    ob += b
+            cost._hbm(op, rb + ob)
+    return cost
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    memo: dict[str, HloCost] = {}
+    return _analyze_comp(comps[entry], comps, memo)

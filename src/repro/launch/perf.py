@@ -1,0 +1,116 @@
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run one cell with knob overrides and print the
+roofline delta vs baseline.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch stablelm-3b \
+      --shape prefill_32k --q-block 2048 --kv-block 2048
+
+Knobs: attention tile sizes, grad-accum factor, MoE sharding (tp|ep),
+head mode (exact|topk_only|amortized), head score dtype, head chunk.
+Results append to perf_log.jsonl for the EXPERIMENTS.md iteration table.
+"""
+import argparse
+import json
+
+from repro.configs import get
+from repro.launch import mesh as meshlib
+from repro.launch import steps
+from repro.launch.dryrun import run_cell
+from repro.models import attention
+
+
+def run_with(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    accum: int = 0,
+    q_block: int = 0,
+    kv_block: int = 0,
+    moe: str = "",
+    head_mode: str = "",
+    score_dtype: str = "",
+    scores_dtype: str = "",  # attention probability blocks
+    chunk: int = 0,
+    tag: str = "",
+    verbose: bool = True,
+) -> dict:
+    if q_block:
+        attention.Q_BLOCK = q_block
+    if kv_block:
+        attention.KV_BLOCK = kv_block
+    if scores_dtype:
+        attention.SCORES_DTYPE = scores_dtype
+    if moe:
+        meshlib.MOE_SHARDING = moe
+    cfg = get(arch)
+    kw = {}
+    if head_mode:
+        kw["head_mode"] = head_mode
+    if kw:
+        cfg = cfg.scaled(**kw)
+    if score_dtype or chunk:
+        # threaded through HeadConfig via ArchConfig-independent knobs
+        from repro.core import amortized_head as ah
+
+        orig = ah.HeadConfig.resolved
+
+        def patched(self):
+            out = orig(self)
+            import dataclasses
+
+            repl = {}
+            if score_dtype:
+                repl["score_dtype"] = score_dtype
+            if chunk:
+                repl["chunk"] = chunk
+            return dataclasses.replace(out, **repl)
+
+        ah.HeadConfig.resolved = patched
+    default_accum = {"mixtral-8x22b": 8, "qwen3-moe-30b-a3b": 4,
+                     "granite-8b": 2, "recurrentgemma-9b": 2}
+    tcfg = steps.TrainConfig(accum=accum or default_accum.get(arch, 1))
+    out = run_cell(arch, shape, multi_pod, tcfg, verbose=verbose, cfg=cfg)
+    out["knobs"] = dict(
+        accum=tcfg.accum, q_block=attention.Q_BLOCK,
+        kv_block=attention.KV_BLOCK, moe=meshlib.MOE_SHARDING,
+        scores_dtype=attention.SCORES_DTYPE,
+        head_mode=cfg.head_mode, score_dtype=score_dtype or "f32",
+        chunk=chunk or 256, tag=tag,
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--q-block", type=int, default=0)
+    ap.add_argument("--kv-block", type=int, default=0)
+    ap.add_argument("--moe", default="", choices=["", "tp", "ep"])
+    ap.add_argument("--head-mode", default="")
+    ap.add_argument("--score-dtype", default="")
+    ap.add_argument("--scores-dtype", default="", choices=["", "f32", "bf16"])
+    ap.add_argument("--chunk", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--log", default="perf_log.jsonl")
+    args = ap.parse_args()
+    out = run_with(
+        args.arch, args.shape, multi_pod=args.multi_pod, accum=args.accum,
+        q_block=args.q_block, kv_block=args.kv_block, moe=args.moe,
+        head_mode=args.head_mode, score_dtype=args.score_dtype,
+        scores_dtype=args.scores_dtype,
+        chunk=args.chunk, tag=args.tag,
+    )
+    with open(args.log, "a") as f:
+        f.write(json.dumps(out) + "\n")
+
+
+if __name__ == "__main__":
+    main()

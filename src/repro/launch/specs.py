@@ -1,0 +1,109 @@
+"""Assigned (architecture x input-shape) cells and their ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, zero allocation).
+
+Shapes (from the assignment):
+  train_4k    : seq 4096,   global_batch 256  -> train_step
+  prefill_32k : seq 32768,  global_batch 32   -> prefill_step (encode for
+                encoder-only archs)
+  decode_32k  : seq 32768,  global_batch 128  -> serve_step (1 new token,
+                KV cache of 32768)
+  long_500k   : seq 524288, global_batch 1    -> serve_step; only for
+                sub-quadratic archs (SWA / SSM / RG-LRU)
+
+Skips (DESIGN.md §4): encoder-only archs have no decode; pure full-attention
+archs skip long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import COMPUTE_DTYPE
+
+__all__ = ["SHAPES", "Cell", "cells_for", "all_cells", "batch_specs",
+           "skip_reason"]
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape]["kind"]
+
+    @property
+    def seq(self) -> int:
+        return SHAPES[self.shape]["seq"]
+
+    @property
+    def batch(self) -> int:
+        return SHAPES[self.shape]["batch"]
+
+
+def skip_reason(cfg: ArchConfig, shape: str) -> str | None:
+    kind = SHAPES[shape]["kind"]
+    if kind == "decode" and not cfg.has_decode:
+        return "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return "pure full attention: 500k context excluded per assignment"
+    return None
+
+
+def cells_for(cfg: ArchConfig) -> list[Cell]:
+    return [
+        Cell(cfg.name, s) for s in SHAPES if skip_reason(cfg, s) is None
+    ]
+
+
+def all_cells() -> list[Cell]:
+    from repro.configs import ARCHS, get
+
+    out = []
+    for a in ARCHS:
+        out.extend(cells_for(get(a)))
+    return out
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _emb(*shape):
+    return jax.ShapeDtypeStruct(shape, COMPUTE_DTYPE)
+
+
+def batch_specs(cfg: ArchConfig, shape: str) -> dict[str, Any]:
+    """ShapeDtypeStructs for the *data* arguments of the cell's step fn."""
+    info = SHAPES[shape]
+    b, l = info["batch"], info["seq"]
+    kind = info["kind"]
+
+    if kind in ("train", "prefill"):
+        if cfg.frontend == "audio_stub":
+            batch = {"frames": _emb(b, l, cfg.d_model), "labels": _i32(b, l)}
+        elif cfg.frontend == "vision_stub":
+            lt = l - cfg.n_prefix_tokens
+            batch = {
+                "patches": _emb(b, cfg.n_prefix_tokens, cfg.d_model),
+                "tokens": _i32(b, lt),
+                "labels": _i32(b, lt),
+            }
+        else:
+            batch = {"tokens": _i32(b, l), "labels": _i32(b, l)}
+        return {"batch": batch}
+
+    # decode: one new token against a seq-long cache
+    return {"ids": _i32(b), "pos": _i32(b)}

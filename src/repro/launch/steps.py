@@ -1,0 +1,104 @@
+"""jit-able step functions: train_step / prefill_step / serve_step.
+
+These are what the dry-run lowers and the trainer/server loops drive.
+train_step supports microbatch gradient accumulation (psum once per step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw
+
+__all__ = ["TrainConfig", "make_train_step", "make_serve_step",
+           "make_prefill_step", "make_encode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: adamw.OptConfig = dataclasses.field(default_factory=adamw.OptConfig)
+    accum: int = 1  # microbatch gradient-accumulation factor
+    compress_grads: bool = False  # int8 ring all-reduce (optim/compress.py)
+
+
+def _split_batch(batch: dict, accum: int) -> dict:
+    """(GB, ...) -> (accum, GB/accum, ...) for lax.scan over microbatches."""
+
+    def r(x):
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch, key)."""
+
+    def loss_for_grad(params, mb, key):
+        loss, metrics = model.loss_fn(params, mb, key)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(params, opt_state, batch, key):
+        if tcfg.accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch, key)
+        else:
+            mbs = _split_batch(batch, tcfg.accum)
+            keys = jax.random.split(key, tcfg.accum)
+
+            def body(carry, xs):
+                g_acc, l_acc = carry
+                mb, kk = xs
+                (l, _), g = grad_fn(params, mb, kk)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (mbs, keys))
+            grads = jax.tree.map(lambda g: g / tcfg.accum, grads)
+            loss = loss / tcfg.accum
+            metrics = {}
+        params, opt_state, opt_metrics = adamw.update(
+            grads, opt_state, params, tcfg.opt
+        )
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """serve_step(params, cache, ids, pos, key) -> (next_ids, ok, cache, pos+1)."""
+
+    def serve_step(params, cache, ids, pos, key):
+        nxt, ok, cache = model.decode_step(params, cache, ids, pos, key)
+        return nxt, ok, cache, pos + 1
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_seq: int):
+    """prefill_step(params, batch, key) -> (next_ids, ok, pos, cache)."""
+
+    def prefill_step(params, batch, key):
+        return model.prefill(params, batch, key, max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_encode_step(model: Model):
+    """Encoder-only archs: encode_step(params, batch) -> logits."""
+
+    def encode_step(params, batch):
+        return model.encode(params, batch)
+
+    return encode_step

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 50 --workdir /tmp/run1
+
+``--smoke`` uses the arch's reduced config (CPU-feasible); without it the
+full config is used (TPU pod scale). ``--head`` selects the softmax mode
+(the paper's Table-2 comparison). Resume is automatic from the latest
+complete checkpoint in --workdir; drop a PREEMPT file there (or SIGTERM)
+for a clean preempt-checkpoint-exit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCHS, get, get_smoke
+from repro.launch.steps import TrainConfig
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import RunConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--head", default=None,
+                    choices=[None, "exact", "topk_only", "amortized"])
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    if args.head:
+        cfg = cfg.scaled(head_mode=args.head)
+    run = RunConfig(
+        num_steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        ckpt_every=args.ckpt_every,
+        train=TrainConfig(
+            opt=OptConfig(lr=args.lr, total_steps=args.steps),
+            accum=args.accum,
+        ),
+    )
+    trainer = Trainer(cfg, run, args.workdir)
+    result = trainer.train()
+    print(json.dumps(result, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: composable trunks (attn/MoE/SSM/RG-LRU) + amortized LM head."""
+from repro.models.config import ArchConfig
+from repro.models.model import Model, active_param_count, param_count
+
+__all__ = ["ArchConfig", "Model", "param_count", "active_param_count"]

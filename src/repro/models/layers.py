@@ -1,0 +1,52 @@
+"""Shared building blocks: norms, RoPE, SwiGLU MLP, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, in_axis: int = -2) -> jax.Array:
+    """Truncated-normal fan-in init, fp32 master weights."""
+    fan_in = shape[in_axis]
+    scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    )
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., L, H, hd), positions: (..., L)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., L, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w2: jax.Array, w3: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (x@w1).silu * (x@w3) @ w2. Weights cast to compute dtype."""
+    dt = x.dtype
+    h = jax.nn.silu(x @ w1.astype(dt)) * (x @ w3.astype(dt))
+    return h @ w2.astype(dt)
+
+
+def mlp_init(key, d: int, f: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d, f)),
+        "w2": dense_init(k2, (f, d)),
+        "w3": dense_init(k3, (d, f)),
+    }

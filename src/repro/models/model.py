@@ -1,0 +1,192 @@
+"""Public model API: init / loss / prefill / decode over any ArchConfig.
+
+The LM head is the paper's amortized log-linear head (core/amortized_head
+single-device; models/head.py shard_map distributed when a mesh with a
+"model" axis is supplied). Modality frontends (audio/vision) are stubs per
+the assignment: ``input_specs`` provides precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import amortized_head as ah
+from repro.models import attention, head as dist_head, rglru, ssm, transformer
+from repro.models.config import ArchConfig
+from repro.models.layers import COMPUTE_DTYPE
+
+__all__ = ["Model", "param_count", "active_param_count"]
+
+_AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def _head_cfg(cfg: ArchConfig) -> ah.HeadConfig:
+    return ah.HeadConfig(
+        n=cfg.vocab,
+        k=cfg.head_k,
+        l=cfg.head_l,
+        mode=cfg.head_mode,
+        mips=cfg.head_mips,
+        delta=cfg.head_delta,
+    ).resolved()
+
+
+class Model:
+    """Stateless model bundle: methods take params explicitly."""
+
+    def __init__(self, cfg: ArchConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh  # None => single-device head path
+        self.head_cfg = _head_cfg(cfg)
+
+    # ---------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        return transformer.init_params(key, self.cfg)
+
+    # ---------------------------------------------------------------- embed
+    def _embed_inputs(self, params, batch) -> tuple[jax.Array, jax.Array, int]:
+        """Returns (x (B,L,d) compute dtype, positions (B,L), prefix)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio_stub":
+            x = batch["frames"].astype(COMPUTE_DTYPE)
+            b, l, _ = x.shape
+            pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+            return x, pos, 0
+        tok_emb = params["embed"]
+        if cfg.frontend == "vision_stub":
+            patches = batch["patches"].astype(COMPUTE_DTYPE)
+            toks = tok_emb[batch["tokens"]].astype(COMPUTE_DTYPE)
+            x = jnp.concatenate([patches, toks], axis=1)
+            b, l, _ = x.shape
+            pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+            return x, pos, cfg.n_prefix_tokens
+        x = tok_emb[batch["tokens"]].astype(COMPUTE_DTYPE)
+        b, l, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+        return x, pos, 0
+
+    def _out_embed(self, params) -> jax.Array:
+        return (
+            params["embed"] if self.cfg.tie_embeddings else params["out_embed"]
+        )
+
+    # ---------------------------------------------------------------- loss
+    def loss_fn(self, params, batch, key) -> tuple[jax.Array, dict]:
+        """Mean NLL over label positions (+ MoE aux)."""
+        cfg = self.cfg
+        x, pos, prefix = self._embed_inputs(params, batch)
+        h, aux = transformer.apply_trunk(params, cfg, x, pos, prefix=prefix,
+                                         mesh=self.mesh)
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub":
+            h = h[:, cfg.n_prefix_tokens :]  # loss on text positions only
+        b, l, d = h.shape
+        h2 = h.reshape(b * l, d)
+        t2 = labels.reshape(-1).astype(jnp.int32)
+        if self.mesh is not None and "model" in self.mesh.shape:
+            loss = dist_head.dist_head_loss(
+                self.mesh, self._out_embed(params), h2, t2, key, self.head_cfg
+            )
+            log_z = jnp.zeros(())  # diagnostics not returned by dist path
+        else:
+            out = ah.head_loss(
+                self._out_embed(params), h2, t2, key, self.head_cfg
+            )
+            loss, log_z = out.loss, out.log_z.mean()
+        total = loss.mean() + _AUX_WEIGHT * aux
+        return total, {"nll": loss.mean(), "aux": aux, "log_z": log_z}
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_seq: int, dtype=COMPUTE_DTYPE):
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def decode_step(
+        self, params, cache, ids: jax.Array, pos: jax.Array, key
+    ) -> tuple[jax.Array, jax.Array, Any]:
+        """One serving step: (B,) last ids + (B,) positions -> next ids.
+
+        Returns (next_ids (B,), ok (B,), new_cache).
+        """
+        cfg = self.cfg
+        x = params["embed"][ids][:, None].astype(COMPUTE_DTYPE)  # (B,1,d)
+        h, cache = transformer.apply_trunk_decode(params, cfg, x, cache, pos,
+                                                  mesh=self.mesh)
+        hq = h[:, 0]  # (B, d)
+        if self.mesh is not None and "model" in self.mesh.shape:
+            nxt, ok = dist_head.dist_head_sample(
+                self.mesh, self._out_embed(params), hq, key, self.head_cfg
+            )
+        else:
+            res = ah.head_sample(self._out_embed(params), hq, key, self.head_cfg)
+            nxt, ok = res.index, res.ok
+        return nxt, ok, cache
+
+    def prefill(
+        self, params, batch, key, max_seq: int
+    ) -> tuple[jax.Array, jax.Array, jax.Array, Any]:
+        """Prompt forward + cache build + first sampled token.
+
+        Returns (next_ids (B,), ok (B,), pos (B,), cache).
+        """
+        cfg = self.cfg
+        x, pos, prefix = self._embed_inputs(params, batch)
+        b, l, _ = x.shape
+        h, cache = transformer.apply_trunk_prefill(
+            params, cfg, x, pos, max_seq=max_seq, prefix=prefix,
+            mesh=self.mesh,
+        )
+        hq = h[:, -1]
+        if self.mesh is not None and "model" in self.mesh.shape:
+            nxt, ok = dist_head.dist_head_sample(
+                self.mesh, self._out_embed(params), hq, key, self.head_cfg
+            )
+        else:
+            res = ah.head_sample(self._out_embed(params), hq, key, self.head_cfg)
+            nxt, ok = res.index, res.ok
+        return nxt, ok, jnp.full((b,), l, jnp.int32), cache
+
+    # ---------------------------------------------------------------- encoder
+    def encode(self, params, batch) -> jax.Array:
+        """Encoder-only (hubert): per-frame logits over the (small) vocab."""
+        cfg = self.cfg
+        x, pos, _ = self._embed_inputs(params, batch)
+        h, _ = transformer.apply_trunk(params, cfg, x, pos, mesh=self.mesh)
+        emb = self._out_embed(params)
+        logits = h.astype(jnp.float32) @ emb.astype(jnp.float32).T
+        return logits[..., : cfg.vocab]
+
+
+# -------------------------------------------------------------------- counts
+def _size(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)  # python ints: jnp.prod would overflow int32 at >2B
+    return n
+
+
+def param_count(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.key(0)
+    )
+    return sum(_size(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Params touched per token (MoE: routed experts only) — the
+    6·N_active·D convention for MODEL_FLOPS."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), jax.random.key(0)
+    )
+    inactive = 0
+    frac = 1.0 - cfg.experts_per_token / cfg.n_experts
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        keys = [getattr(p, "key", "") for p in path]
+        if any(k in ("w1", "w2", "w3") for k in keys) and leaf.ndim == 4:
+            inactive += int(frac * _size(leaf.shape))
+    return total - inactive

@@ -1,0 +1,119 @@
+"""Griffin / RecurrentGemma recurrent block: conv + RG-LRU.
+
+The RG-LRU linear recurrence ``h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙
+u_t)`` is evaluated with ``jax.lax.associative_scan`` over the sequence
+(the gated linear recurrence is associative: (a₂,b₂)∘(a₁,b₁) =
+(a₁a₂, a₂b₁+b₂)), giving O(log L) depth for training/prefill and an O(1)
+state update for decode. Gate projections are block-diagonal (8 blocks), as
+in Griffin. Recurrence math runs in fp32; ``1 - a²`` uses ``-expm1(2 log a)``
+for stability near a → 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init
+
+__all__ = ["init", "forward", "init_cache", "decode"]
+
+_N_BLOCKS = 8
+_C_SCALE = 8.0  # Griffin's fixed `c` multiplier on the recurrence gate
+
+
+def init(key, cfg: ArchConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_dim
+    wb = w // _N_BLOCKS
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_branch": dense_init(ks[0], (d, w)),
+        "w_in": dense_init(ks[1], (d, w)),
+        "conv": dense_init(ks[2], (cfg.conv_width, w), in_axis=0),
+        "w_a": dense_init(ks[3], (_N_BLOCKS, wb, wb), in_axis=-2),
+        "w_i": dense_init(ks[4], (_N_BLOCKS, wb, wb), in_axis=-2),
+        # Λ init so that a^c = sigmoid(lambda)^c spreads over (0.9, 0.999)
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": dense_init(ks[5], (w, d)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        out = out + pad[:, i : i + u.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def _gates(p: dict, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Block-diagonal gate projections. u: (..., W) -> (log_a, gate_i)."""
+    shp = u.shape
+    w = shp[-1]
+    ub = u.reshape(shp[:-1] + (_N_BLOCKS, w // _N_BLOCKS)).astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...nk,nkj->...nj", ub, p["w_a"]))
+    gi = jax.nn.sigmoid(jnp.einsum("...nk,nkj->...nj", ub, p["w_i"]))
+    r = r.reshape(shp)
+    gi = gi.reshape(shp)
+    # log a_t = -c * softplus(Λ) * r_t   (a in (0,1), near 1 for small r)
+    log_a = -_C_SCALE * jax.nn.softplus(p["lam"]) * r
+    return log_a, gi
+
+
+def _rglru(p: dict, u: jax.Array) -> jax.Array:
+    """u: (B, L, W) conv output -> recurrence output, fp32 inside."""
+    log_a, gi = _gates(p, u)  # (B, L, W) fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))  # sqrt(1 - a^2)
+    b_term = beta * gi * u.astype(jnp.float32)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    return h
+
+
+def forward(p: dict, cfg: ArchConfig, x: jax.Array, return_cache: bool = False):
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))
+    u_raw = x @ p["w_in"].astype(dt)
+    u = _causal_conv(u_raw, p["conv"].astype(dt))
+    h = _rglru(p, u)
+    out = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    if return_cache:
+        cache = {
+            "state": h[:, -1],  # fp32
+            "conv": u_raw[:, -(cfg.conv_width - 1) :],
+        }
+        return out, cache
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_dim
+    return {
+        "state": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d) -> O(1) recurrent update."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))  # (B, 1, W)
+    u = x @ p["w_in"].astype(dt)
+    window = jnp.concatenate([cache["conv"], u], axis=1)  # (B, width, W)
+    u_c = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     p["conv"]).astype(dt)  # (B, W)
+    log_a, gi = _gates(p, u_c)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    h = a * cache["state"] + beta * gi * u_c.astype(jnp.float32)
+    out = (h[:, None].astype(dt) * gate) @ p["w_out"].astype(dt)
+    return out, {"state": h, "conv": window[:, 1:]}

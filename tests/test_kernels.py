@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.fused_estimator import fused_estimator
+from repro.kernels.ivf_gather_score import ivf_gather_score
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "n_c,cap,d,b,n_probe,d_block",
+    [
+        (16, 8, 256, 4, 3, 128),
+        (8, 16, 128, 1, 8, 128),
+        (32, 8, 512, 2, 4, 512),
+        (4, 24, 384, 5, 2, 128),
+    ],
+)
+def test_ivf_gather_score_sweep(n_c, cap, d, b, n_probe, d_block, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    mv = jax.random.normal(k1, (n_c, cap, d), dtype=dtype)
+    probe = jax.random.randint(k2, (b, n_probe), 0, n_c)
+    q = jax.random.normal(k3, (b, d), dtype=jnp.float32)
+    out = ivf_gather_score(mv, probe, q, d_block=d_block, interpret=True)
+    want = ref.ivf_gather_score_ref(mv, probe, q)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,m,n,d", [(4, 24, 256, 64), (1, 64, 512, 128), (7, 16, 128, 256)])
+def test_fused_estimator_sweep(t, m, n, d, dtype):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(1), 4)
+    emb = (jax.random.normal(k1, (n, d)) / np.sqrt(d)).astype(dtype)
+    ids = jax.random.randint(k2, (t, m), 0, n)
+    h = jax.random.normal(k3, (t, d), dtype=jnp.float32)
+    log_w = jnp.where(jax.random.uniform(k4, (t, m)) < 0.3, -jnp.inf, 0.7)
+    lz, ev = fused_estimator(emb, ids, h, log_w, interpret=True)
+    lz_r, ev_r = ref.fused_estimator_ref(emb, ids, h, log_w)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(lz, lz_r, rtol=tol, atol=tol)
+    np.testing.assert_allclose(ev, ev_r, rtol=tol, atol=tol)
+
+
+def test_fused_estimator_all_masked_but_one():
+    """Degenerate stratum weights: only one live candidate."""
+    n, d = 64, 32
+    emb = jax.random.normal(jax.random.key(2), (n, d))
+    ids = jnp.array([[5, 6, 7, 8]], jnp.int32)
+    h = jax.random.normal(jax.random.key(3), (1, d))
+    log_w = jnp.array([[0.0, -jnp.inf, -jnp.inf, -jnp.inf]])
+    lz, ev = fused_estimator(emb, ids, h, log_w, interpret=True)
+    np.testing.assert_allclose(float(lz[0]), float(emb[5] @ h[0]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ev[0]), np.asarray(emb[5]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,hd,s_block",
+    [
+        (2, 8, 2, 1024, 64, 256),
+        (1, 4, 4, 512, 128, 512),
+        (3, 16, 1, 512, 64, 128),
+    ],
+)
+def test_flash_decode_sweep(b, hq, hkv, s, hd, s_block, dtype):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(4), 4)
+    q = jax.random.normal(k1, (b, hq, hd), dtype=dtype)
+    kc = jax.random.normal(k2, (b, s, hkv, hd), dtype=dtype)
+    vc = jax.random.normal(k3, (b, s, hkv, hd), dtype=dtype)
+    lens = jax.random.randint(k4, (b,), 1, s + 1)
+    out = flash_decode(q, kc, vc, lens, s_block=s_block, interpret=True)
+    want = ref.flash_decode_ref(q, kc, vc, lens)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out, want, rtol=tol, atol=tol)
+
+
+def test_flash_decode_length_one():
+    """Cache with a single valid entry -> output = v[0] exactly."""
+    b, hq, hkv, s, hd = 1, 2, 1, 256, 32
+    q = jax.random.normal(jax.random.key(5), (b, hq, hd))
+    kc = jax.random.normal(jax.random.key(6), (b, s, hkv, hd))
+    vc = jax.random.normal(jax.random.key(7), (b, s, hkv, hd))
+    lens = jnp.array([1], jnp.int32)
+    out = flash_decode(q, kc, vc, lens, s_block=64, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out[0, 0]), np.asarray(vc[0, 0, 0]), rtol=1e-5, atol=1e-6
+    )

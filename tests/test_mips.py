@@ -1,0 +1,125 @@
+"""MIPS indexes: oracle correctness, IVF coverage/recall, LSH recall."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mips
+
+
+def _db(n=2048, d=32, clustered=True, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    if clustered:  # realistic embeddings have cluster structure
+        centers = jax.random.normal(k1, (32, d))
+        assign = jax.random.randint(k2, (n,), 0, 32)
+        db = centers[assign] + 0.3 * jax.random.normal(k3, (n, d))
+    else:
+        db = jax.random.normal(k3, (n, d))
+    return db / jnp.linalg.norm(db, axis=1, keepdims=True)
+
+
+def test_exact_topk_matches_numpy():
+    db = _db()
+    q = jax.random.normal(jax.random.key(9), (32,))
+    st = mips.build("exact", db)
+    tk = mips.topk("exact", st, q, 10)
+    scores = np.asarray(db @ q)
+    expected = set(np.argsort(-scores)[:10].tolist())
+    assert set(np.asarray(tk.ids).tolist()) == expected
+    np.testing.assert_allclose(
+        np.sort(np.asarray(tk.values))[::-1],
+        np.sort(scores)[::-1][:10],
+        rtol=1e-5,
+    )
+
+
+def test_ivf_full_probe_is_exhaustive():
+    """Probing every cluster must return the exact top-k (coverage: padded
+    clusters + overflow buffer lose no points)."""
+    db = _db()
+    st = mips.build("ivf", db, n_clusters=24, kmeans_iters=4)
+    q = jax.random.normal(jax.random.key(10), (32,))
+    tk = mips.topk("ivf", st, q, 10, n_probe=24)
+    exact = mips.topk("exact", mips.build("exact", db), q, 10)
+    assert set(np.asarray(tk.ids).tolist()) == set(np.asarray(exact.ids).tolist())
+
+
+def test_ivf_recall_on_clustered_data():
+    db = _db(clustered=True)
+    st = mips.build("ivf", db, n_clusters=32, kmeans_iters=8)
+    stx = mips.build("exact", db)
+    recs = []
+    for s in range(20):
+        q = jax.random.normal(jax.random.key(100 + s), (32,))
+        tk = mips.topk("ivf", st, q, 16, n_probe=8)
+        ex = mips.topk("exact", stx, q, 16)
+        recs.append(
+            len(set(np.asarray(tk.ids).tolist())
+                & set(np.asarray(ex.ids).tolist())) / 16
+        )
+    assert np.mean(recs) > 0.85, np.mean(recs)
+
+
+def test_ivf_approximate_topk_gap():
+    """Def 3.1: the returned set's gap c = max_notin - min_in should be
+    small on clustered data; its exp factor enters the Thm 3.3 bound."""
+    db = _db(clustered=True)
+    st = mips.build("ivf", db, n_clusters=32, kmeans_iters=8)
+    q = jax.random.normal(jax.random.key(11), (32,))
+    tk = mips.topk("ivf", st, q, 16, n_probe=8)
+    scores = np.asarray(db @ q)
+    in_set = np.asarray(tk.ids)
+    mask = np.ones(len(scores), bool)
+    mask[in_set] = False
+    c = scores[mask].max() - scores[in_set].min()
+    assert c < 0.5, c  # on unit-norm data scores are in [-1, 1]
+
+
+def test_ivf_batch_matches_single():
+    db = _db()
+    st = mips.build("ivf", db, n_clusters=16, kmeans_iters=4)
+    q = jax.random.normal(jax.random.key(12), (4, 32))
+    batch = mips.topk_batch("ivf", st, q, 8, n_probe=4)
+    for i in range(4):
+        single = mips.topk("ivf", st, q[i], 8, n_probe=4)
+        assert np.array_equal(np.asarray(batch.ids[i]), np.asarray(single.ids))
+
+
+def test_ivf_kernel_path_matches_xla_path():
+    db = _db(n=512, d=128)
+    st = mips.build("ivf", db, n_clusters=16, kmeans_iters=4)
+    q = jax.random.normal(jax.random.key(13), (3, 128))
+    a = mips.topk_batch("ivf", st, q, 8, n_probe=4, use_kernel=False)
+    b = mips.topk_batch("ivf", st, q, 8, n_probe=4, use_kernel=True)
+    assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(
+        np.asarray(a.values), np.asarray(b.values), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_lsh_recall_at_one():
+    """SRP-LSH (theory index): recall@1 with paper-style queries (θ drawn
+    near dataset points — §4.1: 'θ drawn uniformly from the dataset')."""
+    db = _db(n=1024, d=32, clustered=True)
+    st = mips.build("lsh", db, n_tables=12, n_bits=6)
+    stx = mips.build("exact", db)
+    hits = 0
+    for s in range(30):
+        base = db[int(jax.random.randint(jax.random.key(s), (), 0, 1024))]
+        q = base + 0.2 * jax.random.normal(jax.random.key(200 + s), (32,))
+        got = np.asarray(mips.topk("lsh", st, q, 4).ids)
+        want = int(np.asarray(mips.topk("exact", stx, q, 1).ids)[0])
+        hits += want in set(got.tolist())
+    assert hits >= 24, hits  # >= 80% recall@1-in-top-4
+
+
+def test_lsh_no_duplicate_candidates():
+    db = _db(n=512, d=16)
+    st = mips.build("lsh", db, n_tables=8, n_bits=6)
+    q = jax.random.normal(jax.random.key(14), (16,))
+    tk = mips.topk("lsh", st, q, 32)
+    ids = np.asarray(tk.ids)
+    valid = ids[ids >= 0]
+    assert len(valid) == len(set(valid.tolist()))

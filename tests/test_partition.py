@@ -1,0 +1,108 @@
+"""Algorithm 3/4: unbiasedness + concentration (Thms 3.4, 3.5)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mips
+from repro.core.expectation import expectation_estimate
+from repro.core.partition import partition_estimate
+
+N, D = 4096, 16
+
+
+def _setup(seed=0, scale=3.0, k=128):
+    emb = jax.random.normal(jax.random.key(seed), (N, D)) / math.sqrt(D)
+    theta = jax.random.normal(jax.random.key(seed + 1), (D,)) * scale
+    y = emb @ theta
+    st_ = mips.build("exact", emb)
+    topk = mips.topk("exact", st_, theta, k)
+    return emb, theta, y, topk
+
+
+def test_partition_unbiased():
+    emb, theta, y, topk = _setup()
+    score_fn = lambda ids: emb[ids] @ theta
+    pe = jax.jit(lambda k: partition_estimate(k, topk, N, score_fn, l=128).log_z)
+    lz = jax.vmap(pe)(jax.random.split(jax.random.key(2), 4000))
+    z_true = float(jnp.exp(jax.nn.logsumexp(y)))
+    z_hat = np.exp(np.asarray(lz, np.float64))
+    rel_err_of_mean = abs(z_hat.mean() - z_true) / z_true
+    # standard error of the mean:
+    sem = z_hat.std() / math.sqrt(len(z_hat)) / z_true
+    assert rel_err_of_mean < 4 * sem + 1e-3, (rel_err_of_mean, sem)
+
+
+def test_partition_concentration_thm34():
+    """kl >= (2/3) eps^-2 n ln(1/δ) => P(rel err > eps) <= δ."""
+    emb, theta, y, topk = _setup(k=256)
+    score_fn = lambda ids: emb[ids] @ theta
+    delta = 0.05
+    k = 256
+    l_req = int((2 / 3) / (0.25**2) * N * math.log(1 / delta) / k) + 1
+    pe = jax.jit(
+        lambda kk: partition_estimate(kk, topk, N, score_fn, l=l_req).log_z
+    )
+    lz = jax.vmap(pe)(jax.random.split(jax.random.key(3), 500))
+    z_true = float(jax.nn.logsumexp(y))
+    rel = np.abs(np.exp(np.asarray(lz, np.float64) - z_true) - 1.0)
+    fail_rate = (rel > 0.25).mean()
+    assert fail_rate <= delta * 2 + 0.01, fail_rate  # 2x slack on 500 draws
+
+
+def test_expectation_additive_error():
+    emb, theta, y, topk = _setup(k=256)
+    score_fn = lambda ids: emb[ids] @ theta
+    f = jnp.tanh(jnp.arange(N, dtype=jnp.float32) / N * 4 - 2)  # |f|<=1
+    f_fn = lambda ids: f[ids]
+    true_f = float(jnp.sum(jax.nn.softmax(y) * f))
+    ee = jax.jit(
+        lambda kk: expectation_estimate(kk, topk, N, score_fn, f_fn, l=512).value
+    )
+    vals = np.asarray(jax.vmap(ee)(jax.random.split(jax.random.key(4), 400)))
+    err = np.abs(vals - true_f)
+    assert np.quantile(err, 0.95) < 0.15, np.quantile(err, 0.95)
+
+
+def test_expectation_vector_valued_matches_feature_gradient():
+    """Alg 4 with f=φ equals ∇_θ log Ẑ of Alg 3 (autodiff identity used by
+    the amortized LM head)."""
+    emb, theta, y, topk = _setup(k=128)
+    key = jax.random.key(7)
+
+    def log_z(th):
+        score_fn = lambda ids: emb[ids] @ th
+        return partition_estimate(key, topk, N, score_fn, l=128).log_z
+
+    grad = jax.grad(log_z)(theta)
+    ee = expectation_estimate(
+        key,
+        topk,
+        N,
+        lambda ids: emb[ids] @ theta,
+        lambda ids: emb[ids],
+        l=128,
+    )
+    np.testing.assert_allclose(
+        np.asarray(grad), np.asarray(ee.value), rtol=2e-4, atol=2e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(0.0, 6.0))
+def test_partition_log_estimate_close_property(seed, scale):
+    """Property: with k=l=sqrt(n ln 1/δ), log Ẑ within 0.25 of log Z whp."""
+    n, d = 1024, 8
+    emb = jax.random.normal(jax.random.key(seed), (n, d)) / math.sqrt(d)
+    theta = jax.random.normal(jax.random.key(seed + 1), (d,)) * scale
+    y = emb @ theta
+    vals, ids = jax.lax.top_k(y, 96)
+    from repro.core.gumbel import TopK
+
+    topk = TopK(ids.astype(jnp.int32), vals)
+    pe = partition_estimate(
+        jax.random.key(seed + 2), topk, n, lambda i: y[i], l=96
+    )
+    assert abs(float(pe.log_z) - float(jax.nn.logsumexp(y))) < 0.25

@@ -1,0 +1,79 @@
+"""Trainer: loss goes down; preemption + resume is restart-identical."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.transformer as T
+from repro.configs import get_smoke
+from repro.launch.steps import TrainConfig
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import RunConfig, Trainer
+
+
+@pytest.fixture(autouse=True)
+def _no_remat(monkeypatch):
+    monkeypatch.setattr(T, "REMAT", False)
+
+
+def _run_cfg(steps, ckpt_every=100, total=None):
+    # `total` pins the LR schedule horizon (must match across a
+    # stop-and-resume pair for bitwise-identical resumption)
+    return RunConfig(
+        num_steps=steps, ckpt_every=ckpt_every, log_every=100,
+        batch=4, seq=32,
+        train=TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=2,
+                                        total_steps=total or steps)),
+    )
+
+
+def test_loss_decreases(tmp_path):
+    cfg = get_smoke("tinyllama-1.1b")
+    tr = Trainer(cfg, _run_cfg(25), str(tmp_path))
+    out = tr.train()
+    assert out["status"] == "done"
+    first = np.mean([m["loss"] for m in tr.metrics_log[:5]])
+    last = np.mean([m["loss"] for m in tr.metrics_log[-5:]])
+    assert last < first - 0.5, (first, last)
+
+
+def test_resume_is_bitwise_deterministic(tmp_path):
+    cfg = get_smoke("tinyllama-1.1b")
+    # run A: 10 steps straight
+    a_dir = os.path.join(str(tmp_path), "a")
+    tr_a = Trainer(cfg, _run_cfg(10, ckpt_every=10), a_dir)
+    tr_a.train()
+    state_a, _, _ = tr_a.ckpt.restore(
+        jax.eval_shape(lambda: {k: v for k, v in tr_a.init_state().items()
+                                if k != "meta"})
+    )
+    # run B: 5 steps, stop (ckpt), new Trainer resumes for 5 more
+    b_dir = os.path.join(str(tmp_path), "b")
+    tr_b1 = Trainer(cfg, _run_cfg(5, ckpt_every=5, total=10), b_dir)
+    tr_b1.train()
+    tr_b2 = Trainer(cfg, _run_cfg(10, ckpt_every=5), b_dir)
+    out = tr_b2.train()
+    assert out["status"] == "done"
+    state_b, _, _ = tr_b2.ckpt.restore(
+        jax.eval_shape(lambda: {k: v for k, v in tr_b2.init_state().items()
+                                if k != "meta"})
+    )
+    for (pa, la), (pb, lb) in zip(
+        jax.tree_util.tree_leaves_with_path(state_a),
+        jax.tree_util.tree_leaves_with_path(state_b),
+    ):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb)), pa
+
+
+def test_preemption_flag_checkpoints_and_exits(tmp_path):
+    cfg = get_smoke("tinyllama-1.1b")
+    wd = str(tmp_path)
+    os.makedirs(wd, exist_ok=True)
+    open(os.path.join(wd, "PREEMPT"), "w").close()
+    tr = Trainer(cfg, _run_cfg(50, ckpt_every=100), wd)
+    out = tr.train()
+    assert out["status"] == "preempted"
+    assert out["step"] == 1  # stopped immediately after the first step
+    assert tr.ckpt.latest_step() == 1
