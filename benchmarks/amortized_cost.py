@@ -17,7 +17,7 @@ def run(report) -> None:
     db = clustered_db(N, D)
     t0 = time.perf_counter()
     state = build_ivf(db)
-    jax.block_until_ready(state.centroids)
+    jax.block_until_ready(state.state)
     t_build = time.perf_counter() - t0
     k = default_kl(N)
     ours = amortized_sampler(db, state, k, k)

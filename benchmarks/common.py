@@ -38,8 +38,13 @@ def timeit(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     return float(np.median(ts))
 
 
-def build_ivf(db, n_probe_hint: int = 16):
+def build_ivf(db, n_probe: int = 16, device: bool = True) -> mips.IVFIndex:
+    """Standard benchmark index: √n clusters, on-device build."""
     n = db.shape[0]
-    return mips.build(
-        "ivf", db, n_clusters=max(16, int(np.sqrt(n))), kmeans_iters=4
+    cfg = mips.IVFConfig(
+        n_clusters=max(16, int(np.sqrt(n))),
+        kmeans_iters=4,
+        n_probe=n_probe,
+        device_build=device,
     )
+    return mips.build_index(cfg, db)

@@ -1,0 +1,121 @@
+"""Index rebuild/refresh economics during learning (DESIGN.md §7).
+
+Two measurements:
+
+(a) rebuild latency — the host-numpy reference build vs the on-device XLA
+    build vs a warm-started on-device ``refresh``, at several database
+    sizes. The device build is one XLA program (jitted k-means + sort/scan
+    packing), so it is the only variant cheap enough to sit inside a
+    training loop.
+
+(b) amortized throughput during learning — the database (the output
+    embedding) drifts every step; the index is refreshed every R steps.
+    Reports effective queries/sec *including* the amortized refresh cost,
+    and recall@10 of the just-about-to-be-refreshed (i.e. stalest) index,
+    for several refresh periods R. Small R buys recall with rebuild time;
+    R=0 (never refresh) shows the staleness decay the trainer's drift
+    trigger guards against.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import clustered_db, timeit
+from repro.core import mips
+
+D = 64
+BUILD_SIZES = (20_000, 40_000)
+LEARN_N = 20_000
+LEARN_STEPS = 60
+DRIFT = 0.02  # per-step relative embedding drift
+PERIODS = (0, 20, 5)  # refresh every R steps; 0 = never
+
+
+def _cfg(n: int, device: bool) -> mips.IVFConfig:
+    return mips.IVFConfig(
+        n_clusters=max(16, int(np.sqrt(n))),
+        kmeans_iters=4,
+        n_probe=16,
+        device_build=device,
+    )
+
+
+def _recall10(index, exact, queries) -> float:
+    got = np.asarray(index.topk_batch(queries, 10).ids)
+    want = np.asarray(exact.topk_batch(queries, 10).ids)
+    return float(
+        np.mean([len(set(g) & set(w)) / 10 for g, w in zip(got, want)])
+    )
+
+
+def run(report) -> None:
+    # ---- (a) rebuild latency: host vs device vs warm refresh -------------
+    for n in BUILD_SIZES:
+        db = clustered_db(n, D, seed=11)
+        t0 = time.perf_counter()
+        mips.build_index(_cfg(n, device=False), db)
+        t_host = time.perf_counter() - t0
+
+        t_dev = timeit(
+            lambda: mips.build_index(_cfg(n, device=True), db),
+            iters=5, warmup=1,
+        )
+        index = mips.build_index(_cfg(n, device=True), db)
+        t_refresh = timeit(lambda: index.refresh(db), iters=5, warmup=1)
+
+        tag = f"refresh/build_n{n//1000}k"
+        report(f"{tag}_host", t_host * 1e6, "numpy reference")
+        report(
+            f"{tag}_device", t_dev * 1e6,
+            f"speedup={t_host / t_dev:.1f}x (one XLA program)",
+        )
+        report(
+            f"{tag}_warm", t_refresh * 1e6,
+            f"speedup={t_host / t_refresh:.1f}x (warm-started)",
+        )
+
+    # ---- (b) learning loop: drifting db, refresh every R steps -----------
+    db0 = clustered_db(LEARN_N, D, seed=12)
+    queries = clustered_db(64, D, seed=13) / 0.05
+
+    @jax.jit
+    def drift_step(db, key):
+        db = db + DRIFT * jax.random.normal(key, db.shape)
+        return db / jnp.linalg.norm(db, axis=1, keepdims=True)
+
+    # warm the refresh executable once so compile time is not charged to
+    # the first refresh-enabled period below
+    warm = mips.build_index(_cfg(LEARN_N, device=True), db0)
+    jax.block_until_ready(warm.refresh(db0).state)
+
+    for r_period in PERIODS:
+        db = db0
+        index = mips.build_index(_cfg(LEARN_N, device=True), db)
+        stale_recalls = []
+        work = 0.0  # timed: queries + refreshes; recall evals excluded
+        for step in range(LEARN_STEPS):
+            db = drift_step(db, jax.random.fold_in(jax.random.key(0), step))
+            t0 = time.perf_counter()
+            index.topk_batch(queries, 10).ids.block_until_ready()
+            work += time.perf_counter() - t0
+            if r_period and (step + 1) % r_period == 0:
+                stale_recalls.append(
+                    _recall10(index, mips.ExactIndex.build(db), queries)
+                )
+                t0 = time.perf_counter()
+                index = index.refresh(db)
+                jax.block_until_ready(index.state)
+                work += time.perf_counter() - t0
+        final_recall = _recall10(index, mips.ExactIndex.build(db), queries)
+        stale = float(np.mean(stale_recalls)) if stale_recalls else final_recall
+        qps = LEARN_STEPS * queries.shape[0] / work
+        report(
+            f"refresh/learning_R{r_period}",
+            work / LEARN_STEPS * 1e6,
+            f"amortized_qps={qps:.0f} stale_recall@10={stale:.3f} "
+            f"final_recall@10={final_recall:.3f}",
+        )

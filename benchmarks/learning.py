@@ -14,7 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import build_ivf, clustered_db, timeit
-from repro.core import mips
 from repro.core.expectation import expectation_estimate
 from repro.core.gumbel import default_kl
 
@@ -44,12 +43,12 @@ def run(report) -> None:
         return phi_bar - p @ db
 
     def grad_topk(theta):
-        topk = mips.topk("ivf", state, theta, k, n_probe=16)
+        topk = state.topk(theta, k)
         w = jax.nn.softmax(topk.values)
         return phi_bar - w @ db[topk.ids]
 
     def grad_ours(theta, key):
-        topk = mips.topk("ivf", state, theta, k, n_probe=16)
+        topk = state.topk(theta, k)
         est = expectation_estimate(
             key, topk, N,
             lambda ids: db[ids] @ theta,

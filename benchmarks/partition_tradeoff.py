@@ -11,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import build_ivf, clustered_db, random_queries, timeit
-from repro.core import mips
 from repro.core.partition import partition_estimate
 
 N, D = 160_000, 64
@@ -28,12 +27,12 @@ def run(report) -> None:
 
     for kl in (256, 512, 1024, 2048):
         def ours(th, key, kl=kl):
-            topk = mips.topk("ivf", state, th, kl, n_probe=16)
+            topk = state.topk(th, kl)
             score_fn = lambda ids: db[ids] @ th
             return partition_estimate(key, topk, N, score_fn, l=kl).log_z
 
         def topk_only(th, kl=kl):
-            topk = mips.topk("ivf", state, th, kl, n_probe=16)
+            topk = state.topk(th, kl)
             return jax.nn.logsumexp(topk.values)
 
         ours_j = jax.jit(ours)

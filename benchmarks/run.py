@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
-``python -m benchmarks.run [fig2|table1|fig4|table2|fig7|roofline]``.
+``python -m benchmarks.run [fig2|table1|fig4|table2|fig7|refresh|roofline]``.
 """
 from __future__ import annotations
 
@@ -11,6 +11,7 @@ import sys
 def main() -> None:
     from benchmarks import (
         amortized_cost,
+        index_refresh,
         learning,
         partition_tradeoff,
         roofline_report,
@@ -24,9 +25,15 @@ def main() -> None:
         "fig4": partition_tradeoff.run,
         "table2": learning.run,
         "fig7": amortized_cost.run,
+        "refresh": index_refresh.run,
         "roofline": roofline_report.run,
     }
     wanted = sys.argv[1:] or list(suites)
+    unknown = [w for w in wanted if w not in suites]
+    if unknown:
+        raise SystemExit(
+            f"unknown suite(s) {unknown}; known: {list(suites)}"
+        )
     rows: list[tuple[str, float, str]] = []
 
     def report(name: str, us_per_call: float, derived: str = "") -> None:

@@ -15,7 +15,6 @@ import numpy as np
 
 from benchmarks.common import build_ivf, clustered_db, random_queries, timeit
 from benchmarks.sampling_speed import amortized_sampler, brute_force_sampler
-from repro.core import mips
 from repro.core.gumbel import default_kl, sample_fixed_b
 
 N, D = 160_000, 64
@@ -28,7 +27,7 @@ def run(report) -> None:
     m_cap = int(k + 6 * math.sqrt(k) + 8)
 
     def one(theta, key):
-        topk = mips.topk("ivf", state, theta, k, n_probe=16)
+        topk = state.topk(theta, k)
         score_fn = lambda ids: db[ids] @ theta
         res = sample_fixed_b(key, topk, N, score_fn, l=k, m_cap=m_cap)
         return res.index, res.ok

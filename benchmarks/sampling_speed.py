@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import build_ivf, clustered_db, random_queries, timeit
-from repro.core import mips
 from repro.core.gumbel import default_kl, sample_fixed_b
 from repro.kernels import ref  # noqa: F401  (keeps kernel import warm)
 
@@ -30,12 +29,12 @@ def brute_force_sampler(db):
     return jax.jit(f)
 
 
-def amortized_sampler(db, state, k, l, n_probe=16):
+def amortized_sampler(db, index, k, l):
     n = db.shape[0]
     m_cap = int(l + 6 * math.sqrt(l) + 8)
 
     def f(theta, key):
-        topk = mips.topk("ivf", state, theta, k, n_probe=n_probe)
+        topk = index.topk(theta, k)
         score_fn = lambda ids: db[ids] @ theta
         return sample_fixed_b(
             key, topk, n, score_fn, l=l, m_cap=m_cap

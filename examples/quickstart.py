@@ -29,8 +29,9 @@ assign = jax.random.randint(jax.random.key(1), (N,), 0, 128)
 db = centers[assign] + 0.4 * jax.random.normal(jax.random.key(2), (N, D))
 db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
 
-# 2. preprocessing: build the MIPS index once
-index = mips.build("ivf", db, kmeans_iters=5)
+# 2. preprocessing: build the MIPS index once (stateful Index API; the
+#    IVF build runs on device as one XLA program)
+index = mips.build_index(mips.IVFConfig(kmeans_iters=5, n_probe=32), db)
 k = l = default_kl(N, delta=1e-4)  # Thm 3.3: k·l >= n·ln(1/δ)
 print(f"n={N}  k=l={k}  (vs naive n per query)")
 
@@ -38,7 +39,7 @@ for step in range(3):
     theta = jax.random.normal(jax.random.key(10 + step), (D,)) * 4.0
 
     # 3. top-k via MIPS — the only part that looks at the database
-    topk = mips.topk("ivf", index, theta, k, n_probe=32)
+    topk = index.topk(theta, k)
     score_fn = lambda ids: db[ids] @ theta
 
     # 4a. exact sampling with lazily materialized Gumbels (Alg 2)

@@ -24,7 +24,7 @@ assign = jax.random.randint(jax.random.key(1), (N,), 0, 64)
 db = centers[assign] + 0.5 * jax.random.normal(jax.random.key(2), (N, D))
 db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
 
-index = mips.build("ivf", db, kmeans_iters=5)
+index = mips.build_index(mips.IVFConfig(kmeans_iters=5, n_probe=16), db)
 k = l = default_kl(N)
 m_cap = int(l + 6 * math.sqrt(l) + 8)
 
@@ -38,7 +38,7 @@ def step_exact(state, key):
 @jax.jit
 def step_ours(state, key):
     theta = db[state] / TAU
-    topk = mips.topk("ivf", index, theta, k, n_probe=16)
+    topk = index.topk(theta, k)
     res = sample_fixed_b(
         key, topk, N, lambda ids: db[ids] @ theta, l=l, m_cap=m_cap
     )

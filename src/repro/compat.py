@@ -1,0 +1,46 @@
+"""Version-compatibility shims (single source of truth for the repo).
+
+``shard_map`` lives at ``jax.experimental.shard_map`` on jax 0.4.x (where
+its replication-check kwarg is ``check_rep``) and at ``jax.shard_map`` on
+jax >= 0.5 (kwarg renamed to ``check_vma``). Likewise ``jax.lax.axis_size``
+only exists on newer jax. The repo writes against the new spellings; this
+shim backfills them on 0.4.x so every caller imports
+``from repro.compat import shard_map, axis_size`` and never touches the
+jax module layout directly.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+try:  # jax >= 0.5: public top-level API
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x: experimental module, old kwarg name
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with a stable signature across jax versions."""
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )
+
+
+try:  # jax >= 0.5
+    axis_size = jax.lax.axis_size
+except AttributeError:  # jax 0.4.x: the axis frame IS the (static) size
+
+    def axis_size(axis_name) -> int:
+        """Static size of a named mapped axis (inside shard_map/pmap)."""
+        import jax.core
+
+        frame = jax.core.axis_frame(axis_name)
+        return int(getattr(frame, "size", frame))

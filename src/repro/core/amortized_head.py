@@ -75,12 +75,24 @@ class HeadLossOut(NamedTuple):
     log_z: jax.Array  # (T,) partition estimates (diagnostics)
 
 
-def make_index(cfg: HeadConfig, emb: jax.Array) -> Any:
-    """Build the MIPS index over the (logical) embedding rows. Host-side."""
+def make_index(cfg: HeadConfig, emb: jax.Array) -> mips.Index | None:
+    """Build the MIPS index over the (logical) embedding rows.
+
+    Returns a stateful :class:`repro.core.mips.Index` (a jax pytree — pass
+    it through jitted steps as an argument and ``index.refresh(emb)`` it
+    when the embedding drifts; see train/trainer.py), or None when the
+    exact top-k path applies.
+    """
     cfg = cfg.resolved()
     if cfg.mode == "exact" or cfg.mips == "exact":
         return None  # exact top-k runs directly off `emb`
-    return mips.build(cfg.mips, emb[: cfg.n])
+    if cfg.mips == "ivf":
+        mips_cfg = mips.IVFConfig(n_probe=cfg.n_probe, use_kernel=cfg.use_kernel)
+    elif cfg.mips == "lsh":
+        mips_cfg = mips.LSHConfig()
+    else:
+        raise ValueError(f"unknown head MIPS backend {cfg.mips!r}")
+    return mips.build_index(mips_cfg, emb[: cfg.n])
 
 
 def _topk(cfg: HeadConfig, emb: jax.Array, index: Any, h: jax.Array) -> TopK:
@@ -89,9 +101,7 @@ def _topk(cfg: HeadConfig, emb: jax.Array, index: Any, h: jax.Array) -> TopK:
         scores = h.astype(jnp.float32) @ emb[: cfg.n].astype(jnp.float32).T
         vals, ids = jax.lax.top_k(scores, cfg.k)
         return TopK(ids.astype(jnp.int32), vals)
-    return mips.topk_batch(
-        cfg.mips, index, h, cfg.k, n_probe=cfg.n_probe, use_kernel=cfg.use_kernel
-    )
+    return index.topk_batch(h, cfg.k)
 
 
 def _pad_chunk(x: jax.Array, chunk: int) -> tuple[jax.Array, int]:

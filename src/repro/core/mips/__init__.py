@@ -1,31 +1,38 @@
-"""MIPS indexes: exact oracle, IVF (production), SRP-LSH (theory reference).
+"""MIPS indexes as a stateful, jit-compatible Index API (DESIGN.md §7).
 
-Uniform interface::
+Backends: exact oracle, IVF (production), SRP-LSH (theory reference).
+The per-backend config dataclass selects the backend — there is no string
+dispatch::
 
-    state = mips.build(name, db, **cfg)
-    topk  = mips.topk_batch(name, state, q, k, **query_cfg)  # TopK[(b,k)]
+    from repro.core import mips
+
+    index = mips.build_index(mips.IVFConfig(n_probe=16), db)
+    topk  = index.topk_batch(q, k)        # TopK[(b, k)]
+    index = index.refresh(new_db)         # warm-started, shape-stable
+    index.memory_bytes()
+
+Index objects are jax pytrees (config in the treedef, state as leaves), so
+they pass through ``jit`` as plain arguments and can be rebuilt on device.
 """
 from __future__ import annotations
 
-from typing import Any
-
-import jax
-
 from repro.core.gumbel import TopK
-from repro.core.mips import exact, ivf, lsh
+from repro.core.mips.base import Index, build_index, register_backend, state_bytes
+from repro.core.mips.exact import ExactConfig, ExactIndex
+from repro.core.mips.ivf import IVFConfig, IVFIndex, IVFState
+from repro.core.mips.lsh import LSHConfig, LSHIndex
 
-_REGISTRY = {"exact": exact, "ivf": ivf, "lsh": lsh}
-
-__all__ = ["build", "topk", "topk_batch", "exact", "ivf", "lsh", "TopK"]
-
-
-def build(name: str, db: jax.Array, **cfg: Any):
-    return _REGISTRY[name].build(db, **cfg)
-
-
-def topk(name: str, state, q: jax.Array, k: int, **cfg: Any) -> TopK:
-    return _REGISTRY[name].topk(state, q, k, **cfg)
-
-
-def topk_batch(name: str, state, q: jax.Array, k: int, **cfg: Any) -> TopK:
-    return _REGISTRY[name].topk_batch(state, q, k, **cfg)
+__all__ = [
+    "Index",
+    "build_index",
+    "register_backend",
+    "state_bytes",
+    "ExactConfig",
+    "ExactIndex",
+    "IVFConfig",
+    "IVFIndex",
+    "IVFState",
+    "LSHConfig",
+    "LSHIndex",
+    "TopK",
+]

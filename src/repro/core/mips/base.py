@@ -1,0 +1,109 @@
+"""Stateful MIPS Index API (DESIGN.md §7).
+
+An :class:`Index` owns (a) a frozen per-backend config dataclass and (b) a
+device-resident state pytree. Index objects ARE jax pytrees: the config
+rides in the static treedef, the state arrays are leaves. That makes an
+index a first-class value of the system — it can be passed through ``jit``
+boundaries as an argument (no recompilation when only its contents change),
+donated, checkpointed, and rebuilt *inside* one XLA program::
+
+    cfg   = IVFConfig(n_probe=16)
+    index = mips.build_index(cfg, db)     # on-device build (one XLA program)
+    topk  = index.topk_batch(q, k)        # jit-compatible query
+    index = index.refresh(new_db)         # warm-started, shape-stable rebuild
+    index.memory_bytes()                  # device-HBM accounting
+
+``refresh`` preserves the pytree structure (same cluster/bucket geometry, so
+identical array shapes): during learning the training step and the refresh
+step each compile exactly once, and the periodically refreshed index flows
+through the jitted train step as a plain argument.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.gumbel import TopK
+
+__all__ = ["Index", "build_index", "register_backend", "state_bytes"]
+
+# config dataclass type -> index class; populated by register_backend at
+# import time of each backend module (exact / ivf / lsh).
+_BACKENDS: dict[type, type] = {}
+
+
+def register_backend(config_cls: type):
+    """Class decorator mapping a config dataclass to its Index class."""
+
+    def wrap(index_cls: type) -> type:
+        _BACKENDS[config_cls] = index_cls
+        return index_cls
+
+    return wrap
+
+
+@runtime_checkable
+class Index(Protocol):
+    """A built MIPS index over a database of feature rows ``(n, d)``.
+
+    Implementations must be registered jax pytrees whose treedef carries
+    the config and whose leaves are the state arrays, so that ``topk`` /
+    ``topk_batch`` are traceable under ``jit`` with the index passed as an
+    argument. ``refresh`` must preserve the pytree structure; whether it is
+    itself jit-traceable is backend-dependent (IVF: yes, one XLA program;
+    LSH: host-side rebuild) — generic callers should invoke it eagerly.
+    """
+
+    config: Any
+
+    @classmethod
+    def build(cls, db: jax.Array, config: Any) -> "Index":
+        """Construct the index over ``db``."""
+        ...
+
+    def refresh(self, db: jax.Array) -> "Index":
+        """Rebuild over a drifted ``db`` of the SAME shape, warm-starting
+        from the current state; returns an index with the same pytree
+        structure (jit/donation friendly)."""
+        ...
+
+    def topk(self, q: jax.Array, k: int) -> TopK:
+        """(d,) query -> TopK[(k,)]."""
+        ...
+
+    def topk_batch(self, q: jax.Array, k: int) -> TopK:
+        """(b, d) queries -> TopK[(b, k)]."""
+        ...
+
+    def memory_bytes(self) -> int:
+        """Device memory held by the index state."""
+        ...
+
+
+def build_index(config: Any, db: jax.Array) -> Index:
+    """Build the index backend matching ``type(config)``.
+
+    This replaces the old string-keyed ``mips.build("name", ...)`` module
+    dispatch: the config dataclass *is* the backend selector, so query-time
+    knobs (n_probe, kernels, ...) are fixed at build time and travel with
+    the index.
+    """
+    try:
+        cls = _BACKENDS[type(config)]
+    except KeyError:
+        known = sorted(c.__name__ for c in _BACKENDS)
+        raise TypeError(
+            f"no index backend registered for {type(config).__name__}; "
+            f"known configs: {known}"
+        ) from None
+    return cls.build(db, config)
+
+
+def state_bytes(tree: Any) -> int:
+    """Total bytes of the array leaves of ``tree``."""
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "dtype")
+    )

@@ -6,33 +6,59 @@ approximate indexes. Also the default head path in the distributed dry-run
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.gumbel import TopK
+from repro.core.mips import base
 
-__all__ = ["ExactState", "build", "topk", "topk_batch"]
-
-
-class ExactState(NamedTuple):
-    db: jax.Array  # (n, d)
+__all__ = ["ExactConfig", "ExactIndex"]
 
 
-def build(db: jax.Array) -> ExactState:
-    return ExactState(db=db)
+@dataclasses.dataclass(frozen=True)
+class ExactConfig:
+    """Brute force has no knobs; the dataclass exists as the backend key."""
 
 
-def topk(state: ExactState, q: jax.Array, k: int) -> TopK:
-    """q: (d,) -> exact TopK."""
-    scores = state.db @ q  # (n,)
-    vals, ids = jax.lax.top_k(scores, k)
-    return TopK(ids.astype(jnp.int32), vals.astype(jnp.float32))
+@base.register_backend(ExactConfig)
+@jax.tree_util.register_pytree_node_class
+class ExactIndex:
+    """Stateful oracle index: state is the database itself."""
 
+    def __init__(self, config: ExactConfig, db: jax.Array):
+        self.config = config
+        self.db = db  # (n, d)
 
-def topk_batch(state: ExactState, q: jax.Array, k: int) -> TopK:
-    """q: (b, d) -> TopK with leading batch dim."""
-    scores = q @ state.db.T  # (b, n)
-    vals, ids = jax.lax.top_k(scores, k)
-    return TopK(ids.astype(jnp.int32), vals.astype(jnp.float32))
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def build(cls, db: jax.Array, config: ExactConfig | None = None):
+        return cls(config or ExactConfig(), db)
+
+    def refresh(self, db: jax.Array) -> "ExactIndex":
+        return ExactIndex(self.config, db)
+
+    # -------------------------------------------------------------- queries
+    def topk(self, q: jax.Array, k: int) -> TopK:
+        """q: (d,) -> exact TopK."""
+        scores = self.db @ q  # (n,)
+        vals, ids = jax.lax.top_k(scores, k)
+        return TopK(ids.astype(jnp.int32), vals.astype(jnp.float32))
+
+    def topk_batch(self, q: jax.Array, k: int) -> TopK:
+        """q: (b, d) -> TopK with leading batch dim."""
+        scores = q @ self.db.T  # (b, n)
+        vals, ids = jax.lax.top_k(scores, k)
+        return TopK(ids.astype(jnp.int32), vals.astype(jnp.float32))
+
+    def memory_bytes(self) -> int:
+        return base.state_bytes(self.db)
+
+    # --------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (self.db,), self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        return cls(config, *children)

@@ -5,17 +5,27 @@ TPU adaptation (DESIGN.md §3): clusters are *padded to a fixed capacity* so
 the probe is two dense MXU matmuls — ``q @ centroidsᵀ`` then a gather+score
 over the ``n_probe`` selected clusters — with fully static shapes. Rows that
 overflow their cluster's capacity spill into an always-scanned overflow
-buffer, so coverage of the database is exact (approximation comes only from
-probing a subset of clusters, exactly as in FAISS-style IVF).
+buffer, so coverage of the database is exact while ``state.spill_count == 0``
+(the build reports any drop; approximation otherwise comes only from probing
+a subset of clusters, exactly as in FAISS-style IVF).
 
-The build step is host-side (numpy-flavored jnp, python loop over Lloyd
-iterations): it runs rarely (preprocessing / periodic refresh during
-training) and its output is a static pytree the jitted query path closes
-over. The gather+score hot loop has a Pallas kernel
+The build runs ON DEVICE as one XLA program (DESIGN.md §7): jitted Lloyd
+iterations whose centroid update is a ``segment_sum``, followed by a
+sort/scan packing of rows into the padded member tables — no host round-trip,
+which is what keeps periodic refresh cheap during learning, where the
+embedding table (the database) drifts every optimizer step. ``refresh``
+warm-starts Lloyd from the previous centroids and preserves all shapes, so
+a refreshed index is a drop-in replacement inside a compiled train step.
+A host-side numpy build (``device_build=False``) is kept as the reference
+implementation and benchmark baseline (benchmarks/index_refresh.py).
+
+The gather+score hot loop has a Pallas kernel
 (:mod:`repro.kernels.ivf_gather_score`) selected via ``use_kernel``.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import math
 from typing import NamedTuple
 
@@ -24,8 +34,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gumbel import TopK
+from repro.core.mips import base
 
-__all__ = ["IVFState", "build", "topk", "topk_batch"]
+__all__ = ["IVFConfig", "IVFIndex", "IVFState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFConfig:
+    """Build- and query-time knobs for the IVF index.
+
+    Geometry (cluster count, padded capacity, overflow size) is derived
+    from the database size at build time and then FROZEN: ``refresh`` keeps
+    it, so the state pytree structure never changes across rebuilds.
+    """
+
+    n_clusters: int | None = None  # None -> max(4, sqrt(n))
+    cap_factor: float = 3.0  # padded capacity ≈ cap_factor · n / n_clusters
+    overflow_frac: float = 1.0 / 16.0  # overflow buffer ≈ n/16 rows
+    kmeans_iters: int = 10  # Lloyd iterations for a cold build
+    refresh_iters: int = 2  # warm-started iterations per refresh
+    seed: int = 0
+    n_probe: int = 8  # clusters probed per query
+    use_kernel: bool = False  # Pallas gather+score kernel on the probe
+    device_build: bool = True  # False: host-numpy reference build
 
 
 class IVFState(NamedTuple):
@@ -34,6 +65,7 @@ class IVFState(NamedTuple):
     member_vecs: jax.Array  # (n_c, cap, d) — gathered copy, 0 padded
     overflow_ids: jax.Array  # (o_cap,) i32, -1 padded
     overflow_vecs: jax.Array  # (o_cap, d)
+    spill_count: jax.Array  # () i32 — rows that fit neither table (0 = exact)
 
     @property
     def n_clusters(self) -> int:
@@ -44,65 +76,166 @@ class IVFState(NamedTuple):
         return self.member_ids.shape[1]
 
 
-def _kmeans(db: np.ndarray, n_c: int, iters: int, seed: int) -> np.ndarray:
-    """Lloyd's algorithm, host-side. Returns (n_c, d) centroids."""
-    rng = np.random.default_rng(seed)
+def _geometry(n: int, cfg: IVFConfig) -> tuple[int, int, int]:
+    """Static (n_clusters, cap, o_cap) for a database of n rows."""
+    n_c = min(cfg.n_clusters or max(4, int(math.sqrt(n))), n)
+    cap = max(8, int(math.ceil(cfg.cap_factor * n / n_c / 8.0)) * 8)
+    o_cap = max(8, int(math.ceil(cfg.overflow_frac * n / 8.0)) * 8)
+    return n_c, cap, o_cap
+
+
+# --------------------------------------------------------------------------
+# on-device build: jitted Lloyd k-means + sort/scan padded packing
+# --------------------------------------------------------------------------
+def _assign_clusters(dbf: jax.Array, cent: jax.Array) -> jax.Array:
+    """Nearest centroid per row: dist² = |x|² - 2x·c + |c|² (|x|² constant)."""
+    sq_c = (cent * cent).sum(-1)
+    return jnp.argmin(sq_c[None, :] - 2.0 * (dbf @ cent.T), axis=1).astype(
+        jnp.int32
+    )
+
+
+def _lloyd(dbf: jax.Array, cent: jax.Array, n_c: int, iters: int) -> jax.Array:
+    """Lloyd iterations with segment_sum centroid updates (empty clusters
+    keep their previous centroid, matching the host reference)."""
+    n = dbf.shape[0]
+
+    def body(_, cent):
+        assign = _assign_clusters(dbf, cent)
+        sums = jax.ops.segment_sum(dbf, assign, num_segments=n_c)
+        counts = jax.ops.segment_sum(
+            jnp.ones((n,), jnp.float32), assign, num_segments=n_c
+        )
+        return jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cent
+        )
+
+    return jax.lax.fori_loop(0, iters, body, cent)
+
+
+def _pack(
+    db: jax.Array, assign: jax.Array, n_c: int, cap: int, o_cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Capacity-padded packing with static shapes, no host loop.
+
+    Rows are sorted by cluster id; a row's rank within its cluster (its
+    sorted position minus the cluster's start offset) selects its slot:
+    rank < cap goes to ``member_ids[cluster, rank]``, the rest spill to the
+    overflow buffer in sorted order. Out-of-range scatter positions use
+    ``mode="drop"``, and the count of rows dropped even from the overflow
+    buffer is returned as ``spill_count`` (0 on any sane geometry).
+    """
     n = db.shape[0]
-    cent = db[rng.choice(n, size=n_c, replace=False)].astype(np.float32)
-    db32 = db.astype(np.float32)
+    order = jnp.argsort(assign, stable=True).astype(jnp.int32)
+    sorted_assign = assign[order]
+    counts = jax.ops.segment_sum(
+        jnp.ones((n,), jnp.int32), assign, num_segments=n_c
+    )
+    starts = jnp.cumsum(counts) - counts  # (n_c,) first sorted pos per cluster
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sorted_assign]
+    in_table = rank < cap
+
+    flat_pos = jnp.where(in_table, sorted_assign * cap + rank, n_c * cap)
+    member_ids = (
+        jnp.full((n_c * cap,), -1, jnp.int32)
+        .at[flat_pos]
+        .set(order, mode="drop")
+        .reshape(n_c, cap)
+    )
+    ovf_rank = jnp.cumsum((~in_table).astype(jnp.int32)) - 1
+    ovf_pos = jnp.where(~in_table, ovf_rank, o_cap)
+    overflow_ids = (
+        jnp.full((o_cap,), -1, jnp.int32).at[ovf_pos].set(order, mode="drop")
+    )
+    n_ovf = (~in_table).sum()
+    spill = jnp.maximum(n_ovf - o_cap, 0).astype(jnp.int32)
+
+    member_vecs = jnp.where(
+        (member_ids >= 0)[..., None], db[jnp.maximum(member_ids, 0)], 0
+    ).astype(db.dtype)
+    overflow_vecs = jnp.where(
+        (overflow_ids >= 0)[..., None], db[jnp.maximum(overflow_ids, 0)], 0
+    ).astype(db.dtype)
+    return member_ids, member_vecs, overflow_ids, overflow_vecs, spill
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_c", "cap", "o_cap", "iters", "seed")
+)
+def _device_build(
+    db: jax.Array,
+    init_cent: jax.Array | None,
+    *,
+    n_c: int,
+    cap: int,
+    o_cap: int,
+    iters: int,
+    seed: int,
+) -> IVFState:
+    """Full index (re)build as one XLA program: k-means + pack, no host sync.
+
+    ``init_cent=None`` cold-starts from a seeded sample of db rows;
+    passing the previous centroids warm-starts a refresh.
+    """
+    dbf = db.astype(jnp.float32)
+    if init_cent is None:
+        ids = jax.random.permutation(jax.random.key(seed), db.shape[0])[:n_c]
+        init_cent = dbf[ids]
+    cent = _lloyd(dbf, init_cent.astype(jnp.float32), n_c, iters)
+    assign = _assign_clusters(dbf, cent)
+    member_ids, member_vecs, overflow_ids, overflow_vecs, spill = _pack(
+        db, assign, n_c, cap, o_cap
+    )
+    return IVFState(
+        cent, member_ids, member_vecs, overflow_ids, overflow_vecs, spill
+    )
+
+
+# --------------------------------------------------------------------------
+# host reference build (numpy) — benchmark baseline + parity oracle
+# --------------------------------------------------------------------------
+def _host_build(
+    db: jax.Array, *, n_c: int, cap: int, o_cap: int, iters: int, seed: int
+) -> IVFState:
+    db_np = np.asarray(db, dtype=np.float32)
+    n = db_np.shape[0]
+    # identical seeded init to the device path => parity given same Lloyd math
+    init_ids = np.asarray(
+        jax.random.permutation(jax.random.key(seed), n)[:n_c]
+    )
+    cent = db_np[init_ids].copy()
     for _ in range(iters):
-        # dist^2 = |x|^2 - 2 x·c + |c|^2 ; argmin over c (|x|^2 constant)
         sq_c = (cent * cent).sum(-1)
-        assign = np.argmin(sq_c[None, :] - 2.0 * (db32 @ cent.T), axis=1)
-        # vectorized per-cluster mean via bincount
+        assign = np.argmin(sq_c[None, :] - 2.0 * (db_np @ cent.T), axis=1)
         counts = np.bincount(assign, minlength=n_c).astype(np.float32)
         sums = np.zeros_like(cent)
-        np.add.at(sums, assign, db32)
+        np.add.at(sums, assign, db_np)
         nonempty = counts > 0
         cent[nonempty] = sums[nonempty] / counts[nonempty, None]
-        # empty clusters keep their previous centroid (harmless)
-    return cent
-
-
-def build(
-    db: jax.Array,
-    *,
-    n_clusters: int | None = None,
-    cap_factor: float = 3.0,
-    kmeans_iters: int = 10,
-    seed: int = 0,
-) -> IVFState:
-    """Build the padded IVF index. Host-side; returns device arrays."""
-    db_np = np.asarray(db, dtype=np.float32)
-    n, d = db_np.shape
-    if n_clusters is None:
-        n_clusters = max(4, int(math.sqrt(n)))
-    n_c = min(n_clusters, n)
-    cent = _kmeans(db_np, n_c, kmeans_iters, seed)
     sq_c = (cent * cent).sum(-1)
     assign = np.argmin(sq_c[None, :] - 2.0 * (db_np @ cent.T), axis=1)
 
-    cap = max(8, int(math.ceil(cap_factor * n / n_c / 8.0)) * 8)
     member_ids = np.full((n_c, cap), -1, dtype=np.int32)
-    overflow: list[int] = []
+    overflow_ids = np.full((o_cap,), -1, dtype=np.int32)
     counts = np.zeros(n_c, dtype=np.int64)
+    n_ovf = 0
     for i in range(n):
         cl = assign[i]
         if counts[cl] < cap:
             member_ids[cl, counts[cl]] = i
             counts[cl] += 1
         else:
-            overflow.append(i)
-    o_cap = max(8, int(math.ceil(len(overflow) / 8.0)) * 8)
-    overflow_ids = np.full((o_cap,), -1, dtype=np.int32)
-    if overflow:
-        overflow_ids[: len(overflow)] = np.asarray(overflow, dtype=np.int32)
+            if n_ovf < o_cap:
+                overflow_ids[n_ovf] = i
+            n_ovf += 1
+    spill = max(0, n_ovf - o_cap)
 
+    db_dt = np.asarray(db)
     member_vecs = np.where(
-        (member_ids >= 0)[..., None], db_np[np.maximum(member_ids, 0)], 0.0
+        (member_ids >= 0)[..., None], db_dt[np.maximum(member_ids, 0)], 0
     )
     overflow_vecs = np.where(
-        (overflow_ids >= 0)[..., None], db_np[np.maximum(overflow_ids, 0)], 0.0
+        (overflow_ids >= 0)[..., None], db_dt[np.maximum(overflow_ids, 0)], 0
     )
     return IVFState(
         centroids=jnp.asarray(cent),
@@ -110,44 +243,110 @@ def build(
         member_vecs=jnp.asarray(member_vecs, dtype=db.dtype),
         overflow_ids=jnp.asarray(overflow_ids),
         overflow_vecs=jnp.asarray(overflow_vecs, dtype=db.dtype),
+        spill_count=jnp.asarray(spill, jnp.int32),
     )
 
 
-def topk(
-    state: IVFState, q: jax.Array, k: int, *, n_probe: int = 8, use_kernel: bool = False
-) -> TopK:
-    """Approximate top-k for a single query (d,)."""
-    res = topk_batch(state, q[None], k, n_probe=n_probe, use_kernel=use_kernel)
-    return TopK(res.ids[0], res.values[0])
+# --------------------------------------------------------------------------
+# the Index
+# --------------------------------------------------------------------------
+@base.register_backend(IVFConfig)
+@jax.tree_util.register_pytree_node_class
+class IVFIndex:
+    """Stateful IVF index: frozen config + device state pytree."""
 
+    def __init__(self, config: IVFConfig, state: IVFState):
+        self.config = config
+        self.state = state
 
-def topk_batch(
-    state: IVFState, q: jax.Array, k: int, *, n_probe: int = 8, use_kernel: bool = False
-) -> TopK:
-    """Approximate top-k for a query batch (b, d) -> TopK[(b,k), (b,k)]."""
-    b, d = q.shape
-    qf = q.astype(jnp.float32)
-    c_scores = qf @ state.centroids.T  # (b, n_c)
-    _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def build(cls, db: jax.Array, config: IVFConfig | None = None):
+        cfg = config or IVFConfig()
+        n_c, cap, o_cap = _geometry(db.shape[0], cfg)
+        if cfg.device_build:
+            state = _device_build(
+                db, None, n_c=n_c, cap=cap, o_cap=o_cap,
+                iters=cfg.kmeans_iters, seed=cfg.seed,
+            )
+        else:
+            state = _host_build(
+                db, n_c=n_c, cap=cap, o_cap=o_cap,
+                iters=cfg.kmeans_iters, seed=cfg.seed,
+            )
+        return cls(cfg, state)
 
-    if use_kernel:
-        from repro.kernels import ops as kops
+    def refresh(self, db: jax.Array, *, iters: int | None = None) -> "IVFIndex":
+        """Warm-started on-device rebuild over a drifted db (same n, d).
 
-        scores, ids = kops.ivf_gather_score(
-            state.member_vecs, state.member_ids, probe, qf
-        )  # (b, n_probe*cap)
-    else:
-        vecs = state.member_vecs[probe]  # (b, n_probe, cap, d)
-        ids = state.member_ids[probe].reshape(b, -1)  # (b, n_probe*cap)
-        scores = jnp.einsum("bpcd,bd->bpc", vecs.astype(jnp.float32), qf)
-        scores = scores.reshape(b, -1)
+        Lloyd starts from the CURRENT centroids (they are near-optimal for
+        small drift, so ``refresh_iters`` << ``kmeans_iters`` suffices) and
+        the geometry is preserved, so the returned index has the exact same
+        pytree structure — safe to swap into a compiled train/serve step.
+        """
+        st = self.state
+        state = _device_build(
+            db,
+            st.centroids,
+            n_c=st.n_clusters,
+            cap=st.cap,
+            o_cap=st.overflow_ids.shape[0],
+            iters=self.config.refresh_iters if iters is None else iters,
+            seed=self.config.seed,
+        )
+        return IVFIndex(self.config, state)
 
-    o_scores = state.overflow_vecs.astype(jnp.float32) @ qf.T  # (o_cap, b)
-    scores = jnp.concatenate([scores, o_scores.T], axis=1)
-    ids = jnp.concatenate(
-        [ids, jnp.broadcast_to(state.overflow_ids, (b,) + state.overflow_ids.shape)],
-        axis=1,
-    )
-    scores = jnp.where(ids >= 0, scores, -jnp.inf)
-    vals, pos = jax.lax.top_k(scores, k)
-    return TopK(jnp.take_along_axis(ids, pos, axis=1), vals)
+    # -------------------------------------------------------------- queries
+    def topk(self, q: jax.Array, k: int, *, n_probe: int | None = None) -> TopK:
+        """Approximate top-k for a single query (d,)."""
+        res = self.topk_batch(q[None], k, n_probe=n_probe)
+        return TopK(res.ids[0], res.values[0])
+
+    def topk_batch(
+        self, q: jax.Array, k: int, *, n_probe: int | None = None
+    ) -> TopK:
+        """Approximate top-k for a query batch (b, d) -> TopK[(b,k), (b,k)]."""
+        state = self.state
+        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
+        b, d = q.shape
+        qf = q.astype(jnp.float32)
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+
+        if self.config.use_kernel:
+            from repro.kernels import ops as kops
+
+            scores, ids = kops.ivf_gather_score(
+                state.member_vecs, state.member_ids, probe, qf
+            )  # (b, n_probe*cap)
+        else:
+            vecs = state.member_vecs[probe]  # (b, n_probe, cap, d)
+            ids = state.member_ids[probe].reshape(b, -1)  # (b, n_probe*cap)
+            scores = jnp.einsum("bpcd,bd->bpc", vecs.astype(jnp.float32), qf)
+            scores = scores.reshape(b, -1)
+
+        o_scores = state.overflow_vecs.astype(jnp.float32) @ qf.T  # (o_cap, b)
+        scores = jnp.concatenate([scores, o_scores.T], axis=1)
+        ids = jnp.concatenate(
+            [
+                ids,
+                jnp.broadcast_to(
+                    state.overflow_ids, (b,) + state.overflow_ids.shape
+                ),
+            ],
+            axis=1,
+        )
+        scores = jnp.where(ids >= 0, scores, -jnp.inf)
+        vals, pos = jax.lax.top_k(scores, k)
+        return TopK(jnp.take_along_axis(ids, pos, axis=1), vals)
+
+    def memory_bytes(self) -> int:
+        return base.state_bytes(self.state)
+
+    # --------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (self.state,), self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        return cls(config, *children)

@@ -10,34 +10,31 @@ TPU adaptation (DESIGN.md §3): buckets are padded member tables (as in the
 IVF index) so lookups are static gathers, and the multi-table union of
 candidates is scored densely. This index exists to validate the theory path
 (approximate-top-k with bounded gap, Def 3.1) — the production path is IVF,
-matching the paper's own experiments.
+matching the paper's own experiments. Accordingly the build stays host-side;
+``refresh`` rehashes a drifted database with the SAME projections and bucket
+geometry, so the state pytree structure is preserved across rebuilds.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gumbel import TopK
+from repro.core.mips import base
 
-__all__ = ["LSHState", "build", "topk", "topk_batch"]
+__all__ = ["LSHConfig", "LSHIndex"]
 
 
-class LSHState(NamedTuple):
-    proj: jax.Array  # (n_tables, d+1, n_bits) f32 — SRP hyperplanes
-    table_ids: jax.Array  # (n_tables, 2**n_bits, bucket_cap) i32, -1 padded
-    db_aug: jax.Array  # (n, d+1) — norm-completed database (for scoring)
-
-    @property
-    def n_tables(self) -> int:
-        return self.proj.shape[0]
-
-    @property
-    def n_bits(self) -> int:
-        return self.proj.shape[2]
+@dataclasses.dataclass(frozen=True)
+class LSHConfig:
+    n_tables: int = 8
+    n_bits: int = 10
+    bucket_cap: int | None = None  # None -> ~4x the expected bucket load
+    seed: int = 0
 
 
 def _hash_codes(x_aug: np.ndarray, proj: np.ndarray) -> np.ndarray:
@@ -47,27 +44,18 @@ def _hash_codes(x_aug: np.ndarray, proj: np.ndarray) -> np.ndarray:
     return bits @ pows
 
 
-def build(
-    db: jax.Array,
-    *,
-    n_tables: int = 8,
-    n_bits: int = 10,
-    bucket_cap: int | None = None,
-    seed: int = 0,
-) -> LSHState:
-    db_np = np.asarray(db, dtype=np.float32)
-    n, d = db_np.shape
+def _build_tables(
+    db_np: np.ndarray, proj: np.ndarray, n_bits: int, bucket_cap: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (table_ids (t, 2**bits, cap), db_aug (n, d+1))."""
+    n = db_np.shape[0]
     norms = np.linalg.norm(db_np, axis=1)
     m_norm = float(norms.max()) + 1e-6
     aug = np.sqrt(np.maximum(m_norm**2 - norms**2, 0.0))
     db_aug = np.concatenate([db_np, aug[:, None]], axis=1)
-
-    rng = np.random.default_rng(seed)
-    proj = rng.standard_normal((n_tables, d + 1, n_bits)).astype(np.float32)
     codes = _hash_codes(db_aug, proj)  # (t, n)
 
-    if bucket_cap is None:
-        bucket_cap = max(8, int(math.ceil(4.0 * n / (2**n_bits) / 8.0)) * 8)
+    n_tables = proj.shape[0]
     table_ids = np.full((n_tables, 2**n_bits, bucket_cap), -1, dtype=np.int32)
     counts = np.zeros((n_tables, 2**n_bits), dtype=np.int64)
     for t in range(n_tables):
@@ -78,48 +66,116 @@ def build(
                 counts[t, b] += 1
             # bucket overflow: silently dropped from this table; other
             # tables still cover the point (standard LSH behavior).
-    return LSHState(
-        proj=jnp.asarray(proj),
-        table_ids=jnp.asarray(table_ids),
-        db_aug=jnp.asarray(db_aug),
-    )
+    return table_ids, db_aug
 
 
-def topk_batch(state: LSHState, q: jax.Array, k: int) -> TopK:
-    """(b, d) -> TopK over union of colliding buckets across tables."""
-    b, d = q.shape
-    q_aug = jnp.concatenate([q, jnp.zeros((b, 1), q.dtype)], axis=1)
-    qf = q_aug.astype(jnp.float32)
-    bits = jnp.einsum("bd,tdc->tbc", qf, state.proj) >= 0  # (t, b, bits)
-    pows = (1 << jnp.arange(state.n_bits)).astype(jnp.int32)
-    codes = jnp.tensordot(bits.astype(jnp.int32), pows, axes=1)  # (t, b)
+@base.register_backend(LSHConfig)
+@jax.tree_util.register_pytree_node_class
+class LSHIndex:
+    """Stateful SRP-LSH index: frozen config + (proj, tables, db_aug) state."""
 
-    # gather candidate buckets: (t, b, cap) -> (b, t*cap)
-    cand = jnp.take_along_axis(
-        state.table_ids, codes[:, :, None], axis=1
-    )  # (t, b, cap)
-    cand = jnp.moveaxis(cand, 0, 1).reshape(b, -1)  # (b, t*cap)
-    vecs = state.db_aug[jnp.maximum(cand, 0)]  # (b, t*cap, d+1)
-    scores = jnp.einsum("bcd,bd->bc", vecs, qf)
-    # mask pads and duplicate ids (keep one occurrence per id): sort ids,
-    # mark the first element of each run, scatter the marks back.
-    order = jnp.argsort(cand, axis=1)
-    sorted_c = jnp.take_along_axis(cand, order, axis=1)
-    is_first_sorted = jnp.concatenate(
-        [jnp.ones((b, 1), bool), sorted_c[:, 1:] != sorted_c[:, :-1]], axis=1
-    )
-    first = (
-        jnp.zeros(cand.shape, bool)
-        .at[jnp.arange(b)[:, None], order]
-        .set(is_first_sorted)
-    )
-    valid = (cand >= 0) & first
-    scores = jnp.where(valid, scores, -jnp.inf)
-    vals, pos = jax.lax.top_k(scores, k)
-    ids = jnp.take_along_axis(cand, pos, axis=1)
-    return TopK(ids.astype(jnp.int32), vals)
+    def __init__(
+        self,
+        config: LSHConfig,
+        proj: jax.Array,  # (n_tables, d+1, n_bits) f32 — SRP hyperplanes
+        table_ids: jax.Array,  # (n_tables, 2**n_bits, cap) i32, -1 padded
+        db_aug: jax.Array,  # (n, d+1) — norm-completed db (for scoring)
+    ):
+        self.config = config
+        self.proj = proj
+        self.table_ids = table_ids
+        self.db_aug = db_aug
 
+    @property
+    def n_tables(self) -> int:
+        return self.proj.shape[0]
 
-def topk(state: LSHState, q: jax.Array, k: int) -> TopK:
-    res = topk_batch(state, q[None], k)
-    return TopK(res.ids[0], res.values[0])
+    @property
+    def n_bits(self) -> int:
+        return self.proj.shape[2]
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def build(cls, db: jax.Array, config: LSHConfig | None = None):
+        cfg = config or LSHConfig()
+        db_np = np.asarray(db, dtype=np.float32)
+        n, d = db_np.shape
+        rng = np.random.default_rng(cfg.seed)
+        proj = rng.standard_normal((cfg.n_tables, d + 1, cfg.n_bits)).astype(
+            np.float32
+        )
+        bucket_cap = cfg.bucket_cap or max(
+            8, int(math.ceil(4.0 * n / (2**cfg.n_bits) / 8.0)) * 8
+        )
+        table_ids, db_aug = _build_tables(db_np, proj, cfg.n_bits, bucket_cap)
+        return cls(
+            cfg,
+            proj=jnp.asarray(proj),
+            table_ids=jnp.asarray(table_ids),
+            db_aug=jnp.asarray(db_aug),
+        )
+
+    def refresh(self, db: jax.Array) -> "LSHIndex":
+        """Rehash a drifted db with the SAME projections and bucket_cap."""
+        db_np = np.asarray(db, dtype=np.float32)
+        proj = np.asarray(self.proj)
+        table_ids, db_aug = _build_tables(
+            db_np, proj, self.n_bits, self.table_ids.shape[2]
+        )
+        return LSHIndex(
+            self.config,
+            proj=self.proj,
+            table_ids=jnp.asarray(table_ids),
+            db_aug=jnp.asarray(db_aug),
+        )
+
+    # -------------------------------------------------------------- queries
+    def topk_batch(self, q: jax.Array, k: int) -> TopK:
+        """(b, d) -> TopK over union of colliding buckets across tables."""
+        b, d = q.shape
+        q_aug = jnp.concatenate([q, jnp.zeros((b, 1), q.dtype)], axis=1)
+        qf = q_aug.astype(jnp.float32)
+        bits = jnp.einsum("bd,tdc->tbc", qf, self.proj) >= 0  # (t, b, bits)
+        pows = (1 << jnp.arange(self.n_bits)).astype(jnp.int32)
+        codes = jnp.tensordot(bits.astype(jnp.int32), pows, axes=1)  # (t, b)
+
+        # gather candidate buckets: (t, b, cap) -> (b, t*cap)
+        cand = jnp.take_along_axis(
+            self.table_ids, codes[:, :, None], axis=1
+        )  # (t, b, cap)
+        cand = jnp.moveaxis(cand, 0, 1).reshape(b, -1)  # (b, t*cap)
+        vecs = self.db_aug[jnp.maximum(cand, 0)]  # (b, t*cap, d+1)
+        scores = jnp.einsum("bcd,bd->bc", vecs, qf)
+        # mask pads and duplicate ids (keep one occurrence per id): sort ids,
+        # mark the first element of each run, scatter the marks back.
+        order = jnp.argsort(cand, axis=1)
+        sorted_c = jnp.take_along_axis(cand, order, axis=1)
+        is_first_sorted = jnp.concatenate(
+            [jnp.ones((b, 1), bool), sorted_c[:, 1:] != sorted_c[:, :-1]],
+            axis=1,
+        )
+        first = (
+            jnp.zeros(cand.shape, bool)
+            .at[jnp.arange(b)[:, None], order]
+            .set(is_first_sorted)
+        )
+        valid = (cand >= 0) & first
+        scores = jnp.where(valid, scores, -jnp.inf)
+        vals, pos = jax.lax.top_k(scores, k)
+        ids = jnp.take_along_axis(cand, pos, axis=1)
+        return TopK(ids.astype(jnp.int32), vals)
+
+    def topk(self, q: jax.Array, k: int) -> TopK:
+        res = self.topk_batch(q[None], k)
+        return TopK(res.ids[0], res.values[0])
+
+    def memory_bytes(self) -> int:
+        return base.state_bytes((self.proj, self.table_ids, self.db_aug))
+
+    # --------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (self.proj, self.table_ids, self.db_aug), self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        return cls(config, *children)

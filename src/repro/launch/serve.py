@@ -26,6 +26,11 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--head", default=None,
                     choices=[None, "exact", "topk_only", "amortized"])
+    ap.add_argument("--mips", default=None, choices=[None, "exact", "ivf"],
+                    help="head top-k backend (ivf: stateful IVF index)")
+    ap.add_argument("--vocab", type=int, default=0,
+                    help="override vocab size (e.g. to exercise the "
+                         "amortized head on a smoke config)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -33,6 +38,10 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
     if args.head:
         cfg = cfg.scaled(head_mode=args.head)
+    if args.mips:
+        cfg = cfg.scaled(head_mips=args.mips)
+    if args.vocab:
+        cfg = cfg.scaled(vocab=args.vocab)
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
@@ -52,6 +61,10 @@ def main() -> None:
         "tokens_per_s": round(toks / server.stats["wall_s"], 1),
         "ok_rate": round(server.stats["ok"] / max(server.stats["tokens"], 1), 4),
         "steps": server.stats["steps"],
+        "index_mb": (
+            round(server.index.memory_bytes() / 1e6, 2)
+            if server.index is not None else 0.0
+        ),
     }, indent=1))
 
 

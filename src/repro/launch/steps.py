@@ -36,17 +36,23 @@ def _split_batch(batch: dict, accum: int) -> dict:
 
 
 def make_train_step(model: Model, tcfg: TrainConfig):
-    """Returns train_step(params, opt_state, batch, key)."""
+    """Returns train_step(params, opt_state, batch, key, index=None).
 
-    def loss_for_grad(params, mb, key):
-        loss, metrics = model.loss_fn(params, mb, key)
+    ``index`` is the head's stateful MIPS index (a jax pytree, see
+    core/mips): it flows through as a plain argument, so a refreshed index
+    never retriggers compilation. Gradients do not flow into it — the head
+    only uses it for the stop-gradient top-k probe.
+    """
+
+    def loss_for_grad(params, mb, key, index):
+        loss, metrics = model.loss_fn(params, mb, key, index=index)
         return loss, metrics
 
     grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
 
-    def train_step(params, opt_state, batch, key):
+    def train_step(params, opt_state, batch, key, index=None):
         if tcfg.accum == 1:
-            (loss, metrics), grads = grad_fn(params, batch, key)
+            (loss, metrics), grads = grad_fn(params, batch, key, index)
         else:
             mbs = _split_batch(batch, tcfg.accum)
             keys = jax.random.split(key, tcfg.accum)
@@ -54,7 +60,7 @@ def make_train_step(model: Model, tcfg: TrainConfig):
             def body(carry, xs):
                 g_acc, l_acc = carry
                 mb, kk = xs
-                (l, _), g = grad_fn(params, mb, kk)
+                (l, _), g = grad_fn(params, mb, kk, index)
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g
                 )
@@ -77,20 +83,24 @@ def make_train_step(model: Model, tcfg: TrainConfig):
 
 
 def make_serve_step(model: Model):
-    """serve_step(params, cache, ids, pos, key) -> (next_ids, ok, cache, pos+1)."""
+    """serve_step(params, cache, ids, pos, key, index=None)
+    -> (next_ids, ok, cache, pos+1)."""
 
-    def serve_step(params, cache, ids, pos, key):
-        nxt, ok, cache = model.decode_step(params, cache, ids, pos, key)
+    def serve_step(params, cache, ids, pos, key, index=None):
+        nxt, ok, cache = model.decode_step(
+            params, cache, ids, pos, key, index=index
+        )
         return nxt, ok, cache, pos + 1
 
     return serve_step
 
 
 def make_prefill_step(model: Model, max_seq: int):
-    """prefill_step(params, batch, key) -> (next_ids, ok, pos, cache)."""
+    """prefill_step(params, batch, key, index=None)
+    -> (next_ids, ok, pos, cache)."""
 
-    def prefill_step(params, batch, key):
-        return model.prefill(params, batch, key, max_seq=max_seq)
+    def prefill_step(params, batch, key, index=None):
+        return model.prefill(params, batch, key, max_seq=max_seq, index=index)
 
     return prefill_step
 

@@ -32,6 +32,15 @@ def main() -> None:
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--head", default=None,
                     choices=[None, "exact", "topk_only", "amortized"])
+    ap.add_argument("--mips", default=None, choices=[None, "exact", "ivf"],
+                    help="head top-k backend (ivf: stateful, refreshed index)")
+    ap.add_argument("--vocab", type=int, default=0,
+                    help="override vocab size (e.g. to exercise the "
+                         "amortized head on a smoke config)")
+    ap.add_argument("--index-refresh-every", type=int, default=0,
+                    help="R > 0: refresh the head MIPS index every R steps")
+    ap.add_argument("--index-drift-threshold", type=float, default=0.0,
+                    help="> 0: refresh when relative embedding drift exceeds")
     ap.add_argument("--workdir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
@@ -39,11 +48,17 @@ def main() -> None:
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     if args.head:
         cfg = cfg.scaled(head_mode=args.head)
+    if args.mips:
+        cfg = cfg.scaled(head_mips=args.mips)
+    if args.vocab:
+        cfg = cfg.scaled(vocab=args.vocab)
     run = RunConfig(
         num_steps=args.steps,
         batch=args.batch,
         seq=args.seq,
         ckpt_every=args.ckpt_every,
+        index_refresh_every=args.index_refresh_every,
+        index_drift_threshold=args.index_drift_threshold,
         train=TrainConfig(
             opt=OptConfig(lr=args.lr, total_steps=args.steps),
             accum=args.accum,
@@ -51,6 +66,7 @@ def main() -> None:
     )
     trainer = Trainer(cfg, run, args.workdir)
     result = trainer.train()
+    result["index_refreshes"] = trainer.index_refreshes
     print(json.dumps(result, indent=1))
 
 

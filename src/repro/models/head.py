@@ -32,8 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
-
+from repro.compat import shard_map
 from repro.core.amortized_head import HeadConfig
 from repro.core.complement import sample_complement
 from repro.core.gumbel import TopK, sample_fixed_b

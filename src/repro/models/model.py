@@ -73,8 +73,22 @@ class Model:
             params["embed"] if self.cfg.tie_embeddings else params["out_embed"]
         )
 
+    # ---------------------------------------------------------------- index
+    def make_head_index(self, params):
+        """Build the head's stateful MIPS index over the current output
+        embedding, or None when the exact path applies (exact mode/backend,
+        or the distributed head, which shards exact top-k per TP slice).
+
+        The returned Index is a jax pytree: thread it through the jitted
+        train/serve steps as an argument and ``refresh`` it when the
+        embedding drifts (train/trainer.py does this automatically).
+        """
+        if self.mesh is not None and "model" in self.mesh.shape:
+            return None
+        return ah.make_index(self.head_cfg, self._out_embed(params))
+
     # ---------------------------------------------------------------- loss
-    def loss_fn(self, params, batch, key) -> tuple[jax.Array, dict]:
+    def loss_fn(self, params, batch, key, index=None) -> tuple[jax.Array, dict]:
         """Mean NLL over label positions (+ MoE aux)."""
         cfg = self.cfg
         x, pos, prefix = self._embed_inputs(params, batch)
@@ -93,7 +107,8 @@ class Model:
             log_z = jnp.zeros(())  # diagnostics not returned by dist path
         else:
             out = ah.head_loss(
-                self._out_embed(params), h2, t2, key, self.head_cfg
+                self._out_embed(params), h2, t2, key, self.head_cfg,
+                index=index,
             )
             loss, log_z = out.loss, out.log_z.mean()
         total = loss.mean() + _AUX_WEIGHT * aux
@@ -104,7 +119,7 @@ class Model:
         return transformer.init_cache(self.cfg, batch, max_seq, dtype)
 
     def decode_step(
-        self, params, cache, ids: jax.Array, pos: jax.Array, key
+        self, params, cache, ids: jax.Array, pos: jax.Array, key, index=None
     ) -> tuple[jax.Array, jax.Array, Any]:
         """One serving step: (B,) last ids + (B,) positions -> next ids.
 
@@ -120,12 +135,14 @@ class Model:
                 self.mesh, self._out_embed(params), hq, key, self.head_cfg
             )
         else:
-            res = ah.head_sample(self._out_embed(params), hq, key, self.head_cfg)
+            res = ah.head_sample(
+                self._out_embed(params), hq, key, self.head_cfg, index=index
+            )
             nxt, ok = res.index, res.ok
         return nxt, ok, cache
 
     def prefill(
-        self, params, batch, key, max_seq: int
+        self, params, batch, key, max_seq: int, index=None
     ) -> tuple[jax.Array, jax.Array, jax.Array, Any]:
         """Prompt forward + cache build + first sampled token.
 
@@ -144,7 +161,9 @@ class Model:
                 self.mesh, self._out_embed(params), hq, key, self.head_cfg
             )
         else:
-            res = ah.head_sample(self._out_embed(params), hq, key, self.head_cfg)
+            res = ah.head_sample(
+                self._out_embed(params), hq, key, self.head_cfg, index=index
+            )
             nxt, ok = res.index, res.ok
         return nxt, ok, jnp.full((b,), l, jnp.int32), cache
 

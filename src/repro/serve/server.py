@@ -2,7 +2,10 @@
 
 The serving regime is the paper's sweet spot: the output embedding (the
 MIPS database) is frozen, every decoded token issues a fresh query θ = h,
-and the index is built once at server start — pure amortization.
+and the stateful head index (core/mips) is built once at server start —
+pure amortization. The index rides through the jitted serve step as a
+pytree argument, so a hot-swap (e.g. after a model push, via
+``Server.refresh_index``) never recompiles the step.
 
 ``Server.run`` drives a synchronous decode loop over a slot-based batch:
 finished sequences (EOS or length budget) immediately release their slot
@@ -58,6 +61,14 @@ class Server:
         self.cache = self.model.init_cache(scfg.batch_slots, scfg.max_seq)
         self.key = jax.random.key(scfg.seed)
         self.stats = {"steps": 0, "tokens": 0, "ok": 0, "fallbacks": 0}
+        # head MIPS index: built once over the frozen output embedding
+        self.index = self.model.make_head_index(params)
+        state = getattr(self.index, "state", None)
+        if state is not None and hasattr(state, "spill_count"):
+            spilled = int(state.spill_count)
+            if spilled:  # coverage contract (DESIGN.md §3) violated
+                print(f"[server] WARNING: index build dropped {spilled} "
+                      f"rows — raise IVFConfig.overflow_frac")
 
         @jax.jit
         def _reset_slots(cache, mask):
@@ -71,6 +82,20 @@ class Server:
             return jax.tree.map(one, cache)
 
         self._reset_slots = _reset_slots
+
+    def refresh_index(self, params=None) -> None:
+        """Hot-swap the head index (e.g. after a params push).
+
+        ``refresh`` preserves the index's pytree structure, so the jitted
+        serve step keeps its compiled executable.
+        """
+        if params is not None:
+            self.params = params
+        if self.index is None:
+            self.index = self.model.make_head_index(self.params)
+        else:
+            emb = self.model._out_embed(self.params)
+            self.index = self.index.refresh(emb[: self.model.head_cfg.n])
 
     def run(self, prompts: list[list[int]]) -> list[RequestResult]:
         """Decode all prompts with continuous batching. Prompts are fed
@@ -113,7 +138,7 @@ class Server:
             self.key, k = jax.random.split(self.key)
             nxt, ok, self.cache, pos = self.step_fn(
                 self.params, self.cache, jnp.asarray(ids_h),
-                jnp.asarray(pos_h), k,
+                jnp.asarray(pos_h), k, self.index,
             )
             nxt_h = np.asarray(nxt)
             ok_h = np.asarray(ok)

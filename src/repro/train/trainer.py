@@ -1,9 +1,21 @@
 """Training loop: deterministic resume, preemption handling, straggler
-watchdog, periodic MIPS-index refresh, async checkpoints.
+watchdog, staleness-aware MIPS-index refresh, async checkpoints.
+
+Index refresh during learning (DESIGN.md §7): when the head uses an
+approximate MIPS index (``head_mips="ivf"``), the output embedding — the
+index's database — drifts every optimizer step, so the index goes stale.
+The trainer snapshots the embedding rows at every (re)build, tracks the
+relative L2 (Frobenius) drift against that snapshot, and triggers an
+on-device warm-started ``index.refresh`` every ``index_refresh_every``
+steps and/or whenever the drift exceeds ``index_drift_threshold``. The
+index is a jax pytree argument of the jitted train step, so refreshes
+never retrigger compilation.
 
 Fault-tolerance contract (DESIGN.md §6):
 * every state element (params, optimizer, data cursor, RNG) lives in the
-  checkpoint => restart-identical training;
+  checkpoint => restart-identical training (the MIPS index is NOT
+  checkpointed: it is a pure function of the params, rebuilt on restore —
+  a resume therefore counts as a refresh);
 * SIGTERM or a ``PREEMPT`` flag file triggers save-and-exit with a clean
   return code, matching cluster preemption semantics;
 * per-step wall-clock is tracked with an EMA — steps slower than
@@ -44,7 +56,8 @@ class RunConfig:
     batch: int = 8
     seq: int = 256
     straggler_factor: float = 3.0
-    index_refresh_every: int = 0  # >0: rebuild IVF index this often
+    index_refresh_every: int = 0  # R > 0: refresh the head index every R steps
+    index_drift_threshold: float = 0.0  # > 0: refresh when rel. L2 drift exceeds
     train: steps_lib.TrainConfig = dataclasses.field(
         default_factory=steps_lib.TrainConfig
     )
@@ -73,6 +86,14 @@ class Trainer:
         self._preempted = False
         self.straggler_count = 0
         self.metrics_log: list[dict] = []
+        # ---- staleness-aware head-index refresh (DESIGN.md §7) ----
+        self.head_index = None  # stateful MIPS index (None => exact path)
+        self.index_refreshes = 0
+        self._index_snapshot = None  # embedding rows at last (re)build
+        self._drift_fn = jax.jit(
+            lambda emb, snap: jnp.linalg.norm(emb - snap)
+            / (jnp.linalg.norm(snap) + 1e-30)
+        )
 
     # ------------------------------------------------------------- state
     def init_state(self) -> dict:
@@ -110,12 +131,60 @@ class Trainer:
             os.path.join(self.workdir, "PREEMPT")
         )
 
+    # ------------------------------------------------------- index refresh
+    def _head_emb(self, params) -> jax.Array:
+        """The embedding rows backing the head index (logical vocab only)."""
+        return self.model._out_embed(params)[: self.model.head_cfg.n]
+
+    def _init_head_index(self, params) -> None:
+        self.head_index = self.model.make_head_index(params)
+        if self.head_index is not None:
+            # copy=True: the snapshot must not alias the (donated) params
+            self._index_snapshot = jnp.array(self._head_emb(params), copy=True)
+
+    def _maybe_refresh_index(self, params, done: int) -> float:
+        """Refresh the head index on schedule or on embedding drift.
+
+        Returns the measured relative drift (0.0 when not measured).
+        """
+        run = self.run
+        drift = 0.0
+        if run.index_drift_threshold > 0:
+            drift = float(
+                self._drift_fn(self._head_emb(params), self._index_snapshot)
+            )
+        due = run.index_refresh_every > 0 and done % run.index_refresh_every == 0
+        tripped = (
+            run.index_drift_threshold > 0 and drift > run.index_drift_threshold
+        )
+        if due or tripped:
+            emb = self._head_emb(params)
+            # eager call on purpose: IVF's refresh is internally one jitted
+            # XLA program, while LSH's is host-side — both work here
+            self.head_index = self.head_index.refresh(emb)
+            self._index_snapshot = jnp.array(emb, copy=True)
+            self.index_refreshes += 1
+            spill = getattr(self.head_index, "state", None)
+            spill = (
+                int(spill.spill_count)
+                if spill is not None and hasattr(spill, "spill_count") else 0
+            )
+            if spill:
+                print(f"[trainer] WARNING: index refresh at step {done} "
+                      f"dropped {spill} rows (overflow buffer full) — "
+                      f"raise IVFConfig.overflow_frac")
+            if tripped:
+                print(f"[trainer] index refresh at step {done}: "
+                      f"drift {drift:.4f} > {run.index_drift_threshold}")
+        return drift
+
     # --------------------------------------------------------------- run
     def train(self) -> dict:
         self._install_signals()
         state = self.maybe_restore()
         params, opt = state["params"], state["opt"]
         start = int(state["meta"]["step"])
+        self._init_head_index(params)
         key = jax.random.key(self.run.seed + 17)
         ema = None
         last = {}
@@ -124,7 +193,9 @@ class Trainer:
             batch = jax.tree.map(jnp.asarray, batch)
             k = jax.random.fold_in(key, step)
             t0 = time.perf_counter()
-            params, opt, metrics = self.step_fn(params, opt, batch, k)
+            params, opt, metrics = self.step_fn(
+                params, opt, batch, k, self.head_index
+            )
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             # straggler watchdog: EMA of step time, count outliers
@@ -140,6 +211,11 @@ class Trainer:
                     if jnp.ndim(v) == 0}
             last["step"] = step
             last["dt"] = dt
+            if self.head_index is not None:
+                last["index_drift"] = self._maybe_refresh_index(
+                    params, step + 1
+                )
+                last["index_refreshes"] = self.index_refreshes
             self.metrics_log.append(last)
             if step % self.run.log_every == 0:
                 print(f"[trainer] step {step} loss={last.get('loss'):.4f} "

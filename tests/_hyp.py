@@ -1,0 +1,102 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+The real ``hypothesis`` (requirements-dev.txt) is used when installed —
+with shrinking and its full search strategies. On a clean environment the
+tiny fallback below runs each ``@given`` test over a deterministic loop of
+seeded random examples instead, so the tier-1 suite collects and the
+properties still get exercised (just less adversarially).
+
+Only the surface this repo's tests use is provided: ``st.integers``,
+``st.floats``, ``st.lists(..., unique=True)``, ``st.data()``, ``@given``
+with keyword strategies, and ``@settings(max_examples=..., deadline=...)``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 20  # keep the no-hypothesis suite fast
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def _draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    class _Data:
+        """Stand-in for hypothesis' interactive ``data`` object."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy):
+            return strategy._draw(self._rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=None, unique=False):
+            def draw(rng):
+                size = rng.randint(min_size, max_size or min_size + 10)
+                if not unique:
+                    return [elements._draw(rng) for _ in range(size)]
+                out: list = []
+                seen: set = set()
+                attempts = 0
+                while len(out) < size and attempts < 100 * size + 100:
+                    v = elements._draw(rng)
+                    attempts += 1
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                return out
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _Strategy(_Data)
+
+    class settings:  # noqa: N801
+        def __init__(self, max_examples=None, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            if self.max_examples is not None:
+                fn._hyp_max_examples = self.max_examples
+            return fn
+
+    def given(**named_strategies):
+        def deco(fn):
+            def wrapper():
+                n_ex = min(
+                    getattr(wrapper, "_hyp_max_examples", _FALLBACK_MAX_EXAMPLES),
+                    _FALLBACK_MAX_EXAMPLES,
+                )
+                for i in range(n_ex):
+                    rng = random.Random(0xC0FFEE + i)
+                    drawn = {
+                        name: s._draw(rng)
+                        for name, s in named_strategies.items()
+                    }
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -146,6 +146,7 @@ def test_compressed_allreduce_matches_psum():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.optim.compress import ring_allreduce_int8
 
         mesh = jax.make_mesh((8,), ("data",))
@@ -157,7 +158,7 @@ def test_compressed_allreduce_matches_psum():
             exact = jax.lax.psum(flat, "data")
             return approx, exact
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             local, mesh=mesh, in_specs=(P("data"), P()),
             out_specs=(P(None), P(None)), check_vma=False))
         approx, exact = f(x, jax.random.key(1))

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import mips
 from repro.core.gumbel import (
@@ -24,8 +24,8 @@ def problem():
     emb = jax.random.normal(jax.random.key(1), (N, D)) / math.sqrt(D)
     theta = jax.random.normal(jax.random.key(2), (D,)) * 3.0
     y = emb @ theta
-    st_ = mips.build("exact", emb)
-    topk = mips.topk("exact", st_, theta, 96)
+    index = mips.build_index(mips.ExactConfig(), emb)
+    topk = index.topk(theta, 96)
     score_fn = lambda ids: emb[ids] @ theta
     return y, topk, score_fn
 

@@ -1,6 +1,4 @@
-"""MIPS indexes: oracle correctness, IVF coverage/recall, LSH recall."""
-import math
-
+"""MIPS Index API: oracle correctness, IVF device build/refresh, LSH recall."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,22 +7,28 @@ import pytest
 from repro.core import mips
 
 
-def _db(n=2048, d=32, clustered=True, seed=0):
+def _db(n=2048, d=32, clustered=True, seed=0, noise=0.3):
     k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
     if clustered:  # realistic embeddings have cluster structure
         centers = jax.random.normal(k1, (32, d))
         assign = jax.random.randint(k2, (n,), 0, 32)
-        db = centers[assign] + 0.3 * jax.random.normal(k3, (n, d))
+        db = centers[assign] + noise * jax.random.normal(k3, (n, d))
     else:
         db = jax.random.normal(k3, (n, d))
     return db / jnp.linalg.norm(db, axis=1, keepdims=True)
 
 
+def _recall(index, exact, queries, k=10):
+    got = np.asarray(index.topk_batch(queries, k).ids)
+    want = np.asarray(exact.topk_batch(queries, k).ids)
+    return float(np.mean([len(set(g) & set(w)) / k for g, w in zip(got, want)]))
+
+
 def test_exact_topk_matches_numpy():
     db = _db()
     q = jax.random.normal(jax.random.key(9), (32,))
-    st = mips.build("exact", db)
-    tk = mips.topk("exact", st, q, 10)
+    index = mips.build_index(mips.ExactConfig(), db)
+    tk = index.topk(q, 10)
     scores = np.asarray(db @ q)
     expected = set(np.argsort(-scores)[:10].tolist())
     assert set(np.asarray(tk.ids).tolist()) == expected
@@ -37,38 +41,53 @@ def test_exact_topk_matches_numpy():
 
 def test_ivf_full_probe_is_exhaustive():
     """Probing every cluster must return the exact top-k (coverage: padded
-    clusters + overflow buffer lose no points)."""
+    clusters + overflow buffer lose no points while spill_count == 0)."""
     db = _db()
-    st = mips.build("ivf", db, n_clusters=24, kmeans_iters=4)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=24, kmeans_iters=4), db
+    )
+    assert int(index.state.spill_count) == 0
     q = jax.random.normal(jax.random.key(10), (32,))
-    tk = mips.topk("ivf", st, q, 10, n_probe=24)
-    exact = mips.topk("exact", mips.build("exact", db), q, 10)
+    tk = index.topk(q, 10, n_probe=24)
+    exact = mips.build_index(mips.ExactConfig(), db).topk(q, 10)
     assert set(np.asarray(tk.ids).tolist()) == set(np.asarray(exact.ids).tolist())
+
+
+def test_ivf_covers_every_row():
+    """Every db row appears exactly once across member tables + overflow."""
+    db = _db(n=1000)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=16, kmeans_iters=3), db
+    )
+    ids = np.concatenate([
+        np.asarray(index.state.member_ids).ravel(),
+        np.asarray(index.state.overflow_ids),
+    ])
+    ids = ids[ids >= 0]
+    assert sorted(ids.tolist()) == list(range(1000))
 
 
 def test_ivf_recall_on_clustered_data():
     db = _db(clustered=True)
-    st = mips.build("ivf", db, n_clusters=32, kmeans_iters=8)
-    stx = mips.build("exact", db)
-    recs = []
-    for s in range(20):
-        q = jax.random.normal(jax.random.key(100 + s), (32,))
-        tk = mips.topk("ivf", st, q, 16, n_probe=8)
-        ex = mips.topk("exact", stx, q, 16)
-        recs.append(
-            len(set(np.asarray(tk.ids).tolist())
-                & set(np.asarray(ex.ids).tolist())) / 16
-        )
-    assert np.mean(recs) > 0.85, np.mean(recs)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=32, kmeans_iters=8, n_probe=8), db
+    )
+    exact = mips.build_index(mips.ExactConfig(), db)
+    queries = jnp.stack([
+        jax.random.normal(jax.random.key(100 + s), (32,)) for s in range(20)
+    ])
+    assert _recall(index, exact, queries, k=16) > 0.85
 
 
 def test_ivf_approximate_topk_gap():
     """Def 3.1: the returned set's gap c = max_notin - min_in should be
     small on clustered data; its exp factor enters the Thm 3.3 bound."""
     db = _db(clustered=True)
-    st = mips.build("ivf", db, n_clusters=32, kmeans_iters=8)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=32, kmeans_iters=8, n_probe=8), db
+    )
     q = jax.random.normal(jax.random.key(11), (32,))
-    tk = mips.topk("ivf", st, q, 16, n_probe=8)
+    tk = index.topk(q, 16)
     scores = np.asarray(db @ q)
     in_set = np.asarray(tk.ids)
     mask = np.ones(len(scores), bool)
@@ -79,47 +98,159 @@ def test_ivf_approximate_topk_gap():
 
 def test_ivf_batch_matches_single():
     db = _db()
-    st = mips.build("ivf", db, n_clusters=16, kmeans_iters=4)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=16, kmeans_iters=4, n_probe=4), db
+    )
     q = jax.random.normal(jax.random.key(12), (4, 32))
-    batch = mips.topk_batch("ivf", st, q, 8, n_probe=4)
+    batch = index.topk_batch(q, 8)
     for i in range(4):
-        single = mips.topk("ivf", st, q[i], 8, n_probe=4)
+        single = index.topk(q[i], 8)
         assert np.array_equal(np.asarray(batch.ids[i]), np.asarray(single.ids))
 
 
 def test_ivf_kernel_path_matches_xla_path():
     db = _db(n=512, d=128)
-    st = mips.build("ivf", db, n_clusters=16, kmeans_iters=4)
-    q = jax.random.normal(jax.random.key(13), (3, 128))
-    a = mips.topk_batch("ivf", st, q, 8, n_probe=4, use_kernel=False)
-    b = mips.topk_batch("ivf", st, q, 8, n_probe=4, use_kernel=True)
+    cfg = mips.IVFConfig(n_clusters=16, kmeans_iters=4, n_probe=4)
+    a = mips.build_index(cfg, db).topk_batch(
+        jax.random.normal(jax.random.key(13), (3, 128)), 8
+    )
+    import dataclasses
+
+    b = mips.build_index(dataclasses.replace(cfg, use_kernel=True), db).topk_batch(
+        jax.random.normal(jax.random.key(13), (3, 128)), 8
+    )
     assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
     np.testing.assert_allclose(
         np.asarray(a.values), np.asarray(b.values), rtol=1e-5, atol=1e-5
     )
 
 
+def test_ivf_device_build_matches_host_build():
+    """Parity: same seeded init => the on-device (segment_sum Lloyd +
+    sort/scan packing) build reproduces the host-numpy reference."""
+    db = _db(noise=0.1)  # well-separated clusters: no assignment ties
+    dev = mips.build_index(
+        mips.IVFConfig(n_clusters=24, kmeans_iters=4, n_probe=8), db
+    )
+    host = mips.build_index(
+        mips.IVFConfig(
+            n_clusters=24, kmeans_iters=4, n_probe=8, device_build=False
+        ),
+        db,
+    )
+    np.testing.assert_allclose(
+        np.asarray(dev.state.centroids),
+        np.asarray(host.state.centroids),
+        atol=2e-4,
+    )
+    # identical member sets per cluster (order may differ within a cluster)
+    md = np.sort(np.asarray(dev.state.member_ids), axis=1)
+    mh = np.sort(np.asarray(host.state.member_ids), axis=1)
+    agree = float(np.mean(md == mh))
+    assert agree > 0.99, agree
+    # acceptance: device recall@10 >= host recall@10
+    exact = mips.build_index(mips.ExactConfig(), db)
+    queries = jnp.stack([
+        jax.random.normal(jax.random.key(500 + s), (32,)) for s in range(20)
+    ])
+    assert _recall(dev, exact, queries) >= _recall(host, exact, queries) - 1e-9
+
+
+def test_ivf_refresh_warm_start():
+    """refresh over a drifted db (few warm-started Lloyd iters) must recover
+    the recall a full cold rebuild gets, and beat the stale index."""
+    db = _db(seed=3)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=32, kmeans_iters=8, n_probe=8), db
+    )
+    # drift the database (as the output embedding does during training)
+    db2 = db + 0.12 * jax.random.normal(jax.random.key(77), db.shape)
+    db2 = db2 / jnp.linalg.norm(db2, axis=1, keepdims=True)
+
+    refreshed = index.refresh(db2)  # refresh_iters=2, warm-started
+    cold = mips.build_index(
+        mips.IVFConfig(n_clusters=32, kmeans_iters=8, n_probe=8), db2
+    )
+    exact2 = mips.build_index(mips.ExactConfig(), db2)
+    queries = jnp.stack([
+        jax.random.normal(jax.random.key(300 + s), (32,)) for s in range(20)
+    ])
+    r_stale = _recall(index, exact2, queries)
+    r_refr = _recall(refreshed, exact2, queries)
+    r_cold = _recall(cold, exact2, queries)
+    assert r_refr >= r_stale, (r_refr, r_stale)
+    assert r_refr >= r_cold - 0.05, (r_refr, r_cold)
+    assert r_refr > 0.85, r_refr
+    # shape-stable: same pytree structure => drop-in swap under jit
+    assert jax.tree.structure(refreshed) == jax.tree.structure(index)
+
+
+def test_index_is_jit_compatible_pytree():
+    """Indexes pass through jit as arguments; refresh works inside jit."""
+    db = _db(n=512)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=16, kmeans_iters=3, n_probe=4), db
+    )
+    q = jax.random.normal(jax.random.key(5), (3, 32))
+
+    query = jax.jit(lambda idx, qq: idx.topk_batch(qq, 8))
+    eager = index.topk_batch(q, 8)
+    jitted = query(index, q)
+    assert np.array_equal(np.asarray(eager.ids), np.asarray(jitted.ids))
+
+    refresh = jax.jit(lambda idx, d: idx.refresh(d))
+    idx2 = refresh(index, db)
+    assert isinstance(idx2, mips.IVFIndex)
+    assert int(idx2.state.spill_count) == 0
+
+
+def test_build_index_rejects_unknown_config():
+    with pytest.raises(TypeError, match="no index backend"):
+        mips.build_index(object(), _db(n=64))
+
+
+def test_memory_bytes_accounting():
+    db = _db(n=512)
+    exact = mips.build_index(mips.ExactConfig(), db)
+    assert exact.memory_bytes() == 512 * 32 * 4
+    ivf = mips.build_index(mips.IVFConfig(n_clusters=16), db)
+    # member_vecs dominates: n_c * cap * d floats at cap_factor 3
+    assert ivf.memory_bytes() > 3 * 512 * 32 * 4
+
+
 def test_lsh_recall_at_one():
     """SRP-LSH (theory index): recall@1 with paper-style queries (θ drawn
     near dataset points — §4.1: 'θ drawn uniformly from the dataset')."""
     db = _db(n=1024, d=32, clustered=True)
-    st = mips.build("lsh", db, n_tables=12, n_bits=6)
-    stx = mips.build("exact", db)
+    index = mips.build_index(mips.LSHConfig(n_tables=12, n_bits=6), db)
+    exact = mips.build_index(mips.ExactConfig(), db)
     hits = 0
     for s in range(30):
         base = db[int(jax.random.randint(jax.random.key(s), (), 0, 1024))]
         q = base + 0.2 * jax.random.normal(jax.random.key(200 + s), (32,))
-        got = np.asarray(mips.topk("lsh", st, q, 4).ids)
-        want = int(np.asarray(mips.topk("exact", stx, q, 1).ids)[0])
+        got = np.asarray(index.topk(q, 4).ids)
+        want = int(np.asarray(exact.topk(q, 1).ids)[0])
         hits += want in set(got.tolist())
     assert hits >= 24, hits  # >= 80% recall@1-in-top-4
 
 
 def test_lsh_no_duplicate_candidates():
     db = _db(n=512, d=16)
-    st = mips.build("lsh", db, n_tables=8, n_bits=6)
+    index = mips.build_index(mips.LSHConfig(n_tables=8, n_bits=6), db)
     q = jax.random.normal(jax.random.key(14), (16,))
-    tk = mips.topk("lsh", st, q, 32)
+    tk = index.topk(q, 32)
     ids = np.asarray(tk.ids)
     valid = ids[ids >= 0]
     assert len(valid) == len(set(valid.tolist()))
+
+
+def test_lsh_refresh_preserves_structure():
+    db = _db(n=512, d=16)
+    index = mips.build_index(mips.LSHConfig(n_tables=4, n_bits=5), db)
+    db2 = db + 0.1 * jax.random.normal(jax.random.key(21), db.shape)
+    refreshed = index.refresh(db2)
+    assert jax.tree.structure(refreshed) == jax.tree.structure(index)
+    # projections are reused; tables are rebuilt over the new rows
+    np.testing.assert_array_equal(
+        np.asarray(index.proj), np.asarray(refreshed.proj)
+    )

@@ -91,10 +91,14 @@ def test_prefill_decode_parity(arch):
         )
         hs.append(ht[:, 0])
     h_dec = jnp.stack(hs, axis=1)
+    # bf16 trunk: per-step rounding accumulates. recurrentgemma's RG-LRU
+    # additionally reorders float ops (associative_scan prefill vs
+    # sequential decode), so it gets a little more slack.
+    tol = 0.12 if arch == "recurrentgemma-9b" else 0.08
     np.testing.assert_allclose(
         np.asarray(h_full, np.float32),
         np.asarray(h_dec, np.float32),
-        rtol=0.08, atol=0.08,  # bf16 trunk: per-step rounding accumulates
+        rtol=tol, atol=tol,
     )
     # tighter check on correlation (catches structural bugs, not rounding)
     a = np.asarray(h_full, np.float32).ravel()

@@ -4,7 +4,7 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import mips
 from repro.core.expectation import expectation_estimate
@@ -17,8 +17,8 @@ def _setup(seed=0, scale=3.0, k=128):
     emb = jax.random.normal(jax.random.key(seed), (N, D)) / math.sqrt(D)
     theta = jax.random.normal(jax.random.key(seed + 1), (D,)) * scale
     y = emb @ theta
-    st_ = mips.build("exact", emb)
-    topk = mips.topk("exact", st_, theta, k)
+    index = mips.build_index(mips.ExactConfig(), emb)
+    topk = index.topk(theta, k)
     return emb, theta, y, topk
 
 

@@ -67,6 +67,85 @@ def test_resume_is_bitwise_deterministic(tmp_path):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb)), pa
 
 
+def _recall10(index, emb, queries):
+    from test_mips import _recall
+    from repro.core import mips
+
+    return _recall(index, mips.ExactIndex.build(emb), queries, k=10)
+
+
+def test_index_refresh_on_drift(tmp_path):
+    """Staleness-aware refresh: the drift trigger must trip as the output
+    embedding moves, and the refreshed index must recover recall@10 against
+    exact top-k on the drifted embedding (vs the stale pre-training index)."""
+    cfg = get_smoke("tinyllama-1.1b").scaled(
+        vocab=4096, head_mode="amortized", head_mips="ivf",
+        head_k=96, head_l=96,
+    )
+    run = RunConfig(
+        num_steps=20, ckpt_every=20, log_every=100, batch=4, seq=32,
+        index_drift_threshold=0.05,
+        train=TrainConfig(opt=OptConfig(lr=2e-2, warmup_steps=2,
+                                        total_steps=20)),
+    )
+    tr = Trainer(cfg, run, str(tmp_path))
+    stale_index = tr.model.make_head_index(tr.init_state()["params"])
+    out = tr.train()
+    assert out["status"] == "done"
+    assert tr.head_index is not None
+    assert tr.index_refreshes >= 1, "drift threshold never tripped"
+    assert any("index_drift" in m for m in tr.metrics_log)
+
+    # recall recovery on the final (drifted) embedding
+    target = jax.eval_shape(
+        lambda: {k: v for k, v in tr.init_state().items() if k != "meta"}
+    )
+    state, _, _ = tr.ckpt.restore(target)
+    params = jax.tree.map(jnp.asarray, state["params"])
+    emb = tr._head_emb(params)
+    queries = jax.random.normal(jax.random.key(42), (16, emb.shape[1])) * 2.0
+    r_stale = _recall10(stale_index, emb, queries)
+    r_fresh = _recall10(tr.head_index, emb, queries)
+    assert r_fresh >= r_stale, (r_fresh, r_stale)
+
+
+def test_index_refresh_every_r_steps(tmp_path):
+    """Periodic schedule: R=5 over 11 steps => exactly 2 refreshes."""
+    cfg = get_smoke("tinyllama-1.1b").scaled(
+        vocab=4096, head_mode="amortized", head_mips="ivf",
+        head_k=96, head_l=96,
+    )
+    run = RunConfig(
+        num_steps=11, ckpt_every=100, log_every=100, batch=4, seq=32,
+        index_refresh_every=5,
+        train=TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=2,
+                                        total_steps=11)),
+    )
+    tr = Trainer(cfg, run, str(tmp_path))
+    out = tr.train()
+    assert out["status"] == "done"
+    assert tr.index_refreshes == 2, tr.index_refreshes
+
+
+def test_index_refresh_lsh_head(tmp_path):
+    """Refresh must also work for host-built backends: LSH rebuilds
+    eagerly (numpy) while IVF refreshes inside one XLA program."""
+    cfg = get_smoke("tinyllama-1.1b").scaled(
+        vocab=4096, head_mode="amortized", head_mips="lsh",
+        head_k=64, head_l=64,
+    )
+    run = RunConfig(
+        num_steps=6, ckpt_every=100, log_every=100, batch=2, seq=16,
+        index_refresh_every=3,
+        train=TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=2,
+                                        total_steps=6)),
+    )
+    tr = Trainer(cfg, run, str(tmp_path))
+    out = tr.train()
+    assert out["status"] == "done"
+    assert tr.index_refreshes == 2, tr.index_refreshes
+
+
 def test_preemption_flag_checkpoints_and_exits(tmp_path):
     cfg = get_smoke("tinyllama-1.1b")
     wd = str(tmp_path)
