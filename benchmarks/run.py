@@ -1,7 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
-``python -m benchmarks.run [fig2|table1|fig4|table2|fig7|refresh|roofline]``.
+``python -m benchmarks.run [fig2|table1|fig4|table2|fig7|refresh|dist|roofline]``.
 """
 from __future__ import annotations
 
@@ -11,6 +11,7 @@ import sys
 def main() -> None:
     from benchmarks import (
         amortized_cost,
+        dist_head,
         index_refresh,
         learning,
         partition_tradeoff,
@@ -26,6 +27,7 @@ def main() -> None:
         "table2": learning.run,
         "fig7": amortized_cost.run,
         "refresh": index_refresh.run,
+        "dist": dist_head.run,
         "roofline": roofline_report.run,
     }
     wanted = sys.argv[1:] or list(suites)

@@ -3,7 +3,9 @@
 - gumbel: lazy-Gumbel sampling (Alg 1/2 + Poissonized TPU variant)
 - partition / expectation: Alg 3 / Alg 4 stratified estimators
 - complement: exact uniform sampling from [n] \\ S (static shapes)
-- mips: exact / IVF / SRP-LSH top-k indexes
+- mips: exact / IVF / SRP-LSH top-k indexes (+ mesh-aware ShardedIndex)
+- estimators: the shard-local estimator core shared by the single-device
+  and distributed (TP-sharded) heads
 - amortized_head: the estimators packaged as an LM softmax head
 """
 from repro.core.amortized_head import HeadConfig, head_loss, head_sample, make_index

@@ -11,19 +11,21 @@ the paper's Table 2):
   2014 baseline; biased, fails for spread-out distributions).
 * ``amortized``  — the paper: ``log Ẑ`` from Algorithm 3 over S ∪ T. The
   gradient of the surrogate loss w.r.t. (h, E) is *exactly* Algorithm 4's
-  expectation estimator applied to ``f = φ`` (∇_h log Ẑ = Σ p̂_i E_i), so
-  plain autodiff through the estimator gives the paper's learning method.
+  expectation estimator applied to ``f = φ``, so plain autodiff through the
+  estimator gives the paper's learning method.
 
-Sampling (decode) uses the lazy-Gumbel samplers of :mod:`repro.core.gumbel`.
+All estimator math lives in :mod:`repro.core.estimators` and is SHARED with
+the distributed head (models/head.py): this module is the one-shard
+instantiation — shard-local partials combined with the identity instead of
+psum/pmax collectives. Sampling (decode) uses the lazy-Gumbel machinery of
+:mod:`repro.core.gumbel` through the same shared probe.
 
-All token-level work is chunked (``lax.map`` over token chunks) so the
-(tokens, k+l, d) gather never materializes at full sequence length —
-peak activation memory is O(chunk · (k+l) · d).
+Token-level work is chunked (:func:`repro.core.estimators.chunked_map`) so
+the (tokens, k+l, d) gather never materializes at full sequence length.
 
 Padded vocabularies: models pad ``n`` (logical vocab) up to a multiple of
-256 for TP sharding. Pad rows sit at the END of the table; every estimator
-here draws tail ids from ``[0, n_logical)`` only and the exact mode masks
-logits ``>= n_logical``, so pads contribute exactly zero probability.
+256 for TP sharding. Pad rows sit at the END of the table; this head slices
+``emb[:n]`` up front, so pads contribute exactly zero probability.
 """
 from __future__ import annotations
 
@@ -34,11 +36,14 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import estimators as est
 from repro.core import mips
-from repro.core.complement import sample_complement
-from repro.core.gumbel import SampleResult, TopK, default_kl, sample_fixed_b
+from repro.core.gumbel import SampleResult, default_kl
 
 __all__ = ["HeadConfig", "head_loss", "head_sample", "make_index"]
+
+_MODES = ("exact", "topk_only", "amortized")
+_MIPS = ("exact", "ivf", "lsh")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +52,7 @@ class HeadConfig:
     k: int = 0  # |S|; 0 -> default_kl(n, delta)
     l: int = 0  # |T|; 0 -> same as k
     mode: str = "amortized"  # exact | topk_only | amortized
-    mips: str = "exact"  # exact | ivf  (index used for the top-k probe)
+    mips: str = "exact"  # exact | ivf | lsh  (index used for the top-k probe)
     n_probe: int = 8
     use_kernel: bool = False
     chunk: int = 256  # token chunk for gathers
@@ -58,6 +63,15 @@ class HeadConfig:
     #   (logsumexp still accumulates in f32; §Perf iteration 3b)
 
     def resolved(self) -> "HeadConfig":
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"unknown head mode {self.mode!r}; valid choices: {_MODES}"
+            )
+        if self.mips not in _MIPS:
+            raise ValueError(
+                f"unknown head MIPS backend {self.mips!r}; "
+                f"valid choices: {_MIPS}"
+            )
         k = self.k or default_kl(self.n, self.delta, self.c)
         l = self.l or k
         mode = self.mode
@@ -69,48 +83,51 @@ class HeadConfig:
         l = min(l, self.n // 2)
         return dataclasses.replace(self, k=k, l=l, mode=mode)
 
+    @property
+    def score_dt(self):
+        return jnp.bfloat16 if self.score_dtype == "bf16" else jnp.float32
+
 
 class HeadLossOut(NamedTuple):
     loss: jax.Array  # (T,) per-token negative log-likelihood
     log_z: jax.Array  # (T,) partition estimates (diagnostics)
 
 
-def make_index(cfg: HeadConfig, emb: jax.Array) -> mips.Index | None:
-    """Build the MIPS index over the (logical) embedding rows.
+def make_index(
+    cfg: HeadConfig, emb: jax.Array, mesh=None, axis: str = "model"
+) -> mips.Index | None:
+    """Build the MIPS index over the embedding rows.
 
     Returns a stateful :class:`repro.core.mips.Index` (a jax pytree — pass
     it through jitted steps as an argument and ``index.refresh(emb)`` it
     when the embedding drifts; see train/trainer.py), or None when the
     exact top-k path applies.
+
+    With ``mesh`` given, builds a :class:`repro.core.mips.ShardedIndex`:
+    one shard-local index per TP slice of the FULL (padded) table, laid out
+    along the mesh ``axis`` for use inside the distributed head's
+    ``shard_map`` (pad rows are masked at probe time via ``n_valid``).
     """
     cfg = cfg.resolved()
     if cfg.mode == "exact" or cfg.mips == "exact":
         return None  # exact top-k runs directly off `emb`
+    mp = mesh.shape[axis] if mesh is not None else 1
     if cfg.mips == "ivf":
         mips_cfg = mips.IVFConfig(n_probe=cfg.n_probe, use_kernel=cfg.use_kernel)
-    elif cfg.mips == "lsh":
-        mips_cfg = mips.LSHConfig()
-    else:
-        raise ValueError(f"unknown head MIPS backend {cfg.mips!r}")
+    else:  # "lsh" (resolved() validated the choices)
+        # size buckets so the union of table candidates can cover the
+        # PROBED k (the default load-based cap may be smaller than k).
+        # Sharded: each of the mp per-slice tables holds only n/mp rows
+        # and is probed with k/mp, so caps scale down accordingly.
+        base_cfg = mips.LSHConfig()
+        n_loc = max(1, emb.shape[0] // mp if mesh is not None else cfg.n)
+        k_loc = max(8, cfg.k // mp)
+        cap_load = mips.default_bucket_cap(n_loc, base_cfg.n_bits)
+        cap_k = max(8, math.ceil(2.0 * k_loc / base_cfg.n_tables / 8.0) * 8)
+        mips_cfg = mips.LSHConfig(bucket_cap=max(cap_load, cap_k))
+    if mesh is not None:
+        return mips.build_index(mips_cfg, emb, mesh=mesh, axis=axis)
     return mips.build_index(mips_cfg, emb[: cfg.n])
-
-
-def _topk(cfg: HeadConfig, emb: jax.Array, index: Any, h: jax.Array) -> TopK:
-    """(t, d) queries -> TopK[(t,k)]. Scores recomputed later for grads."""
-    if index is None:
-        scores = h.astype(jnp.float32) @ emb[: cfg.n].astype(jnp.float32).T
-        vals, ids = jax.lax.top_k(scores, cfg.k)
-        return TopK(ids.astype(jnp.int32), vals)
-    return index.topk_batch(h, cfg.k)
-
-
-def _pad_chunk(x: jax.Array, chunk: int) -> tuple[jax.Array, int]:
-    t = x.shape[0]
-    rem = (-t) % chunk
-    if rem:
-        pad = [(0, rem)] + [(0, 0)] * (x.ndim - 1)
-        x = jnp.pad(x, pad)
-    return x, t
 
 
 def head_loss(
@@ -129,87 +146,20 @@ def head_loss(
       targets: (T,) int32 target ids in [0, cfg.n).
     """
     cfg = cfg.resolved()
+    embf = emb.astype(jnp.float32)[: cfg.n]
     h = h.astype(jnp.float32)
-    embf = emb.astype(jnp.float32)
 
-    if cfg.mode == "exact":
-        return _exact_loss(embf, h, targets, cfg)
-
-    chunk = min(cfg.chunk, max(1, h.shape[0]))
-    hp, t_true = _pad_chunk(h, chunk)
-    tp, _ = _pad_chunk(targets, chunk)
-    n_chunks = hp.shape[0] // chunk
-    hc = hp.reshape(n_chunks, chunk, -1)
-    tc = tp.reshape(n_chunks, chunk)
-    keys = jax.random.split(key, n_chunks)
-
-    def one_chunk(args):
-        hci, tci, ki = args
-        return _sparse_loss_chunk(embf, hci, tci, ki, cfg, index)
-
-    # remat: re-gather candidate rows in the backward pass per chunk
-    loss, log_z = jax.lax.map(jax.checkpoint(one_chunk), (hc, tc, keys))
-    return HeadLossOut(loss.reshape(-1)[:t_true], log_z.reshape(-1)[:t_true])
-
-
-def _exact_loss(
-    embf: jax.Array, h: jax.Array, targets: jax.Array, cfg: HeadConfig
-) -> HeadLossOut:
-    logits = h @ embf.T  # (T, n_rows)
-    n_rows = embf.shape[0]
-    if n_rows > cfg.n:
-        mask = jnp.arange(n_rows) < cfg.n
-        logits = jnp.where(mask[None, :], logits, -jnp.inf)
-    log_z = jax.nn.logsumexp(logits, axis=-1)
-    y_t = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=1)[
-        :, 0
-    ]
-    return HeadLossOut(log_z - y_t, log_z)
-
-
-def _sparse_loss_chunk(
-    embf: jax.Array,
-    h: jax.Array,
-    targets: jax.Array,
-    key: jax.Array,
-    cfg: HeadConfig,
-    index: Any,
-) -> tuple[jax.Array, jax.Array]:
-    """amortized / topk_only loss for one (chunk, d) token block."""
-    t = h.shape[0]
-    topk = _topk(cfg, embf, index, jax.lax.stop_gradient(h))
-    s_ids = jax.lax.stop_gradient(topk.ids)  # (t, k)
-
-    if cfg.mode == "topk_only":
-        ids_all = jnp.concatenate([s_ids, targets[:, None]], axis=1)
-        log_w = jnp.zeros((t, cfg.k + 1), jnp.float32)
-        # target may duplicate an S entry; mask the duplicate S slot so the
-        # truncated Z counts the target exactly once.
-        dup = s_ids == targets[:, None]
-        log_w = log_w.at[:, : cfg.k].set(jnp.where(dup, -jnp.inf, 0.0))
-    else:  # amortized (Algorithm 3 per token)
-        keys = jax.vmap(jax.random.fold_in, (None, 0))(
-            key, jnp.arange(t, dtype=jnp.uint32)
-        )
-        s_sorted = jnp.sort(s_ids, axis=1)
-        tail = jax.vmap(lambda kk, ss: sample_complement(kk, cfg.n, ss, cfg.l))(
-            keys, s_sorted
-        )  # (t, l)
-        ids_all = jnp.concatenate([s_ids, tail], axis=1)  # (t, k+l)
-        log_w_tail = math.log((cfg.n - cfg.k) / cfg.l)
-        log_w = jnp.concatenate(
-            [
-                jnp.zeros((t, cfg.k), jnp.float32),
-                jnp.full((t, cfg.l), log_w_tail, jnp.float32),
-            ],
-            axis=1,
+    def one_chunk(kk, hc, tc):
+        return est.loss_partials(
+            kk, embf, hc, tc, mode=cfg.mode, k=cfg.k, l=cfg.l, index=index,
+            score_dtype=cfg.score_dt, use_kernel=cfg.use_kernel,
         )
 
-    rows = embf[ids_all]  # (t, m, d) — differentiable gather
-    y = jnp.einsum("tmd,td->tm", rows, h)  # recomputed, grads flow
-    log_z = jax.nn.logsumexp(y + log_w, axis=1)
-    y_t = jnp.einsum("td,td->t", embf[targets], h)
-    return log_z - y_t, log_z
+    parts = est.chunked_map(
+        one_chunk, cfg.chunk, key, h, targets.astype(jnp.int32)
+    )
+    loss, log_z = est.combine_loss(parts, cfg.mode)
+    return HeadLossOut(loss, log_z)
 
 
 def head_sample(
@@ -225,16 +175,12 @@ def head_sample(
     both use the top-k probe; ``exact`` uses dense Gumbel-max.
     """
     cfg = cfg.resolved()
+    embf = emb.astype(jnp.float32)[: cfg.n]
     h = h.astype(jnp.float32)
-    embf = emb.astype(jnp.float32)
     t = h.shape[0]
 
     if cfg.mode == "exact":
-        logits = h @ embf[: cfg.n].T
-        g = jax.random.gumbel(key, logits.shape, dtype=jnp.float32)
-        pert = logits + g
-        idx = jnp.argmax(pert, axis=-1).astype(jnp.int32)
-        mx = jnp.max(pert, axis=-1)
+        idx, mx = est.dense_gumbel_max(key, embf, h)
         return SampleResult(
             idx,
             jnp.ones((t,), bool),
@@ -244,20 +190,6 @@ def head_sample(
             jnp.zeros((t,), bool),
         )
 
-    topk = _topk(cfg, embf, index, h)
-    keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(t, dtype=jnp.uint32))
-    m_cap = int(cfg.l + 6 * math.sqrt(cfg.l) + 8)
-
-    def one(kk, tk, hh):
-        score_fn = lambda ids: embf[ids] @ hh
-        return sample_fixed_b(
-            kk,
-            TopK(tk[0], tk[1]),
-            cfg.n,
-            score_fn,
-            l=cfg.l,
-            m_cap=m_cap,
-            c=cfg.c,
-        )
-
-    return jax.vmap(one)(keys, (topk.ids, topk.values), h)
+    return est.local_gumbel_max(
+        key, embf, h, k=cfg.k, l=cfg.l, index=index, c=cfg.c
+    )

@@ -37,9 +37,18 @@ def complement_map(u: jax.Array, s_sorted: jax.Array) -> jax.Array:
 
 
 def sample_complement(
-    key: jax.Array, n: int, s_sorted: jax.Array, num: int
+    key: jax.Array, n: int, s_sorted: jax.Array, num: int, n_excluded=None
 ) -> jax.Array:
-    """Draw ``num`` iid uniform samples (with replacement) from [0,n) \\ S."""
-    k = s_sorted.shape[0]
-    u = jax.random.randint(key, (num,), 0, n - k, dtype=jnp.int32)
+    """Draw ``num`` iid uniform samples (with replacement) from [0,n) \\ S.
+
+    ``n_excluded`` overrides the count of REAL exclusions when ``s_sorted``
+    carries virtual entries >= n marking dead slots (see
+    ``repro.core.estimators.sanitize_topk``): those never exclude anything,
+    so the complement has ``n - n_excluded`` elements, not ``n - k``. May
+    be a traced scalar; clamped so an empty complement stays in-range
+    (callers must weight such draws out).
+    """
+    k = s_sorted.shape[0] if n_excluded is None else n_excluded
+    hi = jnp.maximum(jnp.asarray(n, jnp.int32) - k, 1)
+    u = jax.random.randint(key, (num,), 0, hi, dtype=jnp.int32)
     return complement_map(u, s_sorted.astype(jnp.int32))

@@ -96,15 +96,17 @@ def _finish(
     m_cap: int,
     c: float,
     pert_s: jax.Array,
+    k_valid=None,
 ) -> SampleResult:
     """Shared tail materialization + argmax given cutoff b and atom rate lam."""
-    k = topk.ids.shape[0]
     k_m, k_pos, k_h = jax.random.split(key, 3)
     m = jax.random.poisson(k_m, lam, dtype=jnp.int32)
     overflow = m > m_cap
     m_used = jnp.minimum(m, m_cap)
     s_sorted = jnp.sort(topk.ids).astype(jnp.int32)
-    pos = sample_complement(k_pos, n, s_sorted, m_cap)  # (m_cap,)
+    pos = sample_complement(
+        k_pos, n, s_sorted, m_cap, n_excluded=k_valid
+    )  # (m_cap,)
     heights = b + jax.random.exponential(k_h, (m_cap,), dtype=jnp.float32)
     y_tail = score_fn(pos).astype(jnp.float32)  # (m_cap,)
     live = jnp.arange(m_cap, dtype=jnp.int32) < m_used
@@ -114,8 +116,16 @@ def _finish(
     ids = jnp.concatenate([topk.ids.astype(jnp.int32), pos])
     best = jnp.argmax(pert)
     max_val = pert[best]
-    s_min = jnp.min(topk.values.astype(jnp.float32))
+    # dead S slots (value -inf: masked/padded probe results) are not real
+    # top-k members — S_min must bound the NON-materialized scores, so take
+    # the min over live slots only (all-dead => +inf bound => ok False)
+    vals = topk.values.astype(jnp.float32)
+    s_min = jnp.min(jnp.where(jnp.isneginf(vals), jnp.inf, vals))
     bound = s_min + c + b
+    # a zero-row shard (no live slots AND empty tail: s_min=+inf, b=-inf)
+    # holds no points at all, so nothing is non-materialized: bound=-inf,
+    # not NaN — a NaN would veto the GLOBAL certificate via the pmin
+    bound = jnp.where(jnp.isnan(bound), -jnp.inf, bound)
     ok = (max_val >= bound) & ~overflow
     return SampleResult(ids[best], ok, m_used, max_val, bound, overflow)
 
@@ -157,19 +167,29 @@ def sample_fixed_b(
     l: int,
     m_cap: int | None = None,
     c: float = 0.0,
+    k_valid=None,
 ) -> SampleResult:
     """Algorithm 2 (fixed cutoff): exact w.p. 1-δ for ``k l >= n e^c ln(1/δ)``.
 
     ``B = ln((n-k)/l)`` so the tail atom count is Poisson(l); the static
     buffer ``m_cap`` defaults to ``l + 6 sqrt(l) + 8`` (overflow < 1e-8).
+
+    ``k_valid`` (optional, may be traced) is the number of LIVE top-k slots
+    when the probe underfills (dead slots hold value -inf and sanitized
+    virtual ids >= n): the true tail then has ``n - k_valid`` points, so
+    the cutoff, atom rate, and complement support all use it — otherwise
+    the ``k - k_valid`` largest complement ids would silently get zero
+    sampling probability while the certificate still claimed exactness.
     """
     k = topk.ids.shape[0]
+    kv = k if k_valid is None else k_valid
     if m_cap is None:
         m_cap = int(l + 6 * math.sqrt(l) + 8)
     k_s, k_t = jax.random.split(key)
     g_s = jax.random.gumbel(k_s, (k,), dtype=jnp.float32)
     pert_s = topk.values.astype(jnp.float32) + g_s
     # n may be a traced per-shard scalar (distributed head) — use jnp ops
-    b = jnp.log((jnp.asarray(n, jnp.float32) - k) / l)
+    b = jnp.log((jnp.asarray(n, jnp.float32) - kv) / l)
     lam = jnp.float32(l)
-    return _finish(k_t, topk, n, score_fn, b, lam, m_cap, c, pert_s)
+    return _finish(k_t, topk, n, score_fn, b, lam, m_cap, c, pert_s,
+                   k_valid=k_valid)

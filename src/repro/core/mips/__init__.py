@@ -17,14 +17,25 @@ they pass through ``jit`` as plain arguments and can be rebuilt on device.
 from __future__ import annotations
 
 from repro.core.gumbel import TopK
-from repro.core.mips.base import Index, build_index, register_backend, state_bytes
+from repro.core.mips.base import (
+    Index,
+    backend_cls,
+    build_index,
+    index_spill,
+    register_backend,
+    state_bytes,
+)
 from repro.core.mips.exact import ExactConfig, ExactIndex
 from repro.core.mips.ivf import IVFConfig, IVFIndex, IVFState
-from repro.core.mips.lsh import LSHConfig, LSHIndex
+from repro.core.mips.lsh import LSHConfig, LSHIndex, default_bucket_cap
+from repro.core.mips.sharded import ShardedIndex
 
 __all__ = [
     "Index",
+    "ShardedIndex",
+    "backend_cls",
     "build_index",
+    "index_spill",
     "register_backend",
     "state_bytes",
     "ExactConfig",
@@ -34,5 +45,6 @@ __all__ = [
     "IVFState",
     "LSHConfig",
     "LSHIndex",
+    "default_bucket_cap",
     "TopK",
 ]

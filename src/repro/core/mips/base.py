@@ -26,7 +26,14 @@ import jax
 
 from repro.core.gumbel import TopK
 
-__all__ = ["Index", "build_index", "register_backend", "state_bytes"]
+__all__ = [
+    "Index",
+    "backend_cls",
+    "build_index",
+    "index_spill",
+    "register_backend",
+    "state_bytes",
+]
 
 # config dataclass type -> index class; populated by register_backend at
 # import time of each backend module (exact / ivf / lsh).
@@ -81,23 +88,58 @@ class Index(Protocol):
         ...
 
 
-def build_index(config: Any, db: jax.Array) -> Index:
-    """Build the index backend matching ``type(config)``.
-
-    This replaces the old string-keyed ``mips.build("name", ...)`` module
-    dispatch: the config dataclass *is* the backend selector, so query-time
-    knobs (n_probe, kernels, ...) are fixed at build time and travel with
-    the index.
-    """
+def backend_cls(config: Any) -> type:
+    """Index class registered for ``type(config)``."""
     try:
-        cls = _BACKENDS[type(config)]
+        return _BACKENDS[type(config)]
     except KeyError:
         known = sorted(c.__name__ for c in _BACKENDS)
         raise TypeError(
             f"no index backend registered for {type(config).__name__}; "
             f"known configs: {known}"
         ) from None
+
+
+def build_index(
+    config: Any, db: jax.Array, *, mesh=None, axis: str = "model"
+) -> Index:
+    """Build the index backend matching ``type(config)``.
+
+    This replaces the old string-keyed ``mips.build("name", ...)`` module
+    dispatch: the config dataclass *is* the backend selector, so query-time
+    knobs (n_probe, kernels, ...) are fixed at build time and travel with
+    the index.
+
+    With ``mesh`` given, builds a :class:`repro.core.mips.ShardedIndex`
+    instead: one shard-local index per slice of ``db`` along the mesh
+    ``axis``, for use inside ``shard_map`` (DESIGN.md §3.5).
+    """
+    cls = backend_cls(config)
+    if mesh is not None:
+        from repro.core.mips.sharded import ShardedIndex
+
+        return ShardedIndex.build(config, db, mesh, axis)
     return cls.build(db, config)
+
+
+def index_spill(index: Any) -> int:
+    """Rows an IVF build/refresh dropped from both the member tables and
+    the overflow buffer (summed across shards for a ShardedIndex); 0 means
+    exact database coverage. Returns 0 for non-IVF backends and ``None``.
+    Eager-only (reads device scalars)."""
+    if index is None:
+        return 0
+    stack = [getattr(index, "state", None)]
+    total = 0
+    while stack:
+        x = stack.pop()
+        if x is None:
+            continue
+        if hasattr(x, "spill_count"):
+            total += int(jax.numpy.sum(x.spill_count))
+        elif isinstance(x, (tuple, list)):
+            stack.extend(x)
+    return total
 
 
 def state_bytes(tree: Any) -> int:

@@ -337,6 +337,11 @@ class IVFIndex:
             axis=1,
         )
         scores = jnp.where(ids >= 0, scores, -jnp.inf)
+        if scores.shape[1] < k:  # fewer candidates than k: pad dead slots
+            pad = k - scores.shape[1]
+            scores = jnp.pad(scores, ((0, 0), (0, pad)),
+                             constant_values=-jnp.inf)
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
         vals, pos = jax.lax.top_k(scores, k)
         return TopK(jnp.take_along_axis(ids, pos, axis=1), vals)
 

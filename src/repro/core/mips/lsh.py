@@ -26,7 +26,13 @@ import numpy as np
 from repro.core.gumbel import TopK
 from repro.core.mips import base
 
-__all__ = ["LSHConfig", "LSHIndex"]
+__all__ = ["LSHConfig", "LSHIndex", "default_bucket_cap"]
+
+
+def default_bucket_cap(n: int, n_bits: int) -> int:
+    """Padded per-bucket capacity ≈ 4x the expected load, rounded up to 8
+    (the build default; also used by head sizing in core/amortized_head)."""
+    return max(8, int(math.ceil(4.0 * n / (2**n_bits) / 8.0)) * 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,9 +110,7 @@ class LSHIndex:
         proj = rng.standard_normal((cfg.n_tables, d + 1, cfg.n_bits)).astype(
             np.float32
         )
-        bucket_cap = cfg.bucket_cap or max(
-            8, int(math.ceil(4.0 * n / (2**cfg.n_bits) / 8.0)) * 8
-        )
+        bucket_cap = cfg.bucket_cap or default_bucket_cap(n, cfg.n_bits)
         table_ids, db_aug = _build_tables(db_np, proj, cfg.n_bits, bucket_cap)
         return cls(
             cfg,
@@ -161,6 +165,11 @@ class LSHIndex:
         )
         valid = (cand >= 0) & first
         scores = jnp.where(valid, scores, -jnp.inf)
+        if scores.shape[1] < k:  # fewer candidates than k: pad dead slots
+            pad = k - scores.shape[1]
+            scores = jnp.pad(scores, ((0, 0), (0, pad)),
+                             constant_values=-jnp.inf)
+            cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
         vals, pos = jax.lax.top_k(scores, k)
         ids = jnp.take_along_axis(cand, pos, axis=1)
         return TopK(ids.astype(jnp.int32), vals)

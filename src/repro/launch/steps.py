@@ -39,9 +39,11 @@ def make_train_step(model: Model, tcfg: TrainConfig):
     """Returns train_step(params, opt_state, batch, key, index=None).
 
     ``index`` is the head's stateful MIPS index (a jax pytree, see
-    core/mips): it flows through as a plain argument, so a refreshed index
-    never retriggers compilation. Gradients do not flow into it — the head
-    only uses it for the stop-gradient top-k probe.
+    core/mips) — on a TP mesh a ShardedIndex whose per-slice state rides
+    into the distributed head's shard_map: it flows through as a plain
+    argument, so a refreshed index never retriggers compilation. Gradients
+    do not flow into it — the head only uses it for the stop-gradient
+    top-k probe.
     """
 
     def loss_for_grad(params, mb, key, index):

@@ -1,41 +1,36 @@
 """Distributed amortized LM head (shard_map over the TP-sharded vocabulary).
 
 The output embedding is sharded ``P("model", None)``: each TP shard owns a
-contiguous vocab slice. Per shard we run the paper's machinery *locally* —
-local top-(k/mp), local tail sample of l/mp, local stratified logsumexp /
-lazy-Gumbel max — and combine with O(1)-per-token collectives:
+contiguous vocab slice, and runs the SAME estimator core as the
+single-device head (:mod:`repro.core.estimators`) over its slice — an
+index-backed top-k probe (sharded :class:`repro.core.mips.ShardedIndex`,
+O(√(v/mp)) per query) or the dense-local scan, the stratified Algorithm-3
+partial, and the lazy-Gumbel local max. This module contributes ONLY the
+shard plumbing and the O(1)-per-token collectives:
 
-* loss:   ``log Ẑ = logsumexp over shards of local log Ẑ_s`` (a pmax + psum),
-          target logit via masked psum. The global estimator is the
-          stratified sum of per-shard Algorithm-3 estimators — still exactly
-          unbiased; Thm 3.4's variance bound applies per shard.
-* sample: each shard draws its local lazy-Gumbel max (exact per shard);
-          the global argmax of per-shard maxima IS an exact global sample.
-          Collective payload: one (value, id) pair per shard — O(k) bytes
-          total versus O(|V|/mp) for a full-logit gather.
+* loss:   ``log Ẑ = logsumexp over shards of local log Ẑ_s`` (a pmax+psum),
+          target logit via masked psum — the stratified sum of per-shard
+          Algorithm-3 estimators, still exactly unbiased (Thm 3.4 per
+          shard). See :func:`repro.core.estimators.combine_loss_psum`.
+* sample: the global argmax of per-shard lazy-Gumbel maxima IS an exact
+          global sample; exactness certificates compose via a pmin
+          (:func:`repro.core.estimators.combine_sample_pmax`). Collective
+          payload: one (value, id) pair per shard — O(1) per token versus
+          O(|V|/mp) for a full-logit gather.
 
-Exactness certificates compose: the global sample is provably exact when
-the *global* winner exceeds every shard's non-materialized bound
-(``S_min + c + B`` per shard) and no shard's tail buffer overflowed.
-
-Compare: the dense head all-gathers (T, |V|/mp) logits per shard for the
-softmax; here collective bytes drop to O(T) scalars. This is the
-"distributed MIPS" feature of DESIGN.md §3.5.
+The single-device head (core/amortized_head.py) is the one-shard
+instantiation of the identical partials; there is deliberately no estimator
+math in this file. This is the "distributed MIPS" feature of DESIGN.md §3.5.
 """
 from __future__ import annotations
-
-import functools
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import estimators as est
 from repro.core.amortized_head import HeadConfig
-from repro.core.complement import sample_complement
-from repro.core.gumbel import TopK, sample_fixed_b
 
 __all__ = ["dist_head_loss", "dist_head_sample", "batch_axes"]
 
@@ -61,14 +56,13 @@ def _shard_geometry(cfg: HeadConfig, vp: int, mp: int):
     return v_loc, k_loc, l_loc
 
 
-def _local_stats(emb_loc, h, n_valid, k_loc):
-    """Local masked scores -> local TopK. h: (t, d), emb_loc: (v_loc, d)."""
-    v_loc = emb_loc.shape[0]
-    scores = h @ emb_loc.T  # (t, v_loc) f32
-    col_ok = jnp.arange(v_loc) < n_valid
-    scores = jnp.where(col_ok[None, :], scores, -jnp.inf)
-    vals, ids = jax.lax.top_k(scores, k_loc)
-    return TopK(ids.astype(jnp.int32), vals)
+def _index_args(index):
+    """(extra shard_map args, matching in_specs) for an optional sharded
+    index: its stacked state rides through shard_map so each shard probes
+    its own slice (see ShardedIndex.local_index)."""
+    if index is None:
+        return (), ()
+    return (index.state,), (index.state_specs(),)
 
 
 def dist_head_loss(
@@ -78,118 +72,43 @@ def dist_head_loss(
     targets: jax.Array,  # (T,), sharded P(batch_axes)
     key: jax.Array,
     cfg: HeadConfig,
+    index=None,  # optional ShardedIndex over the same (Vp, d) table
 ) -> jax.Array:
     """Per-token NLL, distributed. Differentiable w.r.t. emb and h."""
     cfg = cfg.resolved()
     mp = mesh.shape["model"]
     vp = emb.shape[0]
     v_loc, k_loc, l_loc = _shard_geometry(cfg, vp, mp)
-    baxes = batch_axes(mesh)
-    chunk = cfg.chunk
 
-    def local_fn(emb_loc, h_loc, tgt_loc, key):
+    def local_fn(emb_loc, h_loc, tgt_loc, key, *idx_state):
         midx = jax.lax.axis_index("model")
         offset = midx * v_loc
         n_valid = jnp.clip(cfg.n - offset, 0, v_loc)
         key = jax.random.fold_in(key, midx)
-        t_loc = h_loc.shape[0]
-        ch = min(chunk, t_loc)
-        nck = (t_loc + ch - 1) // ch
-        pad = nck * ch - t_loc
-        h_p = jnp.pad(h_loc, ((0, pad), (0, 0))).reshape(nck, ch, -1)
-        tgt_p = jnp.pad(tgt_loc, (0, pad)).reshape(nck, ch)
-        keys = jax.random.split(key, nck)
+        index_loc = index.local_index(idx_state[0]) if idx_state else None
+        tgt_local = tgt_loc.astype(jnp.int32) - offset
 
-        score_dt = jnp.bfloat16 if cfg.score_dtype == "bf16" else jnp.float32
-
-        def one_chunk(args):
-            hc, tc, kk = args
-            hc = hc.astype(score_dt)
-            ef = emb_loc.astype(score_dt)
-            if cfg.mode == "exact":
-                scores = (hc @ ef.T).astype(jnp.float32)
-                col_ok = jnp.arange(v_loc) < n_valid
-                scores = jnp.where(col_ok[None, :], scores, -jnp.inf)
-                lse = jax.nn.logsumexp(scores, axis=-1)
-            else:
-                topk = _local_stats(ef, jax.lax.stop_gradient(hc), n_valid, k_loc)
-                s_ids = jax.lax.stop_gradient(topk.ids)
-                if cfg.mode == "topk_only":
-                    ids_all = s_ids
-                    log_w = jnp.zeros((ch, k_loc), jnp.float32)
-                    # mask slots equal to the target (it is added globally)
-                    tgt_local = tc.astype(jnp.int32) - offset
-                    log_w = jnp.where(
-                        s_ids == tgt_local[:, None], -jnp.inf, log_w
-                    )
-                else:  # amortized: per-shard Algorithm 3
-                    tkeys = jax.vmap(jax.random.fold_in, (None, 0))(
-                        kk, jnp.arange(ch, dtype=jnp.uint32)
-                    )
-                    s_sorted = jnp.sort(s_ids, axis=1)
-                    tail = jax.vmap(
-                        lambda k2, ss: sample_complement(k2, n_valid, ss, l_loc)
-                    )(tkeys, s_sorted)
-                    ids_all = jnp.concatenate([s_ids, tail], axis=1)
-                    log_w_t = jnp.log(
-                        (n_valid - k_loc).astype(jnp.float32) / l_loc
-                    )
-                    log_w = jnp.concatenate(
-                        [
-                            jnp.zeros((ch, k_loc), jnp.float32),
-                            jnp.full((ch, l_loc), 1.0) * log_w_t,
-                        ],
-                        axis=1,
-                    )
-                rows = ef[ids_all]  # (ch, m, d) differentiable
-                y = jnp.einsum("tmd,td->tm", rows, hc).astype(jnp.float32)
-                lse = jax.nn.logsumexp(y + log_w, axis=1)
-
-            # target logit (owned by exactly one shard)
-            tgt_local = tc.astype(jnp.int32) - offset
-            inside = (tgt_local >= 0) & (tgt_local < n_valid)
-            row_t = ef[jnp.clip(tgt_local, 0, v_loc - 1)]
-            y_t = jnp.where(
-                inside,
-                jnp.einsum("td,td->t", row_t, hc).astype(jnp.float32),
-                0.0,
+        def one_chunk(kk, hc, tc):
+            return est.loss_partials(
+                kk, emb_loc, hc, tc, mode=cfg.mode, k=k_loc, l=l_loc,
+                index=index_loc, n_valid=n_valid, score_dtype=cfg.score_dt,
+                use_kernel=cfg.use_kernel,
             )
-            return lse, y_t
 
-        # remat each chunk: the (ch, k+l, d) gathered rows are recomputed in
-        # the backward pass instead of living for the whole sequence
-        lse, y_t = jax.lax.map(jax.checkpoint(one_chunk), (h_p, tgt_p, keys))
-        lse = lse.reshape(-1)[:t_loc]
-        y_t = y_t.reshape(-1)[:t_loc]
+        parts = est.chunked_map(one_chunk, cfg.chunk, key, h_loc, tgt_local)
+        return est.combine_loss_psum(parts, cfg.mode, "model")
 
-        # ---- combine across the model axis ----
-        # (pmax is a pure numerical stabilizer: stop_gradient keeps the
-        # combined logsumexp gradient exact and avoids pmax's missing jvp)
-        sg = jax.lax.stop_gradient
-        if cfg.mode == "topk_only":
-            # add the target's own term exactly once
-            y_t_g = jax.lax.psum(y_t, "model")
-            m = jnp.maximum(jax.lax.pmax(sg(lse), "model"), sg(y_t_g))
-            z = jax.lax.psum(jnp.exp(lse - m), "model") + jnp.exp(y_t_g - m)
-            lse_g = m + jnp.log(z)
-        else:
-            m = jax.lax.pmax(sg(lse), "model")
-            lse_g = m + jnp.log(jax.lax.psum(jnp.exp(lse - m), "model"))
-            y_t_g = jax.lax.psum(y_t, "model")
-        return lse_g - y_t_g
-
+    idx_args, idx_specs = _index_args(index)
     tok_ax = _token_spec(mesh, h.shape[0])
-    emb_spec = P("model", None)
-    h_spec = P(tok_ax, None)
-    t_spec = P(tok_ax)
     fn = shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(emb_spec, h_spec, t_spec, P()),
-        out_specs=t_spec,
+        in_specs=(P("model", None), P(tok_ax, None), P(tok_ax), P(),
+                  *idx_specs),
+        out_specs=P(tok_ax),
         check_vma=False,
     )
-    return fn(emb, h, targets, key)
+    return fn(emb, h, targets, key, *idx_args)
 
 
 def dist_head_sample(
@@ -198,72 +117,48 @@ def dist_head_sample(
     h: jax.Array,  # (T, d) P(batch_axes, None)
     key: jax.Array,
     cfg: HeadConfig,
+    index=None,  # optional ShardedIndex over the same (Vp, d) table
 ) -> tuple[jax.Array, jax.Array]:
     """Distributed lazy-Gumbel sampling. Returns (ids (T,), ok (T,))."""
     cfg = cfg.resolved()
     mp = mesh.shape["model"]
     vp = emb.shape[0]
     v_loc, k_loc, l_loc = _shard_geometry(cfg, vp, mp)
-    baxes = batch_axes(mesh)
-    m_cap = int(l_loc + 6 * math.sqrt(l_loc) + 8)
 
-    def local_fn(emb_loc, h_loc, key):
+    def local_fn(emb_loc, h_loc, key, *idx_state):
         midx = jax.lax.axis_index("model")
         offset = midx * v_loc
         n_valid = jnp.clip(cfg.n - offset, 0, v_loc)
         key = jax.random.fold_in(key, midx)
         t_loc = h_loc.shape[0]
-        ef = emb_loc.astype(jnp.float32)
-        hf = h_loc.astype(jnp.float32)
 
         if cfg.mode == "exact":
-            scores = hf @ ef.T
-            col_ok = jnp.arange(v_loc) < n_valid
-            scores = jnp.where(col_ok[None, :], scores, -jnp.inf)
-            g = jax.random.gumbel(key, scores.shape, dtype=jnp.float32)
-            pert = scores + g
-            loc_best = jnp.argmax(pert, -1).astype(jnp.int32)
-            val = jnp.max(pert, -1)
+            loc_best, val = est.dense_gumbel_max(
+                key, emb_loc, h_loc, n_valid=n_valid
+            )
             gid = loc_best + offset
             ok = jnp.ones((t_loc,), bool)
             bound = jnp.full((t_loc,), -jnp.inf)
         else:
-            topk = _local_stats(ef, hf, n_valid, k_loc)
-            keys = jax.vmap(jax.random.fold_in, (None, 0))(
-                key, jnp.arange(t_loc, dtype=jnp.uint32)
+            index_loc = index.local_index(idx_state[0]) if idx_state else None
+            res = est.local_gumbel_max(
+                key, emb_loc, h_loc, k=k_loc, l=l_loc, index=index_loc,
+                n_valid=n_valid, c=cfg.c,
             )
-
-            def one(kk, tk_ids, tk_vals, hh):
-                score_fn = lambda ids: ef[ids] @ hh
-                return sample_fixed_b(
-                    kk, TopK(tk_ids, tk_vals), n_valid, score_fn,
-                    l=l_loc, m_cap=m_cap, c=cfg.c,
-                )
-
-            res = jax.vmap(one)(keys, topk.ids, topk.values, hf)
             gid = res.index + offset
             val = res.max_val
             bound = res.bound
             ok = ~res.overflow
 
-        # global argmax over model shards; ties broken toward smaller id
-        vmax = jax.lax.pmax(val, "model")
-        cand = jnp.where(val >= vmax, gid, jnp.int32(2**30))
-        gid_win = jax.lax.pmin(cand, "model")
-        # exact iff global winner clears every shard's bound & no overflow
-        ok_g = jax.lax.pmin(
-            (ok & (vmax >= bound)).astype(jnp.int32), "model"
-        ).astype(bool)
-        return gid_win, ok_g
+        return est.combine_sample_pmax(gid, val, bound, ok, "model")
 
+    idx_args, idx_specs = _index_args(index)
     tok_ax = _token_spec(mesh, h.shape[0])
-    emb_spec = P("model", None)
-    h_spec = P(tok_ax, None)
     fn = shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(emb_spec, h_spec, P()),
+        in_specs=(P("model", None), P(tok_ax, None), P(), *idx_specs),
         out_specs=(P(tok_ax), P(tok_ax)),
         check_vma=False,
     )
-    return fn(emb, h, key)
+    return fn(emb, h, key, *idx_args)

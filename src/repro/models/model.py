@@ -74,18 +74,38 @@ class Model:
         )
 
     # ---------------------------------------------------------------- index
+    def _head_mesh(self):
+        """The mesh for a sharded head index, or None (single-device)."""
+        if self.mesh is not None and "model" in self.mesh.shape:
+            return self.mesh
+        return None
+
     def make_head_index(self, params):
         """Build the head's stateful MIPS index over the current output
-        embedding, or None when the exact path applies (exact mode/backend,
-        or the distributed head, which shards exact top-k per TP slice).
+        embedding, or None when the exact path applies (exact mode/backend).
+
+        With a TP mesh, this is a :class:`repro.core.mips.ShardedIndex`:
+        per-TP-slice indexes whose state rides through the distributed
+        head's shard_map, so each shard probes its own vocab slice
+        sublinearly instead of rescanning it.
 
         The returned Index is a jax pytree: thread it through the jitted
         train/serve steps as an argument and ``refresh`` it when the
         embedding drifts (train/trainer.py does this automatically).
         """
-        if self.mesh is not None and "model" in self.mesh.shape:
-            return None
-        return ah.make_index(self.head_cfg, self._out_embed(params))
+        return ah.make_index(
+            self.head_cfg, self._out_embed(params), mesh=self._head_mesh()
+        )
+
+    def head_index_db(self, params) -> jax.Array:
+        """The embedding rows backing the head index (for refresh/drift
+        tracking): the FULL padded table when the index is sharded (each TP
+        slice owns its pad rows, masked at probe time), else the
+        logical-vocab slice."""
+        emb = self._out_embed(params)
+        if self._head_mesh() is not None:
+            return emb
+        return emb[: self.head_cfg.n]
 
     # ---------------------------------------------------------------- loss
     def loss_fn(self, params, batch, key, index=None) -> tuple[jax.Array, dict]:
@@ -100,9 +120,10 @@ class Model:
         b, l, d = h.shape
         h2 = h.reshape(b * l, d)
         t2 = labels.reshape(-1).astype(jnp.int32)
-        if self.mesh is not None and "model" in self.mesh.shape:
+        if self._head_mesh() is not None:
             loss = dist_head.dist_head_loss(
-                self.mesh, self._out_embed(params), h2, t2, key, self.head_cfg
+                self.mesh, self._out_embed(params), h2, t2, key,
+                self.head_cfg, index=index,
             )
             log_z = jnp.zeros(())  # diagnostics not returned by dist path
         else:
@@ -130,9 +151,10 @@ class Model:
         h, cache = transformer.apply_trunk_decode(params, cfg, x, cache, pos,
                                                   mesh=self.mesh)
         hq = h[:, 0]  # (B, d)
-        if self.mesh is not None and "model" in self.mesh.shape:
+        if self._head_mesh() is not None:
             nxt, ok = dist_head.dist_head_sample(
-                self.mesh, self._out_embed(params), hq, key, self.head_cfg
+                self.mesh, self._out_embed(params), hq, key, self.head_cfg,
+                index=index,
             )
         else:
             res = ah.head_sample(
@@ -156,9 +178,10 @@ class Model:
             mesh=self.mesh,
         )
         hq = h[:, -1]
-        if self.mesh is not None and "model" in self.mesh.shape:
+        if self._head_mesh() is not None:
             nxt, ok = dist_head.dist_head_sample(
-                self.mesh, self._out_embed(params), hq, key, self.head_cfg
+                self.mesh, self._out_embed(params), hq, key, self.head_cfg,
+                index=index,
             )
         else:
             res = ah.head_sample(

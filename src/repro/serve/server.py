@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mips
 from repro.launch import steps as steps_lib
 from repro.models.config import ArchConfig
 from repro.models.model import Model
@@ -62,13 +63,13 @@ class Server:
         self.key = jax.random.key(scfg.seed)
         self.stats = {"steps": 0, "tokens": 0, "ok": 0, "fallbacks": 0}
         # head MIPS index: built once over the frozen output embedding
+        # (a ShardedIndex on a TP mesh — per-slice probe inside the
+        # distributed head's shard_map)
         self.index = self.model.make_head_index(params)
-        state = getattr(self.index, "state", None)
-        if state is not None and hasattr(state, "spill_count"):
-            spilled = int(state.spill_count)
-            if spilled:  # coverage contract (DESIGN.md §3) violated
-                print(f"[server] WARNING: index build dropped {spilled} "
-                      f"rows — raise IVFConfig.overflow_frac")
+        spilled = mips.index_spill(self.index)
+        if spilled:  # coverage contract (DESIGN.md §3) violated
+            print(f"[server] WARNING: index build dropped {spilled} "
+                  f"rows — raise IVFConfig.overflow_frac")
 
         @jax.jit
         def _reset_slots(cache, mask):
@@ -86,16 +87,16 @@ class Server:
     def refresh_index(self, params=None) -> None:
         """Hot-swap the head index (e.g. after a params push).
 
-        ``refresh`` preserves the index's pytree structure, so the jitted
-        serve step keeps its compiled executable.
+        ``refresh`` preserves the index's pytree structure — per-shard
+        geometry and leaf shardings included for a sharded index — so the
+        jitted serve step keeps its compiled executable.
         """
         if params is not None:
             self.params = params
         if self.index is None:
             self.index = self.model.make_head_index(self.params)
-        else:
-            emb = self.model._out_embed(self.params)
-            self.index = self.index.refresh(emb[: self.model.head_cfg.n])
+            return
+        self.index = self.index.refresh(self.model.head_index_db(self.params))
 
     def run(self, prompts: list[list[int]]) -> list[RequestResult]:
         """Decode all prompts with continuous batching. Prompts are fed

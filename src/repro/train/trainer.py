@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core import mips
 from repro.data.synthetic import DataConfig, SyntheticStream
 from repro.launch import steps as steps_lib
 from repro.models.config import ArchConfig
@@ -133,8 +134,9 @@ class Trainer:
 
     # ------------------------------------------------------- index refresh
     def _head_emb(self, params) -> jax.Array:
-        """The embedding rows backing the head index (logical vocab only)."""
-        return self.model._out_embed(params)[: self.model.head_cfg.n]
+        """The embedding rows backing the head index (Model owns the
+        sharded-vs-sliced rule)."""
+        return self.model.head_index_db(params)
 
     def _init_head_index(self, params) -> None:
         self.head_index = self.model.make_head_index(params)
@@ -160,15 +162,12 @@ class Trainer:
         if due or tripped:
             emb = self._head_emb(params)
             # eager call on purpose: IVF's refresh is internally one jitted
-            # XLA program, while LSH's is host-side — both work here
+            # XLA program (shard-local under shard_map for a ShardedIndex),
+            # while LSH's is host-side — both work here
             self.head_index = self.head_index.refresh(emb)
             self._index_snapshot = jnp.array(emb, copy=True)
             self.index_refreshes += 1
-            spill = getattr(self.head_index, "state", None)
-            spill = (
-                int(spill.spill_count)
-                if spill is not None and hasattr(spill, "spill_count") else 0
-            )
+            spill = mips.index_spill(self.head_index)
             if spill:
                 print(f"[trainer] WARNING: index refresh at step {done} "
                       f"dropped {spill} rows (overflow buffer full) — "

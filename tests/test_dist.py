@@ -30,7 +30,8 @@ def test_dist_head_loss_matches_single_device():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from repro.core.amortized_head import HeadConfig, head_loss
+        from repro.core import mips
+        from repro.core.amortized_head import HeadConfig, head_loss, make_index
         from repro.models.head import dist_head_loss
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -47,7 +48,7 @@ def test_dist_head_loss_matches_single_device():
         np.testing.assert_allclose(np.asarray(ld), np.asarray(le.loss),
                                    rtol=1e-5, atol=1e-5)
 
-        # amortized mode: unbiased estimate close to exact
+        # amortized mode, dense-local probe: unbiased estimate close to exact
         cfg_a = HeadConfig(n=N, k=512, l=512, mode="amortized",
                            min_amortized_n=1)
         la = jax.jit(lambda e, hh, t: dist_head_loss(mesh, e, hh, t,
@@ -55,7 +56,18 @@ def test_dist_head_loss_matches_single_device():
         np.testing.assert_allclose(np.asarray(la), np.asarray(le.loss),
                                    rtol=0.08, atol=0.08)
 
-        # gradients flow and are close to exact
+        # amortized mode, IVF-backed SHARDED index: each shard probes its
+        # own slice sublinearly; estimate must stay close to exact
+        cfg_i = HeadConfig(n=N, k=512, l=512, mode="amortized", mips="ivf",
+                           n_probe=16, min_amortized_n=1)
+        index = make_index(cfg_i, emb, mesh=mesh)
+        assert isinstance(index, mips.ShardedIndex), type(index)
+        li = jax.jit(lambda ix, e, hh, t: dist_head_loss(mesh, e, hh, t,
+                     jax.random.key(4), cfg_i, index=ix))(index, emb, h, tgt)
+        np.testing.assert_allclose(np.asarray(li), np.asarray(le.loss),
+                                   rtol=0.1, atol=0.1)
+
+        # gradients flow and are close to exact (dense-local and IVF-local)
         g_e = jax.grad(lambda hh: head_loss(emb, hh, tgt, jax.random.key(5),
                        cfg).loss.sum())(h)
         g_a = jax.grad(lambda hh: dist_head_loss(mesh, emb, hh, tgt,
@@ -63,6 +75,11 @@ def test_dist_head_loss_matches_single_device():
         cos = float((g_e * g_a).sum() /
                     (jnp.linalg.norm(g_e) * jnp.linalg.norm(g_a)))
         assert cos > 0.98, cos
+        g_i = jax.grad(lambda hh: dist_head_loss(mesh, emb, hh, tgt,
+                       jax.random.key(5), cfg_i, index=index).sum())(h)
+        cos_i = float((g_e * g_i).sum() /
+                      (jnp.linalg.norm(g_e) * jnp.linalg.norm(g_i)))
+        assert cos_i > 0.97, cos_i
         print("OK")
     """)
     assert "OK" in out
@@ -71,7 +88,7 @@ def test_dist_head_loss_matches_single_device():
 def test_dist_head_sample_distribution():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core.amortized_head import HeadConfig
+        from repro.core.amortized_head import HeadConfig, make_index
         from repro.models.head import dist_head_sample
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -79,24 +96,37 @@ def test_dist_head_sample_distribution():
         emb = jax.random.normal(jax.random.key(0), (N, D)) / np.sqrt(D)
         h = jnp.broadcast_to(
             jax.random.normal(jax.random.key(1), (1, D)) * 3.0, (8, D))
-        cfg = HeadConfig(n=N, k=256, l=256, mode="amortized",
-                         min_amortized_n=1)
-        samp = jax.jit(lambda k: dist_head_sample(mesh, emb, h, k, cfg))
-        ids_all, oks = [], []
-        for s in range(800):
-            ids, ok = samp(jax.random.key(s))
-            ids_all.append(np.asarray(ids))
-            oks.append(np.asarray(ok))
-        ids = np.concatenate(ids_all)          # 6400 samples
-        ok_rate = np.concatenate(oks).mean()
-        assert ok_rate > 0.99, ok_rate
         y = np.asarray(emb @ np.asarray(h[0]))
         p = np.exp(y - y.max()); p /= p.sum()
         top = np.argsort(-p)[:5]
-        for t in top:
-            obs = (ids == t).mean()
-            se = np.sqrt(p[t] * (1 - p[t]) / len(ids))
-            assert abs(obs - p[t]) < 5 * se + 2e-3, (t, obs, p[t])
+
+        def check(samp, index, rounds=800):
+            ids_all, oks = [], []
+            for s in range(rounds):
+                ids, ok = samp(index, jax.random.key(s))
+                ids_all.append(np.asarray(ids))
+                oks.append(np.asarray(ok))
+            ids = np.concatenate(ids_all)      # rounds * 8 samples
+            ok_rate = np.concatenate(oks).mean()
+            assert ok_rate > 0.99, ok_rate
+            for t in top:
+                obs = (ids == t).mean()
+                se = np.sqrt(p[t] * (1 - p[t]) / len(ids))
+                assert abs(obs - p[t]) < 5 * se + 2e-3, (t, obs, p[t])
+
+        cfg = HeadConfig(n=N, k=256, l=256, mode="amortized",
+                         min_amortized_n=1)
+        check(jax.jit(lambda ix, k: dist_head_sample(mesh, emb, h, k, cfg)),
+              None)
+
+        # IVF-backed sharded probe: full-coverage probe (n_probe >= n_c)
+        # keeps the sample distribution exact while exercising the
+        # index-backed shard-local path
+        cfg_i = HeadConfig(n=N, k=256, l=256, mode="amortized", mips="ivf",
+                           n_probe=32, min_amortized_n=1)
+        index = make_index(cfg_i, emb, mesh=mesh)
+        check(jax.jit(lambda ix, k: dist_head_sample(mesh, emb, h, k, cfg_i,
+                                                     index=ix)), index)
         print("OK")
     """)
     assert "OK" in out
@@ -138,6 +168,105 @@ def test_dist_trainstep_runs_and_loss_decreases():
             losses.append(float(m["loss"]))
         assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
         print("OK", round(losses[0], 3), "->", round(losses[-1], 3))
+    """)
+    assert "OK" in out
+
+
+def test_sharded_index_refresh_without_recompile():
+    """Sharded-index lifecycle: (1) a refreshed ShardedIndex swaps into a
+    compiled train step with no jit cache miss; (2) the trainer's
+    drift-triggered refresh works shard-locally and recovers recall on the
+    drifted embedding; (3) Server.refresh_index hot-swaps the sharded index
+    without recompiling the serve step."""
+    out = _run("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        import repro.models.transformer as T
+        T.REMAT = False
+        from repro.configs import get_smoke
+        from repro.core import mips
+        from repro.data.synthetic import DataConfig, make_batch
+        from repro.launch import mesh as meshlib, steps
+        from repro.launch.steps import TrainConfig
+        from repro.models.model import Model
+        from repro.optim import adamw
+        from repro.optim.adamw import OptConfig
+        from repro.serve.server import ServeConfig, Server
+        from repro.train.trainer import RunConfig, Trainer
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = get_smoke("tinyllama-1.1b").scaled(
+            d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, vocab=4096,
+            head_mode="amortized", head_mips="ivf", head_k=128, head_l=128)
+
+        # --- 1. refreshed index -> compiled train step, no cache miss ---
+        model = Model(cfg, mesh)
+        params = model.init(jax.random.key(0))
+        p_sh = meshlib.param_shardings(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         params), mesh, cfg)
+        params = jax.device_put(params, p_sh)
+        index = model.make_head_index(params)
+        assert isinstance(index, mips.ShardedIndex), type(index)
+        opt = adamw.init(params)
+        step = jax.jit(steps.make_train_step(
+            model, steps.TrainConfig(opt=adamw.OptConfig(
+                lr=1e-2, warmup_steps=2, total_steps=10))))
+        dcfg = DataConfig(batch=8, seq=32)
+        for i in range(2):
+            b = jax.tree.map(jnp.asarray, make_batch(cfg, dcfg, i))
+            params, opt, m = step(params, opt, b, jax.random.key(i), index)
+        c0 = step._cache_size()
+        index = index.refresh(model._out_embed(params))
+        b = jax.tree.map(jnp.asarray, make_batch(cfg, dcfg, 2))
+        params, opt, m = step(params, opt, b, jax.random.key(2), index)
+        assert step._cache_size() == c0, (step._cache_size(), c0)
+        assert np.isfinite(float(m["loss"]))
+        print("train-swap OK", c0)
+
+        # --- 2. trainer drift-refresh, shard-local, recall recovers ----
+        run = RunConfig(num_steps=8, ckpt_every=100, log_every=100,
+                        batch=4, seq=32, index_drift_threshold=0.005,
+                        train=TrainConfig(opt=OptConfig(
+                            lr=2e-2, warmup_steps=2, total_steps=8)))
+        tr = Trainer(cfg, run, tempfile.mkdtemp(), mesh=mesh)
+        stale = tr.model.make_head_index(tr.init_state()["params"])
+        res = tr.train()
+        assert res["status"] == "done"
+        assert isinstance(tr.head_index, mips.ShardedIndex)
+        assert tr.index_refreshes >= 1, "drift threshold never tripped"
+        # one compile for the first (host-placed) args, at most one more
+        # for the settled on-mesh layouts; refreshes add none
+        assert tr.step_fn._cache_size() <= 2, tr.step_fn._cache_size()
+
+        target = jax.eval_shape(lambda: {
+            k: v for k, v in tr.init_state().items() if k != "meta"})
+        state, _, _ = tr.ckpt.restore(target)
+        params2 = jax.tree.map(jnp.asarray, state["params"])
+        emb = tr.model._out_embed(params2)
+        q = jax.random.normal(jax.random.key(42), (16, emb.shape[1])) * 2.0
+        ex = np.argsort(-np.asarray(q @ emb.T), axis=1)[:, :10]
+        def recall(ix):
+            tk = np.asarray(ix.topk_batch(q, 10).ids)
+            return np.mean([len(set(tk[i]) & set(ex[i])) / 10
+                            for i in range(16)])
+        r_stale, r_fresh = recall(stale), recall(tr.head_index)
+        assert r_fresh >= r_stale, (r_fresh, r_stale)
+        print("trainer-refresh OK", tr.index_refreshes, r_stale, r_fresh)
+
+        # --- 3. server hot-swap without recompile -----------------------
+        server = Server(cfg, params2, ServeConfig(
+            batch_slots=2, max_seq=48, max_new_tokens=4), mesh=mesh)
+        assert isinstance(server.index, mips.ShardedIndex)
+        r1 = server.run([[1, 2, 3], [4, 5, 6, 7]])
+        c1 = server.step_fn._cache_size()
+        server.refresh_index(params2)
+        r2 = server.run([[8, 9, 10]])
+        assert server.step_fn._cache_size() == c1, (
+            server.step_fn._cache_size(), c1)
+        assert all(len(r.tokens) == 4 for r in r1 + r2)
+        print("server-swap OK", c1)
+        print("OK")
     """)
     assert "OK" in out
 

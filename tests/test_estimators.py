@@ -1,0 +1,252 @@
+"""Shared estimator core (core/estimators.py): the shard-local primitives
+both heads import, plus HeadConfig validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators as est
+from repro.core import mips
+from repro.core.amortized_head import HeadConfig, head_loss
+from repro.core.gumbel import TopK
+
+N, D, T = 2048, 16, 12
+
+
+@pytest.fixture(scope="module")
+def setup():
+    emb = jax.random.normal(jax.random.key(0), (N, D)) / np.sqrt(D)
+    h = jax.random.normal(jax.random.key(1), (T, D)) * 2.0
+    tgt = jax.random.randint(jax.random.key(2), (T,), 0, N)
+    return emb, h, tgt
+
+
+# ---------------------------------------------------------- config guards
+def test_headconfig_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown head mode"):
+        HeadConfig(n=N, mode="softmax").resolved()
+
+
+def test_headconfig_rejects_unknown_mips():
+    with pytest.raises(ValueError, match="unknown head MIPS backend"):
+        HeadConfig(n=N, mips="faiss").resolved()
+    # valid choices are listed in the message
+    with pytest.raises(ValueError, match="ivf"):
+        HeadConfig(n=N, mips="annoy").resolved()
+
+
+def test_headconfig_valid_choices_still_resolve():
+    for mode in ("exact", "topk_only", "amortized"):
+        for backend in ("exact", "ivf", "lsh"):
+            cfg = HeadConfig(n=N, mode=mode, mips=backend).resolved()
+            assert cfg.k > 0 and cfg.l > 0
+
+
+# ------------------------------------------------------------- the probe
+def test_topk_probe_index_matches_dense(setup):
+    emb, h, _ = setup
+    dense = est.topk_probe(emb, h, 32)
+    exact = est.topk_probe(emb, h, 32, index=mips.ExactIndex.build(emb))
+    np.testing.assert_array_equal(np.asarray(dense.ids), np.asarray(exact.ids))
+    np.testing.assert_allclose(
+        np.asarray(dense.values), np.asarray(exact.values), rtol=1e-5
+    )
+
+
+def test_topk_probe_masks_invalid_rows(setup):
+    emb, h, _ = setup
+    n_valid = 100
+    tk = est.topk_probe(emb, h, 32, n_valid=n_valid)
+    finite = np.isfinite(np.asarray(tk.values))
+    assert (np.asarray(tk.ids)[finite] < n_valid).all()
+    # index-backed probe over the full table: ids >= n_valid come back -inf
+    tk_i = est.topk_probe(
+        emb, h, 32, index=mips.ExactIndex.build(emb), n_valid=n_valid
+    )
+    vals = np.asarray(tk_i.values)
+    ids = np.asarray(tk_i.ids)
+    assert np.isneginf(vals[ids >= n_valid]).all()
+
+
+def test_dead_candidate_slots_contribute_zero(setup):
+    """-inf-weight slots must drop out of the value AND the gradient."""
+    emb, h, _ = setup
+    ids = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (T, 1))
+    log_w = jnp.zeros((T, 8))
+    base_lz = est.stratified_logz(emb, h, ids, log_w)
+    # append junk candidates with -inf weight — nothing changes
+    junk = jnp.full((T, 4), N - 1, jnp.int32)
+    ids2 = jnp.concatenate([ids, junk], axis=1)
+    log_w2 = jnp.concatenate([log_w, jnp.full((T, 4), -jnp.inf)], axis=1)
+    lz2 = est.stratified_logz(emb, h, ids2, log_w2)
+    np.testing.assert_allclose(np.asarray(lz2), np.asarray(base_lz), rtol=1e-6)
+    g = jax.grad(lambda e: est.stratified_logz(e, h, ids2, log_w2).sum())(emb)
+    g0 = jax.grad(lambda e: est.stratified_logz(e, h, ids, log_w).sum())(emb)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0), atol=1e-6)
+
+
+def test_dead_probe_slots_do_not_shadow_low_rows():
+    """Dead probe slots (-1 pads / vocab pads) must not shift the complement
+    tail draw: with raw -1 ids the order-statistics map would exclude rows
+    0..#dead-1 from the tail forever, biasing log Ẑ and decode sampling."""
+    tk = TopK(
+        jnp.array([[-1, -1, 3, 5]], jnp.int32),
+        jnp.array([[-jnp.inf, -jnp.inf, 1.0, 0.5]], jnp.float32),
+    )
+    ids_clean, k_valid = est.sanitize_topk(tk, 8)
+    np.testing.assert_array_equal(np.asarray(ids_clean), [[8, 9, 3, 5]])
+    assert int(k_valid[0]) == 2
+    cand, log_w = est.amortized_candidates(jax.random.key(0), tk, 8, 256)
+    tail = set(np.asarray(cand[0, 4:]).tolist())
+    assert tail <= {0, 1, 2, 4, 6, 7}, tail  # never the valid S {3, 5}
+    assert {0, 1} <= tail, tail  # low rows ARE reachable (256 draws over 6)
+    # the tail stratum weight counts only the VALID exclusions (2, not 4)
+    np.testing.assert_allclose(
+        float(log_w[0, -1]), np.log((8 - 2) / 256), rtol=1e-6
+    )
+    # dead S slots themselves carry -inf weight
+    assert np.isneginf(np.asarray(log_w[0, :2])).all()
+
+
+def test_all_pad_shard_contributes_nothing():
+    """A TP shard whose rows are ALL padding (n_valid=0) must produce a
+    -inf log Ẑ partial and a zero target partial — never finite garbage
+    that a psum would fold into the global loss."""
+    emb = jax.random.normal(jax.random.key(0), (64, 8))
+    h = jax.random.normal(jax.random.key(1), (4, 8))
+    tgt = jnp.full((4,), -100, jnp.int32)  # target lives on another shard
+    parts = est.loss_partials(
+        jax.random.key(2), emb, h, tgt, mode="amortized", k=8, l=16,
+        n_valid=0,
+    )
+    assert np.isneginf(np.asarray(parts.log_z)).all(), parts.log_z
+    np.testing.assert_array_equal(np.asarray(parts.y_t), 0.0)
+
+
+def test_sampler_partial_fill_keeps_full_support():
+    """With dead probe slots, the lazy-Gumbel tail must still cover the
+    WHOLE complement (k_valid-aware cutoff/support): before the fix the
+    k - k_valid largest complement ids had zero sampling probability while
+    ok=True certified the sample as exact."""
+    from repro.core.gumbel import sample_fixed_b
+
+    n, d = 16, 4
+    emb = jnp.zeros((n, d))  # uniform scores: every id has p = 1/n
+    tk = TopK(
+        jnp.array([0, 1, 2, 3, -1, -1, -1, -1], jnp.int32),
+        jnp.array([0.0, 0.0, 0.0, 0.0] + [-jnp.inf] * 4, jnp.float32),
+    )
+    ids_clean, kv = est.sanitize_topk(
+        TopK(tk.ids[None], tk.values[None]), n
+    )
+
+    def one(key):
+        score_fn = lambda ids: emb[jnp.minimum(ids, n - 1)] @ jnp.zeros((d,))
+        return sample_fixed_b(
+            key, TopK(ids_clean[0], tk.values), n, score_fn, l=8,
+            k_valid=kv[0],
+        )
+
+    res = jax.vmap(one)(jax.random.split(jax.random.key(3), 3000))
+    ids = np.asarray(res.index)
+    counts = np.bincount(ids, minlength=n)
+    assert (counts > 0).all(), counts  # ids 12..15 were unreachable pre-fix
+    # uniform scores: every id lands near 3000/16 = 187
+    assert counts.max() < 3 * counts.min() + 60, counts
+
+
+def test_zero_row_shard_does_not_veto_certificate():
+    """A shard with zero real rows must report bound=-inf (nothing is
+    non-materialized), not NaN — a NaN would make `vmax >= bound` False and
+    permanently veto the GLOBAL exactness certificate via the pmin."""
+    emb = jax.random.normal(jax.random.key(0), (64, 8))
+    h = jax.random.normal(jax.random.key(1), (2, 8))
+    res = est.local_gumbel_max(
+        jax.random.key(2), emb, h, k=8, l=8, n_valid=0
+    )
+    b = np.asarray(res.bound)
+    assert not np.isnan(b).any(), b
+    assert np.isneginf(b).all(), b
+    assert np.isneginf(np.asarray(res.max_val)).all()  # never wins globally
+
+
+# ----------------------------------------- one-shard == head_loss parity
+def test_single_device_head_is_one_shard_instantiation(setup):
+    """head_loss must equal loss_partials + identity combine, per chunk."""
+    emb, h, tgt = setup
+    cfg = HeadConfig(
+        n=N, k=64, l=64, mode="amortized", min_amortized_n=1, chunk=T
+    ).resolved()
+    key = jax.random.key(3)
+    out = head_loss(emb, h, tgt, key, cfg)
+    # chunked_map with one chunk folds the key once via split
+    (kk,) = jax.random.split(key, 1)
+    parts = est.loss_partials(
+        kk, emb[:N].astype(jnp.float32), h.astype(jnp.float32), tgt,
+        mode="amortized", k=cfg.k, l=cfg.l,
+    )
+    loss, log_z = est.combine_loss(parts, "amortized")
+    np.testing.assert_allclose(np.asarray(out.loss), np.asarray(loss),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.log_z), np.asarray(log_z),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_only_combine_counts_target_once(setup):
+    emb, h, _ = setup
+    # target IS in the top-k: truncated Z must not double-count it
+    tgt = est.topk_probe(emb, h, 8).ids[:, 0]
+    cfg = HeadConfig(n=N, k=64, l=64, mode="topk_only", min_amortized_n=1)
+    out = head_loss(emb, h, tgt, jax.random.key(4), cfg)
+    # reference: dense truncated logsumexp over exact top-64 (target inside)
+    scores = np.asarray(h @ emb.T)
+    top = np.sort(scores, axis=1)[:, -64:]
+    ref = np.log(np.exp(top - top.max(1, keepdims=True)).sum(1)) + top.max(1)
+    y_t = np.take_along_axis(scores, np.asarray(tgt)[:, None], 1)[:, 0]
+    np.testing.assert_allclose(np.asarray(out.loss), ref - y_t,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- fused kernel path
+def test_fused_logz_matches_xla_forward_and_grads(setup):
+    emb, h, _ = setup
+    k, l = 16, 16
+    tk = est.topk_probe(emb, h, k)
+    ids, log_w = est.amortized_candidates(jax.random.key(5), tk, N, l)
+
+    def lz(e, hh, use_kernel):
+        return est.stratified_logz(e, hh, ids, log_w, use_kernel=use_kernel)
+
+    ref = lz(emb, h, False)
+    ker = lz(emb, h, True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    ge_r, gh_r = jax.grad(lambda e, hh: lz(e, hh, False).sum(), (0, 1))(emb, h)
+    ge_k, gh_k = jax.grad(lambda e, hh: lz(e, hh, True).sum(), (0, 1))(emb, h)
+    np.testing.assert_allclose(np.asarray(gh_k), np.asarray(gh_r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ge_k), np.asarray(ge_r),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_head_loss_use_kernel_close_to_exact(setup):
+    emb, h, tgt = setup
+    le = head_loss(emb, h, tgt, jax.random.key(6),
+                   HeadConfig(n=N, mode="exact"))
+    lk = head_loss(emb, h, tgt, jax.random.key(6),
+                   HeadConfig(n=N, k=256, l=256, mode="amortized",
+                              use_kernel=True, min_amortized_n=1))
+    np.testing.assert_allclose(np.asarray(lk.loss), np.asarray(le.loss),
+                               rtol=0.08, atol=0.08)
+
+
+# ------------------------------------------------------------ chunked_map
+def test_chunked_map_pads_and_strips():
+    def fn(key, a, b):
+        return a * 2.0, (a + b).sum(-1)
+
+    a = jnp.arange(10, dtype=jnp.float32)[:, None] * jnp.ones((10, 4))
+    b = jnp.ones((10, 4))
+    o1, o2 = est.chunked_map(fn, 3, jax.random.key(0), a, b)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(a * 2.0))
+    np.testing.assert_allclose(np.asarray(o2), np.asarray((a + b).sum(-1)))
