@@ -1,7 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
-``python -m benchmarks.run [fig2|table1|fig4|table2|fig7|refresh|dist|roofline]``.
+``python -m benchmarks.run
+[fig2|table1|fig4|table2|fig7|refresh|dist|serve|roofline]``.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ def main() -> None:
         roofline_report,
         sampling_accuracy,
         sampling_speed,
+        serve_engine,
     )
 
     suites = {
@@ -28,6 +30,7 @@ def main() -> None:
         "fig7": amortized_cost.run,
         "refresh": index_refresh.run,
         "dist": dist_head.run,
+        "serve": serve_engine.run,
         "roofline": roofline_report.run,
     }
     wanted = sys.argv[1:] or list(suites)

@@ -51,22 +51,29 @@ def _unflatten_into(tree: Any, flat: dict[str, np.ndarray]) -> Any:
 
 def save(workdir: str, step: int, state: dict, keep: int = 3) -> str:
     """Synchronous atomic save. ``state`` is any pytree of arrays +
-    a ``meta`` dict entry (plain json-able values)."""
+    a ``meta`` dict entry (plain json-able values).
+
+    The caller's ``state`` dict is never mutated: the ``meta`` split
+    happens on a shallow copy, so an exception anywhere in the write path
+    (np.savez, json.dump, os.replace) cannot leave a live trainer state
+    missing its ``meta`` entry, and the async snapshot path cannot race a
+    trainer that touches ``state`` concurrently.
+    """
     os.makedirs(workdir, exist_ok=True)
     final = os.path.join(workdir, f"ckpt_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    meta = state.pop("meta", {})
-    arrays = _flatten(state)
+    arrays_state = dict(state)
+    meta = arrays_state.pop("meta", {})
+    arrays = _flatten(arrays_state)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "meta": meta, "complete": True}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
-    state["meta"] = meta
     _gc(workdir, keep)
     return final
 

@@ -168,11 +168,26 @@ def head_sample(
     key: jax.Array,
     cfg: HeadConfig,
     index: Any = None,
+    keys: jax.Array | None = None,
+    strict: bool = False,
+    strict_live: jax.Array | None = None,
 ) -> SampleResult:
     """Sample next-token ids for a batch of queries h: (T, d).
 
     Returns SampleResult with (T,)-shaped fields. ``amortized``/``topk_only``
     both use the top-k probe; ``exact`` uses dense Gumbel-max.
+
+    ``keys`` ((T,) typed PRNG keys) pins per-token randomness so a token's
+    sample depends only on its own key, not on batch composition — required
+    for the serving engine's fused-decode / single-step bit-equality.
+    ``strict`` re-samples tokens whose exactness certificate failed
+    (``ok=False``) with the dense exact sampler, inside a ``lax.cond`` so
+    the O(n d) fallback only executes on dispatches that actually contain a
+    flagged token. The fallback draws from an independent key stream (the
+    failed lazy draw is discarded, not reused). ``strict_live`` ((T,) bool)
+    restricts the cond's trigger to live rows — a serving batch's frozen
+    slots / admission pad rows sample garbage whose failed certificates
+    must not charge the whole dispatch the dense fallback.
     """
     cfg = cfg.resolved()
     embf = emb.astype(jnp.float32)[: cfg.n]
@@ -180,7 +195,7 @@ def head_sample(
     t = h.shape[0]
 
     if cfg.mode == "exact":
-        idx, mx = est.dense_gumbel_max(key, embf, h)
+        idx, mx = est.dense_gumbel_max(key, embf, h, keys=keys)
         return SampleResult(
             idx,
             jnp.ones((t,), bool),
@@ -190,6 +205,27 @@ def head_sample(
             jnp.zeros((t,), bool),
         )
 
-    return est.local_gumbel_max(
-        key, embf, h, k=cfg.k, l=cfg.l, index=index, c=cfg.c
+    res = est.local_gumbel_max(
+        key, embf, h, k=cfg.k, l=cfg.l, index=index, c=cfg.c, keys=keys
     )
+    if strict:
+        if keys is None:
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                key, jnp.arange(t, dtype=jnp.uint32)
+            )
+        fb_keys = jax.vmap(jax.random.fold_in, (0, None))(
+            keys, jnp.uint32(0x5743)  # independent stream for the fallback
+        )
+
+        def fallback(_):
+            exact_ids, _ = est.dense_gumbel_max(None, embf, h, keys=fb_keys)
+            return jnp.where(res.ok, res.index, exact_ids)
+
+        needs_fb = ~res.ok
+        if strict_live is not None:
+            needs_fb = needs_fb & strict_live
+        idx = jax.lax.cond(
+            jnp.any(needs_fb), fallback, lambda _: res.index, operand=None
+        )
+        res = res._replace(index=idx)
+    return res

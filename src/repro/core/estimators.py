@@ -331,10 +331,17 @@ def local_gumbel_max(
     n_valid=None,
     c: float = 0.0,
     m_cap: int | None = None,
+    keys: jax.Array | None = None,
 ) -> SampleResult:
     """Batched lazy-Gumbel max over the local rows: per-token SampleResult
     with local ids plus the certificate terms (max_val, bound, overflow)
-    that :func:`combine_sample_pmax` re-checks against the global winner."""
+    that :func:`combine_sample_pmax` re-checks against the global winner.
+
+    ``keys`` (optional, (T,) typed PRNG keys) pins each token's randomness
+    explicitly instead of deriving it as ``fold_in(key, row)`` — the serving
+    engine uses this to make a token's sample a function of (request,
+    position) alone, independent of batch composition, so fused multi-token
+    decode reproduces the single-step path bit for bit."""
     t = h.shape[0]
     nv = emb.shape[0] if n_valid is None else n_valid
     if m_cap is None:
@@ -347,9 +354,10 @@ def local_gumbel_max(
     # use the per-token LIVE slot count (see sample_fixed_b's k_valid);
     # dead slots' -inf perturbed values already never win the argmax
     ids_clean, k_valid = sanitize_topk(topk, nv)
-    keys = jax.vmap(jax.random.fold_in, (None, 0))(
-        key, jnp.arange(t, dtype=jnp.uint32)
-    )
+    if keys is None:
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            key, jnp.arange(t, dtype=jnp.uint32)
+        )
 
     def one(kk, tk_ids, tk_vals, kv, hh):
         score_fn = lambda ids: embf[jnp.minimum(ids, emb.shape[0] - 1)] @ hh
@@ -362,14 +370,23 @@ def local_gumbel_max(
 
 
 def dense_gumbel_max(
-    key: jax.Array, emb: jax.Array, h: jax.Array, n_valid=None
+    key: jax.Array, emb: jax.Array, h: jax.Array, n_valid=None, keys=None
 ) -> tuple[jax.Array, jax.Array]:
-    """Exact dense Gumbel-max per token: (ids (t,), perturbed max (t,))."""
+    """Exact dense Gumbel-max per token: (ids (t,), perturbed max (t,)).
+
+    ``keys`` ((T,) typed PRNG keys) makes each token's Gumbel noise a
+    function of its own key instead of the shared ``key`` — see
+    :func:`local_gumbel_max`."""
     scores = (h.astype(jnp.float32) @ emb.astype(jnp.float32).T)
     if n_valid is not None:
         ok = jnp.arange(emb.shape[0]) < n_valid
         scores = jnp.where(ok[None, :], scores, -jnp.inf)
-    g = jax.random.gumbel(key, scores.shape, dtype=jnp.float32)
+    if keys is None:
+        g = jax.random.gumbel(key, scores.shape, dtype=jnp.float32)
+    else:
+        g = jax.vmap(
+            lambda kk: jax.random.gumbel(kk, scores.shape[1:], jnp.float32)
+        )(keys)
     pert = scores + g
     return jnp.argmax(pert, -1).astype(jnp.int32), jnp.max(pert, -1)
 

@@ -1,7 +1,8 @@
-"""Serving launcher: batched decode with the amortized lazy-Gumbel sampler.
+"""Serving launcher: pipelined batched-decode engine over the amortized
+lazy-Gumbel sampler.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-      --requests 16 --new-tokens 32
+      --requests 16 --new-tokens 32 --decode-window 8
 """
 from __future__ import annotations
 
@@ -33,6 +34,21 @@ def main() -> None:
     ap.add_argument("--vocab", type=int, default=0,
                     help="override vocab size (e.g. to exercise the "
                          "amortized head on a smoke config)")
+    ap.add_argument("--engine", default="pipelined",
+                    choices=["pipelined", "reference"],
+                    help="pipelined: batched prefill + fused decode window; "
+                         "reference: one dispatch per token (comparator)")
+    ap.add_argument("--decode-window", type=int, default=8,
+                    help="tokens decoded per dispatch (pipelined engine)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt-length padding bucket for batched prefill")
+    ap.add_argument("--overlength", default="truncate",
+                    choices=["truncate", "reject"],
+                    help="admission policy for prompts longer than "
+                         "max_seq - new_tokens")
+    ap.add_argument("--strict", action="store_true",
+                    help="re-sample certificate-failed tokens exactly "
+                         "(in-dispatch fallback)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -53,16 +69,28 @@ def main() -> None:
     ]
     server = Server(cfg, params, ServeConfig(
         batch_slots=args.slots, max_seq=args.max_seq,
-        max_new_tokens=args.new_tokens,
+        max_new_tokens=args.new_tokens, engine=args.engine,
+        decode_window=args.decode_window, prefill_chunk=args.prefill_chunk,
+        overlength=args.overlength, strict=args.strict,
     ))
     results = server.run(prompts)
     toks = sum(len(r.tokens) for r in results)
+    st = server.stats
     print(json.dumps({
         "requests": len(results),
         "decoded_tokens": toks,
-        "tokens_per_s": round(toks / server.stats["wall_s"], 1),
-        "ok_rate": round(server.stats["ok"] / max(server.stats["tokens"], 1), 4),
-        "steps": server.stats["steps"],
+        "tokens_per_s": round(toks / st["wall_s"], 1),
+        "prefill_tokens": st["prefill_tokens"],
+        "prefill_dispatches": st["prefill_dispatches"],
+        "decode_dispatches": st["decode_dispatches"],
+        "ok_rate": round(st["ok"] / max(st["tokens"], 1), 4),
+        "fallbacks": st["fallbacks"],
+        "rejected": st["rejected"],
+        "steps": st["steps"],
+        "ttft_p50_ms": round(1e3 * float(np.median(
+            [r.ttft_s for r in results if r.status == "ok"] or [0.0])), 2),
+        "itl_p50_ms": round(float(np.median(
+            [r.itl_ms for r in results if r.status == "ok"] or [0.0])), 3),
         "index_mb": (
             round(server.index.memory_bytes() / 1e6, 2)
             if server.index is not None else 0.0

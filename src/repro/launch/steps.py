@@ -16,7 +16,9 @@ from repro.models.model import Model
 from repro.optim import adamw
 
 __all__ = ["TrainConfig", "make_train_step", "make_serve_step",
-           "make_prefill_step", "make_encode_step"]
+           "make_prefill_step", "make_encode_step", "slot_keys",
+           "make_reference_serve_step", "make_decode_loop_step",
+           "make_prefill_into_cache_step"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +93,143 @@ def make_serve_step(model: Model):
     def serve_step(params, cache, ids, pos, key, index=None):
         nxt, ok, cache = model.decode_step(
             params, cache, ids, pos, key, index=index
+        )
+        return nxt, ok, cache, pos + 1
+
+    return serve_step
+
+
+def slot_keys(base_key, rids: jax.Array, pos: jax.Array):
+    """Per-slot sample keys: ``fold_in(fold_in(base, rid), pos)``.
+
+    Making the key a function of (request id, position) — instead of the
+    host loop's step counter — is what lets the fused decode window, the
+    batched prefill path, and the single-step reference loop draw
+    *identical* samples for the same request: the derivation is invariant
+    to batch composition, slot assignment, and dispatch fusion.
+    """
+
+    def one(r, p):
+        return jax.random.fold_in(jax.random.fold_in(base_key, r), p)
+
+    return jax.vmap(one)(rids.astype(jnp.uint32), pos.astype(jnp.uint32))
+
+
+def _advance(state: dict, nxt, eos_id: int, max_seq: int):
+    """Shared slot-state transition for one decoded token.
+
+    ``state`` is the engine's device-resident per-slot record — the single
+    source of truth for positions and liveness (the host only mirrors it
+    from the emitted-token stream):
+      ids (B,) int32    last token (frozen once inactive)
+      pos (B,) int32    position of that token
+      active (B,) bool  slot is decoding a live request
+      budget (B,) int32 remaining new-token allowance
+      rid (B,) int32    request id (keys + host bookkeeping)
+    Returns (state', emitted) where emitted marks slots that produced a
+    token this step. Inactive slots are frozen (ids/pos don't move) but
+    their trunk still runs, so recurrent SSM/RG-LRU cache state keeps
+    mutating — wasted compute whose output is never read. That is safe
+    ONLY because admission replaces the slot's cache state wholesale
+    (prefill_into_cache); a frozen slot must never be resumed without a
+    fresh prefill.
+    """
+    active = state["active"]
+    ids = jnp.where(active, nxt, state["ids"])
+    pos = jnp.where(active, state["pos"] + 1, state["pos"])
+    budget = jnp.where(active, state["budget"] - 1, state["budget"])
+    eos_hit = (ids == eos_id) if eos_id >= 0 else jnp.zeros_like(active)
+    done = active & (eos_hit | (budget <= 0) | (pos + 1 > max_seq - 1))
+    return dict(state, ids=ids, pos=pos, budget=budget,
+                active=active & ~done), active
+
+
+def make_decode_loop_step(model: Model, window: int, eos_id: int,
+                          max_seq: int, strict: bool = False):
+    """Fused multi-token decode: ``decode_loop(params, cache, state,
+    base_key, index=None) -> (cache, state, tokens (T,B), ok (T,B),
+    emitted (T,B))``.
+
+    A ``lax.scan`` decodes ``window`` tokens per dispatch with per-slot
+    active masks and on-device EOS/length-budget detection — amortizing
+    dispatch + host-sync overhead ``window``-fold. Slots that finish
+    mid-window stop emitting (and stop perturbing their state) on device;
+    the host discovers this from the emitted mask after the fact.
+    """
+
+    def decode_loop(params, cache, state, base_key, index=None):
+        def body(carry, _):
+            cache, state = carry
+            keys = slot_keys(base_key, state["rid"], state["pos"])
+            nxt, ok, cache = model.decode_step(
+                params, cache, state["ids"], state["pos"], None, index=index,
+                keys=keys, strict=strict, strict_live=state["active"],
+            )
+            state, emitted = _advance(state, nxt, eos_id, max_seq)
+            return (cache, state), (state["ids"], ok, emitted)
+
+        (cache, state), (toks, oks, emitted) = jax.lax.scan(
+            body, (cache, state), None, length=window
+        )
+        return cache, state, toks, oks, emitted
+
+    return decode_loop
+
+
+def make_prefill_into_cache_step(model: Model, max_seq: int, eos_id: int,
+                                 max_new_tokens: int, strict: bool = False):
+    """Chunked batched prefill + slot admission: ``prefill_admit(params,
+    cache, state, tokens (Bn,Lp), lengths, slots, rids, base_key,
+    index=None) -> (cache, state, first_ids, ok)``.
+
+    Writes each admitted prompt's KV/SSM state straight into its slot's
+    cache (one dispatch per admission batch instead of one per prompt
+    token), samples the first output token from the last valid hidden
+    state, and commits the slot records (ids/pos/active/budget/rid) on
+    device. Rows with slot >= batch_slots are admission padding — their
+    scatters are dropped.
+    """
+
+    def prefill_admit(params, cache, state, tokens, lengths, slots, rids,
+                      base_key, index=None):
+        lengths = lengths.astype(jnp.int32)
+        keys = slot_keys(base_key, rids, lengths - 1)
+        nxt, ok, cache = model.prefill_into_cache(
+            params, cache, tokens, lengths, slots, keys, max_seq=max_seq,
+            index=index, strict=strict,
+            strict_live=rids >= 0,  # admission pad rows sample garbage
+        )
+        budget = jnp.full_like(lengths, max_new_tokens - 1)
+        eos_hit = (nxt == eos_id) if eos_id >= 0 else jnp.zeros(
+            nxt.shape, bool
+        )
+        alive = ~(eos_hit | (budget <= 0) | (lengths + 1 > max_seq - 1))
+        state = {
+            "ids": state["ids"].at[slots].set(nxt),
+            "pos": state["pos"].at[slots].set(lengths),
+            "active": state["active"].at[slots].set(alive),
+            "budget": state["budget"].at[slots].set(budget),
+            "rid": state["rid"].at[slots].set(rids.astype(jnp.int32)),
+        }
+        # `alive` stays device-internal (committed into state["active"]):
+        # the host re-derives liveness from the emitted tokens
+        return cache, state, nxt, ok
+
+    return prefill_admit
+
+
+def make_reference_serve_step(model: Model, strict: bool = False):
+    """Single-token serve step with engine-compatible key derivation:
+    ``serve_step(params, cache, ids, pos, rids, base_key, index=None) ->
+    (next_ids, ok, cache, pos+1)``. This is the teacher-forced comparator
+    the engine is validated against (same samples, one dispatch per
+    token)."""
+
+    def serve_step(params, cache, ids, pos, rids, base_key, index=None):
+        keys = slot_keys(base_key, rids, pos)
+        nxt, ok, cache = model.decode_step(
+            params, cache, ids, pos, None, index=index, keys=keys,
+            strict=strict,
         )
         return nxt, ok, cache, pos + 1
 

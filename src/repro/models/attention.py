@@ -187,8 +187,19 @@ def prefill(
     *,
     window: int | None = None,
     prefix: int = 0,
+    lengths: jax.Array | None = None,  # (B,) valid prompt lengths
 ) -> tuple[jax.Array, dict]:
-    """Forward + KV-cache build. Returns (out, cache)."""
+    """Forward + KV-cache build. Returns (out, cache).
+
+    ``lengths`` enables right-padded batched prefill (the serving engine's
+    chunked admission path): row b's tokens at positions >= lengths[b] are
+    pads. Pads never corrupt the cache — each ring slot j is filled from
+    the newest VALID position p ≡ j (mod s_c), p < lengths[b] (exactly the
+    state a token-by-token decode of the same prompt would leave), and
+    slots with no valid position stay zero (masked by the decode-side
+    ``lengths`` window anyway). Causality keeps pad queries from affecting
+    valid outputs: pads sit strictly after every valid position.
+    """
     b, l, d = x.shape
     dt = x.dtype
     win = cfg.window if window is None else window
@@ -204,7 +215,18 @@ def prefill(
     )
     s_c = min(win, max_seq) if win else max_seq
     shape = (b, s_c, cfg.n_kv_heads, cfg.head_dim)
-    if l <= s_c:
+    if lengths is not None:
+        # per-row ring placement: slot j holds position
+        # p = len-1 - ((len-1-j) mod s_c), the newest valid p ≡ j (mod s_c)
+        j = jnp.arange(s_c)
+        pj = (lengths[:, None] - 1) - ((lengths[:, None] - 1 - j[None]) % s_c)
+        live = pj >= 0  # (B, s_c); rows shorter than s_c leave tail slots 0
+        pc = jnp.clip(pj, 0, l - 1)[..., None, None]
+        ck = jnp.where(live[..., None, None],
+                       jnp.take_along_axis(k, pc, axis=1), 0).astype(dt)
+        cv = jnp.where(live[..., None, None],
+                       jnp.take_along_axis(v, pc, axis=1), 0).astype(dt)
+    elif l <= s_c:
         ck = jnp.zeros(shape, dt).at[:, :l].set(k)
         cv = jnp.zeros(shape, dt).at[:, :l].set(v)
     else:  # ring buffer: keep the last s_c keys at their ring slots
@@ -216,8 +238,14 @@ def prefill(
     return out.reshape(b, l, cfg.d_attn) @ p["wo"].astype(dt), cache
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> dict:
-    s_c = min(cfg.window, max_seq) if cfg.window else max_seq
+def init_cache(
+    cfg: ArchConfig, batch: int, max_seq: int, dtype, window: int | None = None
+) -> dict:
+    """``window`` overrides cfg.window (griffin layers pass local_window) so
+    the decode ring size matches what prefill() builds for the same layer —
+    and so the ring itself enforces the sliding window at decode time."""
+    win = cfg.window if window is None else window
+    s_c = min(win, max_seq) if win else max_seq
     shape = (batch, s_c, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 

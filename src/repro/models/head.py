@@ -118,23 +118,42 @@ def dist_head_sample(
     key: jax.Array,
     cfg: HeadConfig,
     index=None,  # optional ShardedIndex over the same (Vp, d) table
+    keys: jax.Array | None = None,  # (T,) per-token typed PRNG keys
 ) -> tuple[jax.Array, jax.Array]:
-    """Distributed lazy-Gumbel sampling. Returns (ids (T,), ok (T,))."""
+    """Distributed lazy-Gumbel sampling. Returns (ids (T,), ok (T,)).
+
+    ``keys`` pins each token's randomness to its own key (each shard folds
+    in its model-axis index on top, keeping per-shard draws independent):
+    the serving engine derives these from (request id, position) so samples
+    are invariant to batch composition and decode fusion. Raw key data is
+    threaded through shard_map (typed key arrays don't cross the shard_map
+    boundary on all jax versions)."""
     cfg = cfg.resolved()
     mp = mesh.shape["model"]
     vp = emb.shape[0]
     v_loc, k_loc, l_loc = _shard_geometry(cfg, vp, mp)
+    use_keys = keys is not None
+    if key is None:  # all randomness comes from `keys`; placeholder only
+        key = jax.random.key(0)
 
-    def local_fn(emb_loc, h_loc, key, *idx_state):
+    def local_fn(emb_loc, h_loc, key, *rest):
         midx = jax.lax.axis_index("model")
         offset = midx * v_loc
         n_valid = jnp.clip(cfg.n - offset, 0, v_loc)
         key = jax.random.fold_in(key, midx)
         t_loc = h_loc.shape[0]
+        if use_keys:
+            kd_loc, idx_state = rest[0], rest[1:]
+            keys_loc = jax.vmap(jax.random.fold_in, (0, None))(
+                jax.random.wrap_key_data(kd_loc), midx
+            )
+        else:
+            idx_state = rest
+            keys_loc = None
 
         if cfg.mode == "exact":
             loc_best, val = est.dense_gumbel_max(
-                key, emb_loc, h_loc, n_valid=n_valid
+                key, emb_loc, h_loc, n_valid=n_valid, keys=keys_loc
             )
             gid = loc_best + offset
             ok = jnp.ones((t_loc,), bool)
@@ -143,7 +162,7 @@ def dist_head_sample(
             index_loc = index.local_index(idx_state[0]) if idx_state else None
             res = est.local_gumbel_max(
                 key, emb_loc, h_loc, k=k_loc, l=l_loc, index=index_loc,
-                n_valid=n_valid, c=cfg.c,
+                n_valid=n_valid, c=cfg.c, keys=keys_loc,
             )
             gid = res.index + offset
             val = res.max_val
@@ -154,11 +173,16 @@ def dist_head_sample(
 
     idx_args, idx_specs = _index_args(index)
     tok_ax = _token_spec(mesh, h.shape[0])
+    key_args, key_specs = (), ()
+    if use_keys:
+        key_args = (jax.random.key_data(keys),)
+        key_specs = (P(tok_ax, None),)
     fn = shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(P("model", None), P(tok_ax, None), P(), *idx_specs),
+        in_specs=(P("model", None), P(tok_ax, None), P(),
+                  *key_specs, *idx_specs),
         out_specs=(P(tok_ax), P(tok_ax)),
         check_vma=False,
     )
-    return fn(emb, h, key, *idx_args)
+    return fn(emb, h, key, *key_args, *idx_args)

@@ -16,6 +16,19 @@ def dense_init(key, shape, in_axis: int = -2) -> jax.Array:
     )
 
 
+def masked_conv_tail(x: jax.Array, lengths: jax.Array, w1: int) -> jax.Array:
+    """Per-row causal-conv tail for right-padded batched prefill: the
+    ``w1`` rows of ``x`` (B, L, C) just before each row's ``lengths[b]``
+    position — i.e. what a token-by-token decode of the same prompt would
+    hold in its conv cache. Rows shorter than ``w1`` are zero-filled,
+    matching a zero-initialized decode conv cache."""
+    idx = lengths[:, None] - w1 + jnp.arange(w1)[None]  # (B, w1)
+    tail = jnp.take_along_axis(
+        x, jnp.clip(idx, 0, x.shape[1] - 1)[..., None], axis=1
+    )
+    return jnp.where((idx >= 0)[..., None], tail, 0).astype(x.dtype)
+
+
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

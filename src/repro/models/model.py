@@ -140,11 +140,18 @@ class Model:
         return transformer.init_cache(self.cfg, batch, max_seq, dtype)
 
     def decode_step(
-        self, params, cache, ids: jax.Array, pos: jax.Array, key, index=None
+        self, params, cache, ids: jax.Array, pos: jax.Array, key, index=None,
+        *, keys=None, strict: bool = False, strict_live=None,
     ) -> tuple[jax.Array, jax.Array, Any]:
         """One serving step: (B,) last ids + (B,) positions -> next ids.
 
         Returns (next_ids (B,), ok (B,), new_cache).
+
+        ``keys`` ((B,) typed PRNG keys) pins each slot's sample randomness;
+        the serving engine derives them from (request id, position) so a
+        token's sample is invariant to batch composition and decode fusion.
+        ``strict`` re-samples certificate-failed tokens exactly (in-dispatch
+        ``lax.cond`` fallback — single-device head only).
         """
         cfg = self.cfg
         x = params["embed"][ids][:, None].astype(COMPUTE_DTYPE)  # (B,1,d)
@@ -152,13 +159,19 @@ class Model:
                                                   mesh=self.mesh)
         hq = h[:, 0]  # (B, d)
         if self._head_mesh() is not None:
+            if strict:
+                raise NotImplementedError(
+                    "strict exact-fallback is not wired through the "
+                    "distributed head; serve with strict=False on a TP mesh"
+                )
             nxt, ok = dist_head.dist_head_sample(
                 self.mesh, self._out_embed(params), hq, key, self.head_cfg,
-                index=index,
+                index=index, keys=keys,
             )
         else:
             res = ah.head_sample(
-                self._out_embed(params), hq, key, self.head_cfg, index=index
+                self._out_embed(params), hq, key, self.head_cfg, index=index,
+                keys=keys, strict=strict, strict_live=strict_live,
             )
             nxt, ok = res.index, res.ok
         return nxt, ok, cache
@@ -189,6 +202,68 @@ class Model:
             )
             nxt, ok = res.index, res.ok
         return nxt, ok, jnp.full((b,), l, jnp.int32), cache
+
+    def prefill_into_cache(
+        self, params, cache, tokens: jax.Array, lengths: jax.Array,
+        slots: jax.Array, keys, max_seq: int, index=None,
+        strict: bool = False, strict_live=None,
+    ) -> tuple[jax.Array, jax.Array, Any]:
+        """Batched chunked prefill written directly into serving-cache slots.
+
+        One dispatch runs the full prompt forward for a right-padded
+        admission batch ``tokens`` (Bn, Lp), builds each row's KV/SSM/LRU
+        state as of its true ``lengths[b]``, scatters that state into
+        ``cache`` at ``slots[b]`` (replacing whatever the recycled slot
+        held), and samples the first output token from the last valid
+        hidden state — replacing len(prompt) teacher-forced decode
+        dispatches with one.
+
+        Args:
+          tokens: (Bn, Lp) int32, right-padded prompts; Lp is the engine's
+            static chunk bucket (pad rows beyond the admitted count use an
+            out-of-range slot id and are dropped by the scatter).
+          lengths: (Bn,) true prompt lengths (>= 1).
+          slots: (Bn,) serving-cache slot per row; rows with slot >= B are
+            discarded (admission-batch padding).
+          keys: (Bn,) per-request typed PRNG keys for the first sample.
+          max_seq: the serving cache's max_seq (cache shapes must match).
+
+        Returns (next_ids (Bn,), ok (Bn,), cache).
+        """
+        cfg = self.cfg
+        if cfg.frontend != "none":
+            raise NotImplementedError(
+                "prefill_into_cache serves token-LM frontends only"
+            )
+        x = params["embed"][tokens].astype(COMPUTE_DTYPE)  # (Bn, Lp, d)
+        b, l, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+        h, part = transformer.apply_trunk_prefill(
+            params, cfg, x, pos, max_seq=max_seq, mesh=self.mesh,
+            lengths=lengths,
+        )
+        hq = jnp.take_along_axis(
+            h, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0]  # (Bn, d): hidden state at each row's last valid token
+        if self._head_mesh() is not None:
+            if strict:
+                raise NotImplementedError(
+                    "strict exact-fallback is not wired through the "
+                    "distributed head; serve with strict=False on a TP mesh"
+                )
+            nxt, ok = dist_head.dist_head_sample(
+                self.mesh, self._out_embed(params), hq, None, self.head_cfg,
+                index=index, keys=keys,
+            )
+        else:
+            res = ah.head_sample(
+                self._out_embed(params), hq, None, self.head_cfg,
+                index=index, keys=keys, strict=strict,
+                strict_live=strict_live,
+            )
+            nxt, ok = res.index, res.ok
+        cache = transformer.insert_cache_slots(cache, part, slots)
+        return nxt, ok, cache
 
     # ---------------------------------------------------------------- encoder
     def encode(self, params, batch) -> jax.Array:

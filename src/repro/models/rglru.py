@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig
-from repro.models.layers import dense_init
+from repro.models.layers import dense_init, masked_conv_tail
 
 __all__ = ["init", "forward", "init_cache", "decode"]
 
@@ -61,9 +61,12 @@ def _gates(p: dict, u: jax.Array) -> tuple[jax.Array, jax.Array]:
     return log_a, gi
 
 
-def _rglru(p: dict, u: jax.Array) -> jax.Array:
+def _rglru(p: dict, u: jax.Array, lengths: jax.Array | None = None) -> jax.Array:
     """u: (B, L, W) conv output -> recurrence output, fp32 inside."""
     log_a, gi = _gates(p, u)  # (B, L, W) fp32
+    if lengths is not None:  # pads become the recurrence identity (a=1, b=0)
+        valid = jnp.arange(u.shape[1])[None, :] < lengths[:, None]
+        log_a = jnp.where(valid[..., None], log_a, 0.0)
     a = jnp.exp(log_a)
     beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))  # sqrt(1 - a^2)
     b_term = beta * gi * u.astype(jnp.float32)
@@ -77,17 +80,31 @@ def _rglru(p: dict, u: jax.Array) -> jax.Array:
     return h
 
 
-def forward(p: dict, cfg: ArchConfig, x: jax.Array, return_cache: bool = False):
+def forward(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    return_cache: bool = False,
+    lengths: jax.Array | None = None,  # (B,) valid prefix lengths
+):
+    """``lengths`` enables right-padded batched prefill: pad positions get
+    log_a masked to 0 — i.e. a_t = 1 and beta = sqrt(1-a²) = 0, the
+    recurrence's identity element — so ``h`` passes through pads unchanged
+    and the cached state equals the state after the last valid token."""
     dt = x.dtype
+    b, l, _ = x.shape
     gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt))
     u_raw = x @ p["w_in"].astype(dt)
     u = _causal_conv(u_raw, p["conv"].astype(dt))
-    h = _rglru(p, u)
+    h = _rglru(p, u, lengths=lengths)
     out = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
     if return_cache:
+        w1 = cfg.conv_width - 1
+        tail = (u_raw[:, -w1:] if lengths is None
+                else masked_conv_tail(u_raw, lengths, w1))
         cache = {
             "state": h[:, -1],  # fp32
-            "conv": u_raw[:, -(cfg.conv_width - 1) :],
+            "conv": tail,
         }
         return out, cache
     return out

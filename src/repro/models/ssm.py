@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import dense_init, masked_conv_tail, rms_norm
 
 __all__ = ["init", "forward", "init_cache", "decode"]
 
@@ -85,7 +85,15 @@ def forward(
     x: jax.Array,
     chunk: int = 128,
     return_cache: bool = False,
+    lengths: jax.Array | None = None,  # (B,) valid prefix lengths
 ):
+    """``lengths`` enables right-padded batched prefill: pad positions
+    (t >= lengths[b]) get dt masked to 0, which makes their decay factor
+    exp(dt·a)=1 and their state contribution 0 — the recurrent state passes
+    through pads unchanged, so the returned cache equals the state after
+    the last VALID token. Outputs at pad positions are garbage (unused);
+    outputs at valid positions are untouched (pads sit after them and the
+    conv/scan are causal)."""
     b, l, d = x.shape
     h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     q = min(chunk, l)
@@ -93,6 +101,9 @@ def forward(
     nc = l // q
 
     ubc, z, dt = _project(p, cfg, x)
+    if lengths is not None:
+        valid = jnp.arange(l)[None, :] < lengths[:, None]  # (B, L)
+        dt = jnp.where(valid[..., None], dt, 0.0)
     u, bb, cc = _split_conv_out(cfg, _causal_conv(ubc, p["conv"].astype(x.dtype)))
 
     a = -jnp.exp(p["a_log"])  # (H,)
@@ -137,7 +148,10 @@ def forward(
     y = rms_norm(y, p["norm"], cfg.norm_eps)
     out = y @ p["wo"].astype(x.dtype)
     if return_cache:
-        cache = {"state": final_state, "conv": ubc[:, -(cfg.conv_width - 1) :]}
+        w1 = cfg.conv_width - 1
+        tail = (ubc[:, -w1:] if lengths is None
+                else masked_conv_tail(ubc, lengths, w1))
+        cache = {"state": final_state, "conv": tail}
         return out, cache
     return out
 

@@ -24,9 +24,18 @@ __all__ = [
     "apply_trunk",
     "init_cache",
     "apply_trunk_decode",
+    "insert_cache_slots",
 ]
 
 REMAT = True  # module-level knob (tests may disable for speed)
+
+
+def _layer_window(cfg: ArchConfig) -> int:
+    """Effective attention window for this arch's attn layers. ONE source
+    of truth: prefill, decode, and cache sizing must agree, or the decode
+    ring and the prefill-built cache silently disagree on shape/semantics
+    (the griffin local_window bug this replaces)."""
+    return cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
 
 
 def _constrain_batch(x: jax.Array, mesh):
@@ -128,7 +137,7 @@ def _apply_block(
     if kind == "ssm":
         return h + ssm.forward(p["mix"], cfg, x), aux
     if kind == "attn":
-        win = cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+        win = _layer_window(cfg)
         mix = attention.forward(
             p["mix"], cfg, x, positions, window=win, prefix=prefix
         )
@@ -191,18 +200,22 @@ def _apply_block_prefill(
     max_seq: int,
     prefix: int,
     mesh=None,
+    lengths=None,
 ) -> tuple[jax.Array, dict]:
     x = rms_norm(h, p["norm1"], cfg.norm_eps)
     if kind == "ssm":
-        mix, cache = ssm.forward(p["mix"], cfg, x, return_cache=True)
+        mix, cache = ssm.forward(p["mix"], cfg, x, return_cache=True,
+                                 lengths=lengths)
         return h + mix, cache
     if kind == "attn":
-        win = cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+        win = _layer_window(cfg)
         mix, cache = attention.prefill(
-            p["mix"], cfg, x, positions, max_seq, window=win, prefix=prefix
+            p["mix"], cfg, x, positions, max_seq, window=win, prefix=prefix,
+            lengths=lengths,
         )
     else:
-        mix, cache = rglru.forward(p["mix"], cfg, x, return_cache=True)
+        mix, cache = rglru.forward(p["mix"], cfg, x, return_cache=True,
+                                   lengths=lengths)
     h = h + mix
     x = rms_norm(h, p["norm2"], cfg.norm_eps)
     if cfg.is_moe:
@@ -226,6 +239,7 @@ def apply_trunk_prefill(
     max_seq: int,
     prefix: int = 0,
     mesh=None,
+    lengths=None,  # (B,) valid lengths for right-padded batched prefill
 ) -> tuple[jax.Array, list]:
     caches = []
     x = _constrain_batch(x, mesh)
@@ -237,7 +251,7 @@ def apply_trunk_prefill(
             for j, kind in enumerate(pattern):
                 h, cs[str(j)] = _apply_block_prefill(
                     layer_p[str(j)], cfg, kind, h, positions, max_seq, prefix,
-                    mesh=mesh,
+                    mesh=mesh, lengths=lengths,
                 )
             return _constrain_batch(h, mesh), cs
 
@@ -249,12 +263,28 @@ def apply_trunk_prefill(
     return h, caches
 
 
+def insert_cache_slots(full: list, part: list, slots: jax.Array) -> list:
+    """Scatter a prefill-built cache ``part`` (leaves (layers, Bn, ...))
+    into batch slots of a serving cache ``full`` (leaves (layers, B, ...)).
+
+    The whole per-slot state is replaced — KV ring, SSM/RG-LRU state and
+    conv tails — so a recycled slot carries nothing over from its previous
+    request. Rows whose slot id is out of range (>= B) are dropped by XLA's
+    scatter semantics; the engine uses slot id B for the pad rows of a
+    partially-filled admission batch.
+    """
+    return jax.tree.map(
+        lambda f, p: f.at[:, slots].set(p.astype(f.dtype)), full, part
+    )
+
+
 # ----------------------------------------------------------------- decode
 
 
 def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int, dtype):
     if kind == "attn":
-        return attention.init_cache(cfg, batch, max_seq, dtype)
+        win = _layer_window(cfg)
+        return attention.init_cache(cfg, batch, max_seq, dtype, window=win)
     if kind == "ssm":
         return ssm.init_cache(cfg, batch, dtype)
     if kind == "rec":
@@ -290,7 +320,7 @@ def _apply_block_decode(
         mix, cache = ssm.decode(p["mix"], cfg, x, cache)
         return h + mix, cache
     if kind == "attn":
-        win = cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+        win = _layer_window(cfg)
         mix, cache = attention.decode(p["mix"], cfg, x, cache, pos, window=win)
     else:
         mix, cache = rglru.decode(p["mix"], cfg, x, cache)

@@ -1,24 +1,50 @@
-"""Batched decode server: continuous batching over the amortized sampler.
+"""Pipelined batched-decode engine: continuous batching over the amortized
+sampler.
 
 The serving regime is the paper's sweet spot: the output embedding (the
 MIPS database) is frozen, every decoded token issues a fresh query θ = h,
 and the stateful head index (core/mips) is built once at server start —
-pure amortization. The index rides through the jitted serve step as a
-pytree argument, so a hot-swap (e.g. after a model push, via
-``Server.refresh_index``) never recompiles the step.
+pure amortization. The index rides through the jitted steps as a pytree
+argument, so a hot-swap (e.g. after a model push, via
+``Server.refresh_index``) never recompiles.
 
-``Server.run`` drives a synchronous decode loop over a slot-based batch:
-finished sequences (EOS or length budget) immediately release their slot
-to the next queued request (continuous batching). Per-step ``ok`` flags
-from the lazy-Gumbel sampler are tracked; a non-ok sample is provably-
-possibly-inexact, and the server falls back to an exact softmax sample for
-that slot when ``strict=True``.
+Engine (``ServeConfig.engine="pipelined"``, the default):
+
+* **Batched prefill** — admitted prompts are right-padded to a chunk
+  bucket and run through ``Model.prefill_into_cache`` in ONE dispatch that
+  writes each prompt's KV/SSM state directly into its slot's cache and
+  samples the first output token. A 500-token prompt costs one dispatch,
+  not 500.
+* **Fused decode** — a ``lax.scan`` decodes ``decode_window`` tokens per
+  dispatch with per-slot active masks and on-device EOS/length-budget
+  detection, amortizing dispatch + host-sync cost ``T``-fold while keeping
+  the lazy-Gumbel ``ok`` certificate per token.
+* **Async host pipeline** — one dispatch is always kept in flight: the
+  host issues window t+1 before converting window t's tokens to numpy, so
+  Python bookkeeping overlaps device compute. Per-slot position/active
+  state lives ON DEVICE (single source of truth); the host only mirrors it
+  from the emitted-token stream.
+* **Admission control** — prompts longer than ``max_seq -
+  max_new_tokens`` are truncated (keep the newest tokens) or rejected at
+  admission per ``ServeConfig.overlength``; they can no longer walk
+  ``pos`` past the KV cache.
+
+Sample keys derive from (request id, position) — ``launch.steps.slot_keys``
+— so tokens are bit-identical between the fused engine and the single-step
+reference loop (``engine="reference"``), which teacher-forces prompts one
+token per dispatch with the same key discipline and is kept as the
+correctness comparator and benchmark baseline.
+
+``strict=True`` re-samples certificate-failed tokens (``ok=False``) with
+the exact dense sampler inside the dispatch (``lax.cond`` — the O(n·d)
+fallback only executes when a window actually contains a flagged token).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +55,7 @@ from repro.launch import steps as steps_lib
 from repro.models.config import ArchConfig
 from repro.models.model import Model
 
-__all__ = ["ServeConfig", "Server"]
+__all__ = ["ServeConfig", "Server", "RequestResult"]
 
 
 @dataclasses.dataclass
@@ -39,7 +65,18 @@ class ServeConfig:
     max_new_tokens: int = 64
     eos_id: int = -1  # -1: never stops early (synthetic workloads)
     seed: int = 0
-    strict: bool = False  # re-sample exactly when ok=False
+    strict: bool = False  # exact in-dispatch re-sample when ok=False
+    engine: str = "pipelined"  # pipelined | reference (single-step loop)
+    decode_window: int = 8  # tokens decoded per dispatch (pipelined)
+    prefill_chunk: int = 32  # prompt-length bucket granularity (pipelined)
+    overlength: str = "truncate"  # truncate (keep newest) | reject
+
+    @property
+    def prompt_cap(self) -> int:
+        """Longest admissible prompt: the length budget must leave room
+        for max_new_tokens generated positions inside max_seq. Positive
+        by construction — Server rejects max_new_tokens >= max_seq."""
+        return self.max_seq - self.max_new_tokens
 
 
 @dataclasses.dataclass
@@ -48,20 +85,116 @@ class RequestResult:
     tokens: list
     ok_rate: float
     latency_s: float
+    ttft_s: float = 0.0  # host-observed time to first token
+    itl_ms: float = 0.0  # host-observed mean inter-token latency
+    prompt_len: int = 0  # admitted (possibly truncated) prompt length
+    status: str = "ok"  # ok | rejected
+
+
+def _bucket(n: int, chunk: int) -> int:
+    """Prompt-length bucket: multiple of ``chunk``, then coarsened so the
+    trunk's static tiling constraints hold (SSM chunk 128, attention
+    q-block 512 must divide the padded length)."""
+    out = -(-n // chunk) * chunk
+    if out <= 128:
+        return out
+    if out <= 512:
+        return -(-out // 128) * 128
+    return -(-out // 512) * 512
 
 
 class Server:
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig, mesh=None):
+        if scfg.engine not in ("pipelined", "reference"):
+            raise ValueError(f"unknown engine {scfg.engine!r}")
+        if scfg.overlength not in ("truncate", "reject"):
+            raise ValueError(f"unknown overlength policy {scfg.overlength!r}")
+        if scfg.decode_window < 1 or scfg.prefill_chunk < 1:
+            raise ValueError("decode_window and prefill_chunk must be >= 1")
+        if scfg.max_new_tokens >= scfg.max_seq:
+            raise ValueError(
+                f"max_new_tokens={scfg.max_new_tokens} leaves no room for "
+                f"any prompt inside max_seq={scfg.max_seq}"
+            )
+        if scfg.strict and mesh is not None and "model" in mesh.shape:
+            raise ValueError(
+                "strict exact-fallback is not wired through the distributed "
+                "head; serve with strict=False on a TP mesh"
+            )
         self.cfg = cfg
         self.scfg = scfg
         self.model = Model(cfg, mesh)
         self.params = params
-        self.step_fn = jax.jit(
-            steps_lib.make_serve_step(self.model), donate_argnums=(1,)
+        # canonical shardings for the engine's device state: without a
+        # fixed target, a fresh host-built state (single-device) and the
+        # previous dispatch's GSPMD-placed outputs hash as different jit
+        # signatures and every run would recompile the engine steps
+        self._cache_sh = self._state_sh = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.launch import mesh as mesh_lib
+
+            shapes = jax.eval_shape(
+                lambda: self.model.init_cache(scfg.batch_slots, scfg.max_seq)
+            )
+            self._cache_sh = mesh_lib.cache_shardings(shapes, mesh, cfg)
+            rep = NamedSharding(mesh, P())
+            self._state_sh = {k: rep for k in
+                              ("ids", "pos", "active", "budget", "rid")}
+
+        def _pin(cache, state):
+            if self._cache_sh is None:
+                return cache, state
+            cache = jax.lax.with_sharding_constraint(cache, self._cache_sh)
+            state = jax.lax.with_sharding_constraint(state, self._state_sh)
+            return cache, state
+
+        # fused decode window: cache + per-slot state are device-resident
+        # and donated through every dispatch
+        decode_core = steps_lib.make_decode_loop_step(
+            self.model, scfg.decode_window, scfg.eos_id, scfg.max_seq,
+            strict=scfg.strict,
+        )
+
+        def decode_step(params, cache, state, base_key, index=None):
+            cache, state, toks, oks, emitted = decode_core(
+                params, cache, state, base_key, index
+            )
+            cache, state = _pin(cache, state)
+            return cache, state, toks, oks, emitted
+
+        self.step_fn = jax.jit(decode_step, donate_argnums=(1, 2))
+
+        prefill_core = steps_lib.make_prefill_into_cache_step(
+            self.model, scfg.max_seq, scfg.eos_id, scfg.max_new_tokens,
+            strict=scfg.strict,
+        )
+
+        def prefill_step(params, cache, state, tokens, lengths, slots, rids,
+                         base_key, index=None):
+            cache, state, nxt, ok = prefill_core(
+                params, cache, state, tokens, lengths, slots, rids,
+                base_key, index,
+            )
+            cache, state = _pin(cache, state)
+            return cache, state, nxt, ok
+
+        self.prefill_fn = jax.jit(prefill_step, donate_argnums=(1, 2))
+        # single-step comparator (engine="reference")
+        self.ref_step_fn = jax.jit(
+            steps_lib.make_reference_serve_step(self.model,
+                                                strict=scfg.strict),
+            donate_argnums=(1,),
         )
         self.cache = self.model.init_cache(scfg.batch_slots, scfg.max_seq)
         self.key = jax.random.key(scfg.seed)
-        self.stats = {"steps": 0, "tokens": 0, "ok": 0, "fallbacks": 0}
+        self.stats = {
+            "steps": 0, "tokens": 0, "ok": 0, "fallbacks": 0,
+            "prefill_dispatches": 0, "decode_dispatches": 0,
+            "prefill_tokens": 0, "rejected": 0,
+            "prefill_s": 0.0, "decode_s": 0.0,
+        }
         # head MIPS index: built once over the frozen output embedding
         # (a ShardedIndex on a TP mesh — per-slice probe inside the
         # distributed head's shard_map)
@@ -75,7 +208,8 @@ class Server:
         def _reset_slots(cache, mask):
             # zero a recycled slot's caches (batch is axis 1: leaves are
             # (layer_stack, B, ...)) so SSM/RG-LRU state never bleeds
-            # between requests
+            # between requests. Only the reference loop needs this — the
+            # engine's prefill_into_cache replaces the slot state wholesale.
             def one(a):
                 m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
                 return jnp.where(m, jnp.zeros_like(a), a)
@@ -89,7 +223,7 @@ class Server:
 
         ``refresh`` preserves the index's pytree structure — per-shard
         geometry and leaf shardings included for a sharded index — so the
-        jitted serve step keeps its compiled executable.
+        jitted steps keep their compiled executables.
         """
         if params is not None:
             self.params = params
@@ -98,81 +232,279 @@ class Server:
             return
         self.index = self.index.refresh(self.model.head_index_db(self.params))
 
+    # ------------------------------------------------------------- admission
+    def _validate(self, rid: int, prompt, results: list) -> list | None:
+        """Admission control (over-length / empty prompts). Returns the
+        admitted (possibly truncated) prompt, or None if rejected (a
+        rejected RequestResult is appended to ``results``)."""
+        s = self.scfg
+        prompt = list(prompt)
+        if not prompt or (len(prompt) > s.prompt_cap
+                          and s.overlength == "reject"):
+            results.append(RequestResult(
+                request_id=rid, tokens=[], ok_rate=0.0, latency_s=0.0,
+                prompt_len=len(prompt), status="rejected",
+            ))
+            self.stats["rejected"] += 1
+            return None
+        if len(prompt) > s.prompt_cap:  # keep the newest context
+            prompt = prompt[-s.prompt_cap:]
+        return prompt
+
+    def _intake(self, prompts, results: list):
+        """Validate + enqueue every prompt. Returns (queue of rids,
+        rid -> request record); rejected prompts land in ``results``."""
+        queue = collections.deque()
+        reqs: dict[int, dict] = {}
+        for rid, prompt in enumerate(prompts):
+            p = self._validate(rid, prompt, results)
+            if p is None:
+                continue
+            reqs[rid] = {
+                "rid": rid, "prompt": p, "out": [], "ok": 0, "fed": 0,
+                "t_enq": time.perf_counter(), "t_first": None, "t_last": None,
+            }
+            queue.append(rid)
+        return queue, reqs
+
+    def _finalize(self, req: dict, results: list) -> None:
+        now = time.perf_counter()
+        n = len(req["out"])
+        itl = 0.0
+        if n > 1 and req["t_first"] is not None:
+            itl = (req["t_last"] - req["t_first"]) / (n - 1) * 1e3
+        results.append(RequestResult(
+            request_id=req["rid"], tokens=req["out"],
+            ok_rate=req["ok"] / max(n, 1),
+            latency_s=now - req["t_enq"],
+            ttft_s=(req["t_first"] or now) - req["t_enq"],
+            itl_ms=itl, prompt_len=len(req["prompt"]),
+        ))
+
+    def _mirror_done(self, req: dict) -> bool:
+        """Host mirror of the device's done rule (see steps._advance):
+        budget exhausted, EOS, or the next position would exceed max_seq."""
+        s = self.scfg
+        n = len(req["out"])
+        if n >= s.max_new_tokens:
+            return True
+        if s.eos_id >= 0 and req["out"] and req["out"][-1] == s.eos_id:
+            return True
+        return len(req["prompt"]) + n > s.max_seq - 1
+
+    # ---------------------------------------------------------------- run
     def run(self, prompts: list[list[int]]) -> list[RequestResult]:
-        """Decode all prompts with continuous batching. Prompts are fed
-        token-by-token (teacher-forced prefill through the decode path —
-        exercises identical cache machinery)."""
+        """Decode all prompts with continuous batching; returns one
+        RequestResult per prompt (rejected ones flagged)."""
+        if self.scfg.engine == "reference":
+            return self._run_reference(prompts)
+        return self._run_engine(prompts)
+
+    # ------------------------------------------------------- pipelined engine
+    def _run_engine(self, prompts: list[list[int]]) -> list[RequestResult]:
         s = self.scfg
         nslots = s.batch_slots
-        queue = list(enumerate(prompts))
-        active: list[Any] = [None] * nslots  # per-slot request state
-        ids = jnp.zeros((nslots,), jnp.int32)
-        pos = jnp.zeros((nslots,), jnp.int32)
         results: list[RequestResult] = []
         t_start = time.perf_counter()
+        self.key, base_key = jax.random.split(self.key)
+        queue, reqs = self._intake(prompts, results)
 
-        def admit(slot):
-            if not queue:
-                return None
-            rid, prompt = queue.pop(0)
-            return {
-                "rid": rid, "prompt": list(prompt), "fed": 0,
-                "out": [], "ok": 0, "n": 0, "t0": time.perf_counter(),
-            }
+        state = {
+            "ids": jnp.zeros((nslots,), jnp.int32),
+            "pos": jnp.zeros((nslots,), jnp.int32),
+            "active": jnp.zeros((nslots,), bool),
+            "budget": jnp.zeros((nslots,), jnp.int32),
+            "rid": jnp.full((nslots,), -1, jnp.int32),
+        }
+        cache = self.cache
+        if self._cache_sh is not None:  # one jit signature across runs
+            state = jax.device_put(state, self._state_sh)
+            cache = jax.device_put(cache, self._cache_sh)
+        slot_req: list[int | None] = [None] * nslots
+        free = list(range(nslots))
+        # dispatch pipeline: FIFO of un-synced device results; one entry is
+        # kept in flight so host bookkeeping overlaps device compute
+        pending: collections.deque = collections.deque()
 
-        for i in range(nslots):
-            active[i] = admit(i)
+        def process(entry) -> None:
+            kind = entry[0]
+            t0 = time.perf_counter()
+            if kind == "prefill":
+                _, arrs, batch, slots_h = entry
+                nxt, ok = (np.asarray(a) for a in arrs)
+                self.stats["prefill_s"] += time.perf_counter() - t0
+                now = time.perf_counter()
+                for row, (rid, slot) in enumerate(zip(batch, slots_h)):
+                    req = reqs[rid]
+                    req["out"].append(int(nxt[row]))
+                    req["ok"] += bool(ok[row])
+                    req["t_first"] = req["t_last"] = now
+                    self.stats["tokens"] += 1
+                    self.stats["ok"] += bool(ok[row])
+                    if s.strict and not ok[row]:
+                        self.stats["fallbacks"] += 1
+                    if self._mirror_done(req):
+                        self._finalize(req, results)
+                        slot_req[slot] = None
+                        free.append(slot)
+            else:  # decode window
+                _, arrs, snapshot = entry
+                toks, oks, emitted = (np.asarray(a) for a in arrs)
+                self.stats["decode_s"] += time.perf_counter() - t0
+                now = time.perf_counter()
+                for t in range(toks.shape[0]):
+                    for slot in range(nslots):
+                        if not emitted[t, slot]:
+                            continue
+                        rid = snapshot[slot]
+                        if rid is None:  # defensive: device-only slot
+                            continue
+                        req = reqs[rid]
+                        req["out"].append(int(toks[t, slot]))
+                        req["ok"] += bool(oks[t, slot])
+                        req["t_last"] = now
+                        self.stats["tokens"] += 1
+                        self.stats["ok"] += bool(oks[t, slot])
+                        if s.strict and not oks[t, slot]:
+                            self.stats["fallbacks"] += 1
+                        if self._mirror_done(req):
+                            self._finalize(req, results)
+                            slot_req[slot] = None
+                            free.append(slot)
 
+        while len(results) < len(prompts):
+            # 1) admit into free slots: one batched-prefill dispatch
+            if queue and free:
+                free.sort()
+                take = min(len(free), len(queue))
+                batch = [queue.popleft() for _ in range(take)]
+                slots_h = [free.pop(0) for _ in range(take)]
+                for rid, slot in zip(batch, slots_h):
+                    slot_req[slot] = rid
+                lp = _bucket(max(len(reqs[r]["prompt"]) for r in batch),
+                             s.prefill_chunk)
+                tokens = np.zeros((nslots, lp), np.int32)
+                lengths = np.ones((nslots,), np.int32)
+                slots = np.full((nslots,), nslots, np.int32)  # pad: dropped
+                rids = np.full((nslots,), -1, np.int32)
+                for row, (rid, slot) in enumerate(zip(batch, slots_h)):
+                    p = reqs[rid]["prompt"]
+                    tokens[row, : len(p)] = p
+                    lengths[row] = len(p)
+                    slots[row] = slot
+                    rids[row] = rid
+                cache, state, nxt, ok = self.prefill_fn(
+                    self.params, cache, state, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(slots),
+                    jnp.asarray(rids), base_key, self.index,
+                )
+                pending.append(("prefill", (nxt, ok), batch, slots_h))
+                self.stats["prefill_dispatches"] += 1
+                self.stats["steps"] += 1
+                self.stats["prefill_tokens"] += int(
+                    sum(len(reqs[r]["prompt"]) for r in batch)
+                )
+            # 2) fused decode over the slots the host believes live
+            if any(r is not None for r in slot_req):
+                cache, state, toks, oks, emitted = self.step_fn(
+                    self.params, cache, state, base_key, self.index
+                )
+                pending.append(("decode", (toks, oks, emitted),
+                                list(slot_req)))
+                self.stats["decode_dispatches"] += 1
+                self.stats["steps"] += 1
+            # 3) sync all but the newest dispatch (double buffering)
+            while len(pending) > 1:
+                process(pending.popleft())
+            if not (queue or any(r is not None for r in slot_req)):
+                break  # nothing left to dispatch: drain below
+
+        while pending:
+            process(pending.popleft())
+
+        self.cache = cache
+        self.stats["wall_s"] = time.perf_counter() - t_start
+        return sorted(results, key=lambda r: r.request_id)
+
+    # -------------------------------------------------- reference single-step
+    def _run_reference(self, prompts: list[list[int]]) -> list[RequestResult]:
+        """Teacher-forced single-step loop: one dispatch per token, prompts
+        fed through the decode path. Kept as the engine's correctness
+        comparator (same key discipline ⇒ identical samples) and as the
+        benchmark baseline for the fused/pipelined speedup."""
+        s = self.scfg
+        nslots = s.batch_slots
+        results: list[RequestResult] = []
+        t_start = time.perf_counter()
+        self.key, base_key = jax.random.split(self.key)
+        queue, reqs = self._intake(prompts, results)
+
+        active: list[int | None] = [None] * nslots
         ids_h = np.zeros((nslots,), np.int32)
         pos_h = np.zeros((nslots,), np.int32)
+        rids_h = np.full((nslots,), -1, np.int32)
+        cache = self.cache
+
+        def admit(slot) -> None:
+            if not queue:
+                return
+            rid = queue.popleft()
+            active[slot] = rid
+            rids_h[slot] = rid
+            pos_h[slot] = 0
+            ids_h[slot] = 0
+            mask = np.zeros((nslots,), bool)
+            mask[slot] = True
+            nonlocal cache
+            cache = self._reset_slots(cache, jnp.asarray(mask))
+
+        for i in range(nslots):
+            admit(i)
+
         while any(a is not None for a in active):
-            # feed either the next prompt token or the last sampled token
-            for i, a in enumerate(active):
-                if a is None:
+            for i, rid in enumerate(active):
+                if rid is None:
                     continue
-                if a["fed"] < len(a["prompt"]):
-                    ids_h[i] = a["prompt"][a["fed"]]
-                elif a["out"]:
-                    ids_h[i] = a["out"][-1]
+                req = reqs[rid]
+                if req["fed"] < len(req["prompt"]):
+                    ids_h[i] = req["prompt"][req["fed"]]
                 else:
-                    ids_h[i] = 0
-            self.key, k = jax.random.split(self.key)
-            nxt, ok, self.cache, pos = self.step_fn(
-                self.params, self.cache, jnp.asarray(ids_h),
-                jnp.asarray(pos_h), k, self.index,
+                    ids_h[i] = req["out"][-1]
+            nxt, ok, cache, pos = self.ref_step_fn(
+                self.params, cache, jnp.asarray(ids_h), jnp.asarray(pos_h),
+                jnp.asarray(rids_h), base_key, self.index,
             )
             nxt_h = np.asarray(nxt)
             ok_h = np.asarray(ok)
+            pos_h = np.array(pos)  # device value is authoritative
             self.stats["steps"] += 1
-            for i, a in enumerate(active):
-                if a is None:
+            now = time.perf_counter()
+            for i, rid in enumerate(active):
+                if rid is None:
+                    pos_h[i] -= 1  # idle slot: freeze (mirror the engine)
                     continue
-                pos_h[i] += 1
-                if a["fed"] < len(a["prompt"]):
-                    a["fed"] += 1  # still prefilling; sample discarded
-                    continue
-                a["out"].append(int(nxt_h[i]))
-                a["n"] += 1
-                a["ok"] += bool(ok_h[i])
+                req = reqs[rid]
+                if req["fed"] < len(req["prompt"]):
+                    req["fed"] += 1
+                    if req["fed"] < len(req["prompt"]):
+                        continue  # mid-prompt: sample discarded
+                    # the last prompt token's sample IS the first output
+                    # (the old loop dropped it and fed a spurious 0 token)
+                req["out"].append(int(nxt_h[i]))
+                req["ok"] += bool(ok_h[i])
+                if req["t_first"] is None:
+                    req["t_first"] = now
+                req["t_last"] = now
                 self.stats["tokens"] += 1
                 self.stats["ok"] += bool(ok_h[i])
-                done = (
-                    a["n"] >= s.max_new_tokens
-                    or (s.eos_id >= 0 and a["out"][-1] == s.eos_id)
-                    or pos_h[i] >= s.max_seq - 1
-                )
-                if done:
-                    results.append(RequestResult(
-                        request_id=a["rid"], tokens=a["out"],
-                        ok_rate=a["ok"] / max(a["n"], 1),
-                        latency_s=time.perf_counter() - a["t0"],
-                    ))
-                    active[i] = admit(i)  # release slot: continuous batching
-                    pos_h[i] = 0
-                    mask = np.zeros((nslots,), bool)
-                    mask[i] = True
-                    self.cache = self._reset_slots(
-                        self.cache, jnp.asarray(mask)
-                    )
+                if s.strict and not ok_h[i]:
+                    self.stats["fallbacks"] += 1
+                if self._mirror_done(req):
+                    self._finalize(req, results)
+                    active[i] = None
+                    rids_h[i] = -1
+                    admit(i)
+
+        self.cache = cache
         self.stats["wall_s"] = time.perf_counter() - t_start
         return sorted(results, key=lambda r: r.request_id)

@@ -62,6 +62,33 @@ def test_incomplete_manifest_skipped(tmp_path):
     assert ckpt.latest_step(d) == 3
 
 
+def test_save_does_not_mutate_state(tmp_path):
+    """save() must treat the caller's state as read-only — including on the
+    failure path (regression: save() popped "meta" from the live dict and
+    only restored it after a successful write)."""
+    import pytest
+
+    d = str(tmp_path)
+    s = _state(5)
+    keys_before = set(s.keys())
+    ckpt.save(d, 5, s)
+    assert set(s.keys()) == keys_before and s["meta"]["step"] == 5
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    orig = np.savez
+    np.savez = boom
+    try:
+        with pytest.raises(OSError):
+            ckpt.save(d, 6, s)
+    finally:
+        np.savez = orig
+    # a failed save leaves the caller's dict fully intact
+    assert set(s.keys()) == keys_before
+    assert s["meta"] == {"step": 5, "data": {"step": 5, "seed": 0}}
+
+
 def test_async_manager(tmp_path):
     d = str(tmp_path)
     m = ckpt.CheckpointManager(d, keep=3)
