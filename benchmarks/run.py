@@ -2,11 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
 ``python -m benchmarks.run
-[fig2|table1|fig4|table2|fig7|refresh|dist|serve|roofline]``.
+[fig2|table1|fig4|table2|fig7|refresh|dist|serve|train|roofline]``.
+
+``--json-out PATH`` additionally writes one combined JSON document — a
+``BENCH_*.json`` trajectory entry — with every reported row plus run
+metadata, so successive PRs can record comparable baselines (the first
+entry lives at BENCH_20260802_train.json; regenerate with the same
+command to extend the trajectory).
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
+import platform
+import time
 
 
 def main() -> None:
@@ -20,6 +29,7 @@ def main() -> None:
         sampling_accuracy,
         sampling_speed,
         serve_engine,
+        train_engine,
     )
 
     suites = {
@@ -31,23 +41,68 @@ def main() -> None:
         "refresh": index_refresh.run,
         "dist": dist_head.run,
         "serve": serve_engine.run,
+        "train": train_engine.run,
         "roofline": roofline_report.run,
     }
-    wanted = sys.argv[1:] or list(suites)
-    unknown = [w for w in wanted if w not in suites]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*", metavar="suite",
+                    help=f"suites to run (default: all): {list(suites)}")
+    ap.add_argument("--json-out", default=None,
+                    help="write all reported rows + metadata to this path "
+                         "(a BENCH_*.json trajectory entry)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="pass smoke=True to suites that support it "
+                         "(serve, train)")
+    args = ap.parse_args()
+    unknown = [w for w in args.suites if w not in suites]
     if unknown:
-        raise SystemExit(
-            f"unknown suite(s) {unknown}; known: {list(suites)}"
-        )
-    rows: list[tuple[str, float, str]] = []
+        raise SystemExit(f"unknown suite(s) {unknown}; known: {list(suites)}")
+    wanted = args.suites or list(suites)
+
+    rows: list[dict] = []
+    extra: dict[str, dict] = {}
 
     def report(name: str, us_per_call: float, derived: str = "") -> None:
-        rows.append((name, us_per_call, derived))
+        rows.append(
+            {"name": name, "us_per_call": us_per_call, "derived": derived}
+        )
         print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
+    t0 = time.time()
     for key in wanted:
-        suites[key](report)
+        fn = suites[key]
+        if args.smoke and key in ("serve", "train"):
+            out = fn(report, smoke=True)
+        else:
+            out = fn(report)
+        if isinstance(out, dict):  # suites returning structured results
+            extra[key] = out
+    if args.json_out:
+        doc = {
+            "schema": "bench-trajectory-v1",
+            "suites": wanted,
+            # smoke vs full runs measure different grids/step counts —
+            # recorded so trajectory entries are only compared like-for-like
+            "smoke": args.smoke,
+            "unix_time": int(t0),
+            "platform": platform.platform(),
+            "backend": _backend(),
+            "rows": rows,
+            "results": extra,
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.json_out}")
+
+
+def _backend() -> str:
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax import is a hard dep anyway
+        return "unknown"
 
 
 if __name__ == "__main__":

@@ -9,6 +9,15 @@ Arrays are stored *unsharded* by pytree path; ``restore`` re-device_puts
 them under whatever shardings the (possibly different-size) current mesh
 dictates — elastic restarts across data-parallel widths are exact because
 the data iterator state is a single step counter (data/synthetic.py).
+
+Exactness across dtypes: every leaf restores BIT-IDENTICAL, including
+extended (ml_dtypes) dtypes like bfloat16 that ``np.savez`` would
+otherwise round-trip as opaque void arrays — those are stored as a raw
+uint8 view with the dtype name recorded in the manifest and re-viewed on
+load. The fp32 optimizer accumulators (Adam moments, step counter) are
+native dtypes and were always exact; this closes the gap for
+low-precision leaves (e.g. a custom policy storing bf16 EMA state, or
+serving caches).
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import threading
 from typing import Any
 
 import jax
+import ml_dtypes
 import numpy as np
 
 __all__ = ["save", "save_async", "latest_step", "restore", "CheckpointManager"]
@@ -27,22 +37,40 @@ __all__ = ["save", "save_async", "latest_step", "restore", "CheckpointManager"]
 _SEP = "||"
 
 
-def _flatten(tree: Any) -> dict[str, np.ndarray]:
-    flat = {}
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Returns (arrays by path, extended-dtype name by path)."""
+    flat, exotic = {}, {}
     for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
         key = _SEP.join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path
         )
-        flat[key] = np.asarray(leaf)
-    return flat
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # extended dtype (bf16/fp8): npz would
+            # silently degrade it to an un-loadable void array
+            exotic[key] = arr.dtype.name
+            arr = np.ascontiguousarray(arr).view(np.uint8).reshape(
+                arr.shape + (arr.dtype.itemsize,)
+            )
+        flat[key] = arr
+    return flat, exotic
 
 
-def _unflatten_into(tree: Any, flat: dict[str, np.ndarray]) -> Any:
+def _reveal(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    """Inverse of the uint8 view in :func:`_flatten`."""
+    dt = np.dtype(getattr(ml_dtypes, dtype_name))
+    return arr.view(dt).reshape(arr.shape[:-1])
+
+
+def _unflatten_into(
+    tree: Any, flat: dict[str, np.ndarray], exotic: dict[str, str]
+) -> Any:
     def one(path, leaf):
         key = _SEP.join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path
         )
         arr = flat[key]
+        if key in exotic:
+            arr = _reveal(arr, exotic[key])
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         return arr
 
@@ -67,10 +95,11 @@ def save(workdir: str, step: int, state: dict, keep: int = 3) -> str:
     os.makedirs(tmp)
     arrays_state = dict(state)
     meta = arrays_state.pop("meta", {})
-    arrays = _flatten(arrays_state)
+    arrays, exotic = _flatten(arrays_state)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "meta": meta, "complete": True}, f)
+        json.dump({"step": step, "meta": meta, "dtypes": exotic,
+                   "complete": True}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
@@ -124,7 +153,7 @@ def restore(
     meta = manifest.get("meta", {})
     tgt = dict(target)
     tgt.pop("meta", None)
-    state = _unflatten_into(tgt, flat)
+    state = _unflatten_into(tgt, flat, manifest.get("dtypes", {}))
     if shardings is not None:
         state = jax.tree.map(
             lambda a, s: jax.device_put(a, s), state, shardings

@@ -41,6 +41,7 @@ from repro.core.complement import sample_complement
 from repro.core.gumbel import SampleResult, TopK, sample_fixed_b
 
 __all__ = [
+    "ESTIMATOR_DTYPE",
     "LossPartials",
     "topk_probe",
     "sanitize_topk",
@@ -57,6 +58,17 @@ __all__ = [
     "combine_sample_pmax",
     "chunked_map",
 ]
+
+
+# Estimator accumulators are ALWAYS float32, independent of the model's
+# mixed-precision policy (repro/precision.py): the Algorithm-3 logsumexp
+# partials, the Algorithm-2 certificate terms (S_min, bound, perturbed
+# maxima), and the cross-shard combines all accumulate in this dtype, so
+# approximation error stays attributable to the index (top-k gap c, tail
+# draw), never to bf16 rounding. Candidate *scores* may be computed in a
+# lower dtype (HeadConfig.score_dtype) — every reduction over them is
+# explicitly cast up first.
+ESTIMATOR_DTYPE = jnp.float32
 
 
 class LossPartials(NamedTuple):
@@ -181,10 +193,11 @@ def stratified_logz(
     rows in the backward pass, matching the XLA path's gradients.
     """
     ids = jnp.maximum(jax.lax.stop_gradient(ids), 0)  # -1 pads: weight -inf
+    log_w = log_w.astype(ESTIMATOR_DTYPE)  # stratum weights: fp32 always
     if use_kernel:
         return _fused_logz(emb, ids, h, log_w)
     rows = emb[ids]  # (t, m, d) — differentiable gather
-    y = jnp.einsum("tmd,td->tm", rows, h).astype(jnp.float32)
+    y = jnp.einsum("tmd,td->tm", rows, h).astype(ESTIMATOR_DTYPE)
     return jax.nn.logsumexp(y + log_w, axis=1)
 
 

@@ -6,8 +6,6 @@ train_step supports microbatch gradient accumulation (psum once per step).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +13,8 @@ import jax.numpy as jnp
 from repro.models.model import Model
 from repro.optim import adamw
 
-__all__ = ["TrainConfig", "make_train_step", "make_serve_step",
+__all__ = ["TrainConfig", "make_train_step", "make_train_loop_step",
+           "make_serve_step",
            "make_prefill_step", "make_encode_step", "slot_keys",
            "make_reference_serve_step", "make_decode_loop_step",
            "make_prefill_into_cache_step"]
@@ -26,6 +25,10 @@ class TrainConfig:
     opt: adamw.OptConfig = dataclasses.field(default_factory=adamw.OptConfig)
     accum: int = 1  # microbatch gradient-accumulation factor
     compress_grads: bool = False  # int8 ring all-reduce (optim/compress.py)
+    precision: str = "bf16"  # model precision policy (repro/precision.py):
+    #   "bf16" (default, the historical compute dtype) or "f32" (the
+    #   numerics-reference / benchmark-baseline policy). Master params,
+    #   gradient accumulators, and estimator partials are fp32 either way.
 
 
 def _split_batch(batch: dict, accum: int) -> dict:
@@ -46,6 +49,11 @@ def make_train_step(model: Model, tcfg: TrainConfig):
     argument, so a refreshed index never retriggers compilation. Gradients
     do not flow into it — the head only uses it for the stop-gradient
     top-k probe.
+
+    Gradient accumulation (``tcfg.accum > 1``) scans ``accum`` microbatches
+    and sums their gradients in fp32 (``precision.Policy.grad_accum_dtype``)
+    regardless of the compute policy, then applies the optimizer ONCE on
+    the mean — one dispatch per optimizer step either way.
     """
 
     def loss_for_grad(params, mb, key, index):
@@ -64,19 +72,24 @@ def make_train_step(model: Model, tcfg: TrainConfig):
             def body(carry, xs):
                 g_acc, l_acc = carry
                 mb, kk = xs
-                (l, _), g = grad_fn(params, mb, kk, index)
+                (l, m), g = grad_fn(params, mb, kk, index)
+                # fp32 accumulators: bf16 sums would be order-dependent at
+                # the magnitudes the optimizer cares about
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g
                 )
-                return (g_acc, l_acc + l), None
+                return (g_acc, l_acc + l.astype(jnp.float32)), m
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), (mbs, keys))
+            (grads, loss), ms = jax.lax.scan(body, (g0, 0.0), (mbs, keys))
             grads = jax.tree.map(lambda g: g / tcfg.accum, grads)
             loss = loss / tcfg.accum
-            metrics = {}
+            # per-microbatch aux metrics (nll/aux/log_z): report the mean
+            metrics = jax.tree.map(
+                lambda x: x.astype(jnp.float32).mean(0), ms
+            )
         params, opt_state, opt_metrics = adamw.update(
             grads, opt_state, params, tcfg.opt
         )
@@ -84,6 +97,54 @@ def make_train_step(model: Model, tcfg: TrainConfig):
         return params, opt_state, metrics
 
     return train_step
+
+
+def make_train_loop_step(model: Model, tcfg: TrainConfig):
+    """Fused multi-step training: ``loop_step(state, batches, steps,
+    base_key, index=None) -> (state, metrics)``.
+
+    The learning-side analogue of :func:`make_decode_loop_step`: a
+    ``lax.scan`` runs ``T`` full optimizer steps (each itself an
+    ``accum``-microbatch gradient-accumulation scan, see
+    :func:`make_train_step`) in ONE dispatch, so step time amortizes
+    dispatch + host-sync overhead ``T``-fold and the train state never
+    leaves the device between optimizer steps.
+
+    Args (shapes):
+      state:   ``{"params": ..., "opt": ...}`` — jit the returned fn with
+               ``donate_argnums=(0,)`` so both buffers are updated in place.
+      batches: pytree with leading ``(T, GB, ...)`` — T stacked global
+               batches.
+      steps:   ``(T,)`` int32/uint32 global step indices. Per-step keys
+               derive as ``fold_in(base_key, step)`` — the SAME derivation
+               the single-step driver uses, so a fused T-window is
+               bit-identical to T sequential single-step dispatches
+               (asserted in tests/test_train_engine.py), invariant to how
+               the trainer chunks the run (log/ckpt/refresh boundaries).
+      index:   optional head MIPS index pytree; held FIXED across the
+               fused window — staleness-triggered refresh is hoisted to
+               fused-loop boundaries by the trainer.
+
+    Returns the new state and per-step metrics stacked to ``(T,)`` leaves;
+    the host decides when to actually sync them (every ``log_every`` steps
+    in the trainer — the one-dispatch-in-flight pattern of PR 3's serving
+    engine applied to learning).
+    """
+    step_fn = make_train_step(model, tcfg)
+
+    def loop_step(state, batches, steps, base_key, index=None):
+        def body(st, xs):
+            mb, step = xs
+            k = jax.random.fold_in(base_key, step)
+            params, opt, metrics = step_fn(
+                st["params"], st["opt"], mb, k, index
+            )
+            return {"params": params, "opt": opt}, metrics
+
+        state, metrics = jax.lax.scan(body, state, (batches, steps))
+        return state, metrics
+
+    return loop_step
 
 
 def make_serve_step(model: Model):

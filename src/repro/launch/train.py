@@ -29,7 +29,18 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--accum-steps", "--accum", dest="accum_steps",
+                    type=int, default=1,
+                    help="gradient-accumulation microbatches per optimizer "
+                         "step (batch is split; grads summed in fp32)")
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="T: optimizer steps fused into one dispatch "
+                         "(lax.scan); metrics sync only at log/ckpt/refresh "
+                         "boundaries")
+    ap.add_argument("--precision", default="bf16", choices=["f32", "bf16"],
+                    help="model compute policy (repro/precision.py): bf16 "
+                         "trunk with fp32 masters/estimators (default), or "
+                         "full-fp32 reference")
     ap.add_argument("--head", default=None,
                     choices=[None, "exact", "topk_only", "amortized"])
     ap.add_argument("--mips", default=None,
@@ -59,11 +70,13 @@ def main() -> None:
         batch=args.batch,
         seq=args.seq,
         ckpt_every=args.ckpt_every,
+        fuse_steps=args.fuse_steps,
         index_refresh_every=args.index_refresh_every,
         index_drift_threshold=args.index_drift_threshold,
         train=TrainConfig(
             opt=OptConfig(lr=args.lr, total_steps=args.steps),
-            accum=args.accum,
+            accum=args.accum_steps,
+            precision=args.precision,
         ),
     )
     trainer = Trainer(cfg, run, args.workdir)

@@ -7,23 +7,22 @@ the assignment: ``input_specs`` provides precomputed frame/patch embeddings.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro import precision
 from repro.core import amortized_head as ah
 from repro.models import attention, head as dist_head, rglru, ssm, transformer
 from repro.models.config import ArchConfig
-from repro.models.layers import COMPUTE_DTYPE
 
 __all__ = ["Model", "param_count", "active_param_count"]
 
 _AUX_WEIGHT = 0.01  # MoE load-balance loss weight
 
 
-def _head_cfg(cfg: ArchConfig) -> ah.HeadConfig:
+def _head_cfg(cfg: ArchConfig, policy: precision.Policy) -> ah.HeadConfig:
     return ah.HeadConfig(
         n=cfg.vocab,
         k=cfg.head_k,
@@ -31,16 +30,27 @@ def _head_cfg(cfg: ArchConfig) -> ah.HeadConfig:
         mode=cfg.head_mode,
         mips=cfg.head_mips,
         delta=cfg.head_delta,
+        score_dtype=policy.score_dtype,
     ).resolved()
 
 
 class Model:
-    """Stateless model bundle: methods take params explicitly."""
+    """Stateless model bundle: methods take params explicitly.
 
-    def __init__(self, cfg: ArchConfig, mesh=None):
+    ``precision`` (a :class:`repro.precision.Policy` or its name) sets the
+    trunk compute/activation dtype and the head's candidate-score dtype;
+    master params stay fp32 and are cast at use inside each layer, and the
+    head's estimator accumulators stay fp32 regardless of policy (DESIGN.md
+    §9). Default is the ``bf16`` policy — identical numerics to the
+    historical COMPUTE_DTYPE=bfloat16 stack.
+    """
+
+    def __init__(self, cfg: ArchConfig, mesh=None, precision_policy=None):
         self.cfg = cfg
         self.mesh = mesh  # None => single-device head path
-        self.head_cfg = _head_cfg(cfg)
+        self.policy = precision.get_policy(precision_policy)
+        self.compute_dtype = self.policy.compute_dtype
+        self.head_cfg = _head_cfg(cfg, self.policy)
 
     # ---------------------------------------------------------------- init
     def init(self, key) -> dict:
@@ -51,19 +61,19 @@ class Model:
         """Returns (x (B,L,d) compute dtype, positions (B,L), prefix)."""
         cfg = self.cfg
         if cfg.frontend == "audio_stub":
-            x = batch["frames"].astype(COMPUTE_DTYPE)
+            x = batch["frames"].astype(self.compute_dtype)
             b, l, _ = x.shape
             pos = jnp.broadcast_to(jnp.arange(l), (b, l))
             return x, pos, 0
         tok_emb = params["embed"]
         if cfg.frontend == "vision_stub":
-            patches = batch["patches"].astype(COMPUTE_DTYPE)
-            toks = tok_emb[batch["tokens"]].astype(COMPUTE_DTYPE)
+            patches = batch["patches"].astype(self.compute_dtype)
+            toks = tok_emb[batch["tokens"]].astype(self.compute_dtype)
             x = jnp.concatenate([patches, toks], axis=1)
             b, l, _ = x.shape
             pos = jnp.broadcast_to(jnp.arange(l), (b, l))
             return x, pos, cfg.n_prefix_tokens
-        x = tok_emb[batch["tokens"]].astype(COMPUTE_DTYPE)
+        x = tok_emb[batch["tokens"]].astype(self.compute_dtype)
         b, l, _ = x.shape
         pos = jnp.broadcast_to(jnp.arange(l), (b, l))
         return x, pos, 0
@@ -136,7 +146,8 @@ class Model:
         return total, {"nll": loss.mean(), "aux": aux, "log_z": log_z}
 
     # ---------------------------------------------------------------- decode
-    def init_cache(self, batch: int, max_seq: int, dtype=COMPUTE_DTYPE):
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        dtype = self.compute_dtype if dtype is None else dtype
         return transformer.init_cache(self.cfg, batch, max_seq, dtype)
 
     def decode_step(
@@ -154,7 +165,7 @@ class Model:
         ``lax.cond`` fallback — single-device head only).
         """
         cfg = self.cfg
-        x = params["embed"][ids][:, None].astype(COMPUTE_DTYPE)  # (B,1,d)
+        x = params["embed"][ids][:, None].astype(self.compute_dtype)  # (B,1,d)
         h, cache = transformer.apply_trunk_decode(params, cfg, x, cache, pos,
                                                   mesh=self.mesh)
         hq = h[:, 0]  # (B, d)
@@ -235,7 +246,7 @@ class Model:
             raise NotImplementedError(
                 "prefill_into_cache serves token-LM frontends only"
             )
-        x = params["embed"][tokens].astype(COMPUTE_DTYPE)  # (Bn, Lp, d)
+        x = params["embed"][tokens].astype(self.compute_dtype)  # (Bn, Lp, d)
         b, l, _ = x.shape
         pos = jnp.broadcast_to(jnp.arange(l), (b, l))
         h, part = transformer.apply_trunk_prefill(

@@ -1,4 +1,14 @@
-"""AdamW with global-norm clipping and warmup+cosine schedule (pure jnp)."""
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure jnp).
+
+Mixed-precision contract (repro/precision.py, DESIGN.md §9): this
+optimizer owns the float32 MASTER state. ``init`` allocates fp32 moments;
+``update`` upcasts incoming gradients (which may be bf16 under a low-
+precision compute policy) to fp32 before they touch the moments, computes
+the whole update in fp32, and writes parameters back in their stored
+(master) dtype. :func:`check_master_params` is the trainer's startup guard
+that no parameter leaf was accidentally initialized or restored in a
+compute dtype — a bf16 master silently destroys Adam's update signal.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -7,7 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["OptConfig", "init", "update", "schedule"]
+__all__ = ["OptConfig", "init", "update", "schedule", "check_master_params"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,6 +31,25 @@ class OptConfig:
     warmup_steps: int = 100
     total_steps: int = 10_000
     min_lr_frac: float = 0.1
+
+
+def check_master_params(params: Any) -> None:
+    """Raise if any float parameter leaf is stored below fp32 precision.
+
+    Low-precision COMPUTE copies are made at use inside the layers; the
+    leaves the optimizer sees must be fp32 masters.
+    """
+    bad = [
+        jax.tree_util.keystr(path)
+        for path, leaf in jax.tree_util.tree_leaves_with_path(params)
+        if jnp.issubdtype(leaf.dtype, jnp.floating)
+        and jnp.finfo(leaf.dtype).bits < 32
+    ]
+    if bad:
+        raise ValueError(
+            f"non-fp32 master params (precision policy casts at use, "
+            f"never in storage): {bad[:5]}{'...' if len(bad) > 5 else ''}"
+        )
 
 
 def init(params: Any) -> dict:

@@ -1,0 +1,96 @@
+"""Mixed-precision policy for training and serving (DESIGN.md §9).
+
+One frozen :class:`Policy` names the dtype of every tensor class in the
+system; the trainer, the model trunk, and the amortized head all read it
+instead of hardcoding dtypes. Two policies ship:
+
+* ``f32``  — everything float32. The numerics reference: the fused-loop
+  equivalence suite (tests/test_train_engine.py) compares against it
+  bitwise, and the train-engine benchmark uses it as the baseline.
+* ``bf16`` — bfloat16 trunk compute/activations and bf16 candidate-gather
+  scores in the head, with float32 everywhere precision is load-bearing
+  (see below).
+
+What must stay float32 regardless of policy — and why:
+
+* **master params + optimizer moments** (``param_dtype``): AdamW's update
+  is a ratio of EMAs of tiny numbers; bf16's 8-bit mantissa loses the
+  update signal entirely after a few hundred steps. The bf16 policy casts
+  activations, not parameters — weights are cast to the compute dtype *at
+  use* inside each layer (models/layers.py idiom), so the optimizer only
+  ever sees fp32 masters.
+* **gradient accumulators** (``grad_accum_dtype``): microbatch gradients
+  are summed over ``accum_steps``; bf16 accumulation would make the sum
+  order-dependent at magnitudes the optimizer cares about, breaking the
+  fused-vs-sequential equivalence contract.
+* **estimator accumulators** (``estimator_dtype``): the Algorithm-3
+  log-sum-exp partials, the Algorithm-2 certificate terms (S_min, bound,
+  perturbed maxima), and the cross-shard combines. The paper's guarantees
+  attribute approximation error to the *index* (the top-k gap ``c`` and
+  the tail draw), not to the arithmetic; keeping these fp32 preserves that
+  attribution — a failed certificate means the probe missed, never that
+  bf16 rounded the bound. ``core/estimators.py`` enforces this internally
+  (every partial is computed/accumulated via explicit fp32 casts), and
+  tests/test_train_engine.py asserts it under the bf16 policy.
+
+The only bf16 the *head* ever sees is ``score_dtype``: the candidate
+gather ``emb[ids]`` and its score matmul may run in bf16 to halve HBM
+traffic — the logsumexp over those scores still accumulates fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["Policy", "F32", "BF16", "get_policy", "POLICIES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    compute_dtype: jnp.dtype  # trunk activations (weights cast at use)
+    param_dtype: jnp.dtype = jnp.float32  # master params + optimizer moments
+    grad_accum_dtype: jnp.dtype = jnp.float32  # microbatch gradient sums
+    estimator_dtype: jnp.dtype = jnp.float32  # Alg-3 partials + certificates
+    score_dtype: str = "f32"  # head candidate-gather dtype ("f32" | "bf16")
+
+    def __post_init__(self):
+        if self.param_dtype != jnp.float32:
+            raise ValueError("master params must be float32 (see module doc)")
+        if self.grad_accum_dtype != jnp.float32:
+            raise ValueError("gradient accumulators must be float32")
+        if self.estimator_dtype != jnp.float32:
+            raise ValueError(
+                "estimator accumulators (Alg-3 partials, certificates) "
+                "must be float32 — approximation error must be attributable "
+                "to the index, not the dtype"
+            )
+
+
+F32 = Policy(name="f32", compute_dtype=jnp.float32)
+# NOTE: the shipped bf16 policy keeps head candidate scores fp32 — it is
+# bit-identical to the pre-policy model stack (COMPUTE_DTYPE=bf16 trunk,
+# fp32 scores). Opting into bf16 gathers is a one-liner:
+#   dataclasses.replace(BF16, score_dtype="bf16")
+# and remains safe because the logsumexp over those scores accumulates
+# fp32 regardless (asserted in tests/test_train_engine.py).
+BF16 = Policy(name="bf16", compute_dtype=jnp.bfloat16)
+
+POLICIES = {"f32": F32, "bf16": BF16}
+
+
+def get_policy(p: "Policy | str | None") -> Policy:
+    """Resolve a policy name / instance / None (-> bf16, the historical
+    COMPUTE_DTYPE default of the model stack)."""
+    if p is None:
+        return BF16
+    if isinstance(p, Policy):
+        return p
+    try:
+        return POLICIES[p]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision policy {p!r}; valid choices: "
+            f"{sorted(POLICIES)}"
+        ) from None

@@ -1,5 +1,27 @@
-"""Training loop: deterministic resume, preemption handling, straggler
-watchdog, staleness-aware MIPS-index refresh, async checkpoints.
+"""Training loop: fused multi-step engine, deterministic resume, preemption
+handling, straggler watchdog, staleness-aware MIPS-index refresh, async
+checkpoints.
+
+Fused multi-step engine (DESIGN.md §9): the jitted step function is
+:func:`repro.launch.steps.make_train_loop_step` — ``fuse_steps`` full
+optimizer steps (each an ``accum``-microbatch gradient-accumulation scan)
+run as ONE dispatch over device-resident, donated ``{params, opt}`` state.
+The host never blocks per step: chunks are dispatched back to back (one
+dispatch in flight, the pattern PR 3 established for serving) and metrics
+are synced only at *flush points* — every ``log_every`` steps, checkpoint
+boundaries, index-refresh boundaries, preemption, and run end. Chunk
+boundaries are clamped so checkpoints and periodic index refreshes land
+exactly on their configured steps; per-step sample keys derive from the
+GLOBAL step index (``fold_in(base_key, step)``), so the token stream and
+the randomness are invariant to how the run is chunked — fused T-windows
+reproduce T single-step dispatches bit for bit
+(tests/test_train_engine.py).
+
+Mixed precision (repro/precision.py): ``RunConfig.train.precision`` selects
+the model compute policy ("bf16" default / "f32" reference). Master params
+and optimizer moments are always fp32 (checked at startup via
+``adamw.check_master_params``), as are gradient accumulators and the
+head's estimator partials.
 
 Index refresh during learning (DESIGN.md §7): when the head uses an
 approximate MIPS index (``head_mips="ivf"``), the output embedding — the
@@ -9,7 +31,9 @@ relative L2 (Frobenius) drift against that snapshot, and triggers an
 on-device warm-started ``index.refresh`` every ``index_refresh_every``
 steps and/or whenever the drift exceeds ``index_drift_threshold``. The
 index is a jax pytree argument of the jitted train step, so refreshes
-never retrigger compilation.
+never retrigger compilation. Refresh decisions are hoisted to fused-loop
+boundaries: the index is frozen within a fused window (drift over
+``fuse_steps`` optimizer steps is what the threshold now bounds).
 
 Fault-tolerance contract (DESIGN.md §6):
 * every state element (params, optimizer, data cursor, RNG) lives in the
@@ -18,9 +42,10 @@ Fault-tolerance contract (DESIGN.md §6):
   a resume therefore counts as a refresh);
 * SIGTERM or a ``PREEMPT`` flag file triggers save-and-exit with a clean
   return code, matching cluster preemption semantics;
-* per-step wall-clock is tracked with an EMA — steps slower than
-  ``straggler_factor x EMA`` are counted and logged (at real scale the hook
-  re-dispatches the batch to a backup replica; on one host we record them);
+* wall-clock per flush window is tracked with an EMA — windows slower than
+  ``straggler_factor x EMA`` per step are counted and logged (at real
+  scale the hook re-dispatches the batch to a backup replica; on one host
+  we record them);
 * checkpoints are mesh-elastic (checkpoint/manager.py), so a restart may
   use a different data-parallel width.
 """
@@ -30,7 +55,6 @@ import dataclasses
 import os
 import signal
 import time
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +80,7 @@ class RunConfig:
     seed: int = 0
     batch: int = 8
     seq: int = 256
+    fuse_steps: int = 1  # T: optimizer steps fused into one dispatch
     straggler_factor: float = 3.0
     index_refresh_every: int = 0  # R > 0: refresh the head index every R steps
     index_drift_threshold: float = 0.0  # > 0: refresh when rel. L2 drift exceeds
@@ -76,13 +101,16 @@ class Trainer:
         self.run = run
         self.workdir = workdir
         self.mesh = mesh
-        self.model = Model(cfg, mesh)
+        self.model = Model(cfg, mesh, precision_policy=run.train.precision)
         self.data = SyntheticStream(
             cfg, DataConfig(batch=run.batch, seq=run.seq, seed=run.seed)
         )
         self.ckpt = CheckpointManager(workdir, keep=run.keep_ckpts)
+        # the fused engine: {params, opt} state donated in place, one
+        # dispatch per chunk of <= fuse_steps optimizer steps
         self.step_fn = jax.jit(
-            steps_lib.make_train_step(self.model, run.train), donate_argnums=(0, 1)
+            steps_lib.make_train_loop_step(self.model, run.train),
+            donate_argnums=(0,),
         )
         self._preempted = False
         self.straggler_count = 0
@@ -95,6 +123,10 @@ class Trainer:
             lambda emb, snap: jnp.linalg.norm(emb - snap)
             / (jnp.linalg.norm(snap) + 1e-30)
         )
+        # un-synced fused chunks: list of (first_step, n_steps, metrics)
+        self._pending: list[tuple[int, int, dict]] = []
+        self._flush_t0 = 0.0
+        self._ema = None  # per-step wall EMA (flush granularity)
 
     # ------------------------------------------------------------- state
     def init_state(self) -> dict:
@@ -177,62 +209,138 @@ class Trainer:
                       f"drift {drift:.4f} > {run.index_drift_threshold}")
         return drift
 
+    # --------------------------------------------------------- fused loop
+    def _next_boundary(self, step: int) -> int:
+        """First step > ``step`` the fused window must not cross: run end,
+        checkpoint steps, and periodic index-refresh steps (both need the
+        state/params synced at an exact step count).
+
+        Each DISTINCT clamped chunk length compiles its own fused graph
+        (lax.scan length is static), so misaligned schedules cost a few
+        extra one-time compiles — the set is bounded by the distinct
+        remainders of fuse_steps against the schedules (e.g. fuse 8 with
+        refresh 20 -> lengths {8, 4}), and the jit cache reuses each
+        thereafter. Align ckpt/refresh periods to fuse_steps to get
+        exactly one."""
+        run = self.run
+        nxt = run.num_steps
+        schedules = [run.ckpt_every]
+        if self.head_index is not None and run.index_refresh_every > 0:
+            schedules.append(run.index_refresh_every)
+        for every in schedules:
+            if every and every > 0:
+                nxt = min(nxt, (step // every + 1) * every)
+        return max(nxt, step + 1)
+
+    def _stack_batches(self, t: int) -> dict:
+        bs = [next(self.data) for _ in range(t)]
+        return jax.tree.map(lambda *xs: np.stack(xs), *bs)
+
+    def _flush(self, log: bool = True) -> dict:
+        """Sync all pending fused chunks to host: block once (on the
+        newest dispatch — everything earlier is then complete), convert
+        metrics, run the straggler watchdog, emit log lines."""
+        if not self._pending:
+            return dict(self.metrics_log[-1]) if self.metrics_log else {}
+        jax.block_until_ready(self._pending[-1][2])
+        now = time.perf_counter()
+        n = sum(t for _, t, _ in self._pending)
+        dt = (now - self._flush_t0) / max(n, 1)  # per-step wall this window
+        self._flush_t0 = now
+        if self._ema is None:
+            self._ema = dt
+        else:
+            if dt > self.run.straggler_factor * self._ema:
+                self.straggler_count += 1
+                print(f"[trainer] straggler window ending at step "
+                      f"{self._pending[-1][0] + self._pending[-1][1] - 1}: "
+                      f"{dt:.3f}s/step vs ema {self._ema:.3f}s/step")
+            self._ema = 0.9 * self._ema + 0.1 * dt
+        for s0, t, metrics in self._pending:
+            host = jax.tree.map(np.asarray, metrics)
+            for i in range(t):
+                entry = {k: float(v[i]) for k, v in host.items()
+                         if np.ndim(v) == 1}
+                entry["step"] = s0 + i
+                entry["dt"] = dt
+                self.metrics_log.append(entry)
+                if (log and self.run.log_every > 0
+                        and (s0 + i) % self.run.log_every == 0):
+                    print(f"[trainer] step {s0 + i} "
+                          f"loss={entry.get('loss'):.4f} "
+                          f"({dt * 1e3:.0f}ms/step)")
+        self._pending = []
+        return dict(self.metrics_log[-1])
+
     # --------------------------------------------------------------- run
     def train(self) -> dict:
         self._install_signals()
+        run = self.run
         state = self.maybe_restore()
-        params, opt = state["params"], state["opt"]
+        adamw.check_master_params(state["params"])
         start = int(state["meta"]["step"])
-        self._init_head_index(params)
-        key = jax.random.key(self.run.seed + 17)
-        ema = None
-        last = {}
-        for step in range(start, self.run.num_steps):
-            batch = next(self.data)
-            batch = jax.tree.map(jnp.asarray, batch)
-            k = jax.random.fold_in(key, step)
-            t0 = time.perf_counter()
-            params, opt, metrics = self.step_fn(
-                params, opt, batch, k, self.head_index
+        self._init_head_index(state["params"])
+        dev = {"params": state["params"], "opt": state["opt"]}
+        del state  # dev buffers are donated chunk to chunk
+        base_key = jax.random.key(run.seed + 17)
+        last: dict = {}
+        step = start
+        self._flush_t0 = time.perf_counter()
+        while step < run.num_steps:
+            t = min(max(run.fuse_steps, 1), self._next_boundary(step) - step)
+            batches = self._stack_batches(t)
+            steps_arr = np.arange(step, step + t, dtype=np.uint32)
+            # dispatch and do NOT block: the host runs ahead (data for the
+            # next chunk is built while this one executes) and only syncs
+            # at flush points below
+            dev, metrics = self.step_fn(
+                dev, batches, steps_arr, base_key, self.head_index
             )
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            # straggler watchdog: EMA of step time, count outliers
-            if ema is None:
-                ema = dt
-            else:
-                if dt > self.run.straggler_factor * ema:
-                    self.straggler_count += 1
-                    print(f"[trainer] straggler step {step}: "
-                          f"{dt:.2f}s vs ema {ema:.2f}s")
-                ema = 0.9 * ema + 0.1 * dt
-            last = {k2: float(v) for k2, v in metrics.items()
-                    if jnp.ndim(v) == 0}
-            last["step"] = step
-            last["dt"] = dt
-            if self.head_index is not None:
-                last["index_drift"] = self._maybe_refresh_index(
-                    params, step + 1
-                )
-                last["index_refreshes"] = self.index_refreshes
-            self.metrics_log.append(last)
-            if step % self.run.log_every == 0:
-                print(f"[trainer] step {step} loss={last.get('loss'):.4f} "
-                      f"({dt*1e3:.0f}ms)")
-            done = step + 1
-            if done % self.run.ckpt_every == 0 or done == self.run.num_steps:
+            self._pending.append((step, t, metrics))
+            step += t
+            done = step
+            log_due = run.log_every > 0 and any(
+                s % run.log_every == 0
+                for s0, n, _ in self._pending
+                for s in range(s0, s0 + n)
+            )
+            refresh_due = self.head_index is not None and (
+                (run.index_refresh_every > 0
+                 and done % run.index_refresh_every == 0)
+                or run.index_drift_threshold > 0
+            )
+            ckpt_due = (
+                run.ckpt_every > 0 and done % run.ckpt_every == 0
+            ) or done == run.num_steps
+            preempt = self._preempt_requested()
+            if not (log_due or refresh_due or ckpt_due or preempt
+                    or done == run.num_steps):
+                continue
+            last = self._flush()
+            if refresh_due:
+                drift = self._maybe_refresh_index(dev["params"], done)
+                self.metrics_log[-1]["index_drift"] = drift
+                self.metrics_log[-1]["index_refreshes"] = self.index_refreshes
+                last = dict(self.metrics_log[-1])
+            if ckpt_due:
                 self.ckpt.save_async(done, {
-                    "params": params, "opt": opt,
+                    "params": dev["params"], "opt": dev["opt"],
                     "meta": {"step": done, "data": self.data.state()},
                 })
-            if self._preempt_requested():
+            if preempt:
                 print(f"[trainer] preemption at step {done}; checkpointing")
                 self.ckpt.wait()
                 self.ckpt.save_async(done, {
-                    "params": params, "opt": opt,
+                    "params": dev["params"], "opt": dev["opt"],
                     "meta": {"step": done, "data": self.data.state()},
                 })
                 self.ckpt.wait()
                 return {**last, "status": "preempted", "step": done}
+            # refresh/ckpt host work above is boundary cost, not step cost:
+            # restart the per-step clock so the next window's dt and the
+            # straggler watchdog measure training steps only (matching the
+            # pre-fused loop, which timed step_fn exclusively)
+            self._flush_t0 = time.perf_counter()
+        last = self._flush()
         self.ckpt.wait()
-        return {**last, "status": "done", "step": self.run.num_steps}
+        return {**last, "status": "done", "step": run.num_steps}

@@ -111,3 +111,28 @@ def test_elastic_restore_resharding(tmp_path):
     )
     got, _, _ = ckpt.restore(d, target, shardings=shardings)
     assert got["params"]["w"].sharding.device_set == {jax.devices()[0]}
+
+
+def test_extended_dtype_roundtrip_bitwise(tmp_path):
+    """bf16 (and any ml_dtypes extended dtype) leaves restore BIT-identical:
+    np.savez alone would degrade them to opaque void arrays. Accumulator
+    state of any precision must survive a checkpoint exactly."""
+    d = str(tmp_path)
+    state = {
+        "ema_bf16": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4) * 1.7,
+        "m_f32": jnp.full((5,), 0.125, jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+        "meta": {"step": 2},
+    }
+    ckpt.save(d, 2, dict(state))
+    target = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        {k: v for k, v in state.items() if k != "meta"},
+    )
+    got, _, step = ckpt.restore(d, target)
+    assert step == 2
+    for k in ("ema_bf16", "m_f32", "step"):
+        want = np.asarray(state[k])
+        have = np.asarray(got[k])
+        assert have.dtype == want.dtype, k
+        assert have.tobytes() == want.tobytes(), k

@@ -1,0 +1,143 @@
+"""Statistical verification of the Algorithm-3 ``log Z-hat`` estimator.
+
+Two properties, each checked for the exact, IVF, and LSH probe backends
+(seeded, 3 distinct outer seeds — no test relies on one lucky seed):
+
+* **Confidence-interval calibration.** Conditioned on the probed set S,
+  the stratified estimator is Z-hat = A_S + (|C|/l) * sum_{j<=l} e^{y_Tj}
+  with T_j iid uniform over the complement C — UNBIASED in Z (the paper's
+  stratified-decomposition guarantee; Thm 3.4 applies per stratum, in the
+  spirit of Rastogi & Van Durme's sublinear partition estimation). At
+  test scale n is small enough to enumerate C, so the per-draw variance
+  sigma^2 = (|C|^2 / l) * Var_{U~C}(e^{y_U}) is EXACT, and we can check
+  empirical coverage of the induced intervals over many tail draws:
+    - CLT interval  |Z-hat - Z| <= 1.96 sigma: coverage ~ 95%;
+    - Chebyshev     |Z-hat - Z| <= sigma/sqrt(0.05): coverage >= 95%
+      guaranteed distribution-free (typically ~> 99%).
+  Assertions subtract 3-sigma binomial slack for the seed count, so the
+  per-assertion false-positive rate is ~1e-3 by design (same budget as
+  tests/test_sampling_stats.py).
+
+* **Bias regression.** log Z-hat is Jensen-biased DOWN with bias
+  ~ sigma^2 / (2 Z^2) ~ 1/l; the mean error over seeds must shrink as
+  k = l grows (16 -> 256 shrinks the tail stratum's variance both by
+  probing more mass into S and by averaging more tail draws).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators as est
+from repro.core import mips
+from repro.core.gumbel import TopK
+
+SEEDS = (0, 1, 2)
+N, D = 1024, 16
+DRAWS = 400  # tail-draw replicates per (backend, k)
+
+
+def _problem(seed):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    centers = jax.random.normal(k1, (32, D))
+    assign = jax.random.randint(k2, (N,), 0, 32)
+    db = centers[assign] + 0.5 * jax.random.normal(k3, (N, D))
+    db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
+    h = db[7] * 4.0  # spread-out softmax: the tail stratum carries mass
+    return db, h
+
+
+def _index(backend, db, k):
+    if backend == "exact":
+        return None
+    if backend == "ivf":
+        return mips.build_index(
+            mips.IVFConfig(n_clusters=32, n_probe=8, kmeans_iters=4), db
+        )
+    cap = max(
+        mips.default_bucket_cap(N, mips.LSHConfig().n_bits),
+        8 * int(np.ceil(2.0 * k / mips.LSHConfig().n_tables / 8.0)),
+    )
+    return mips.build_index(mips.LSHConfig(bucket_cap=cap), db)
+
+
+def _draw_logz(db, h, topk, l, key, draws):
+    """(draws,) independent log Z-hat replicates sharing the probed S:
+    amortized_candidates folds the key per row, so tiling S across rows
+    yields iid tail draws."""
+    k = topk.ids.shape[1]
+    tk = TopK(
+        jnp.broadcast_to(topk.ids, (draws, k)),
+        jnp.broadcast_to(topk.values, (draws, k)),
+    )
+    ids, log_w = est.amortized_candidates(key, tk, N, l)
+    hh = jnp.broadcast_to(h[None], (draws, D))
+    return est.stratified_logz(db, hh, ids, log_w)
+
+
+def _stats(db, h, topk):
+    """Exact (Z, A_S, tail mean/var, |C|) given the probed S."""
+    y = np.asarray(db @ h, np.float64)
+    vals = np.asarray(topk.values[0])
+    s_ids = np.asarray(topk.ids[0])[np.isfinite(vals)]
+    mask = np.zeros(N, bool)
+    mask[s_ids] = True
+    e = np.exp(y)
+    z = e.sum()
+    a_s = e[mask].sum()
+    tail = e[~mask]
+    return z, a_s, tail.mean(), tail.var(), len(tail)
+
+
+@pytest.mark.parametrize("backend", ["exact", "ivf", "lsh"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_logz_interval_calibration(backend, seed):
+    k = l = 128
+    db, h = _problem(seed)
+    index = _index(backend, db, k)
+    topk = est.topk_probe(db, h[None], k, index=index)
+    z, a_s, tail_mean, tail_var, csize = _stats(db, h, topk)
+    sigma = np.sqrt(csize**2 * tail_var / l)
+    assert sigma > 0  # the problem must genuinely exercise the tail
+
+    lz = np.asarray(
+        _draw_logz(db, h, topk, l, jax.random.key(seed + 400), DRAWS),
+        np.float64,
+    )
+    z_hat = np.exp(lz)
+    # sanity: the estimator is unbiased in Z (mean within 5 sem of Z)
+    sem = sigma / np.sqrt(DRAWS)
+    assert abs(z_hat.mean() - z) < 5 * sem, (z_hat.mean(), z, sem)
+
+    err = np.abs(z_hat - z)
+    slack = 3 * np.sqrt(0.05 * 0.95 / DRAWS)  # binomial 3-sigma on coverage
+    cov_clt = (err <= 1.96 * sigma).mean()
+    assert cov_clt >= 0.95 - slack - 0.02, (
+        f"{backend}: CLT interval coverage {cov_clt:.3f}"
+    )
+    cov_cheb = (err <= sigma / np.sqrt(0.05)).mean()
+    assert cov_cheb >= 0.95 - slack, (
+        f"{backend}: Chebyshev interval coverage {cov_cheb:.3f}"
+    )
+
+
+@pytest.mark.parametrize("backend", ["exact", "ivf", "lsh"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_logz_bias_shrinks_with_k(backend, seed):
+    db, h = _problem(seed)
+    y = np.asarray(db @ h, np.float64)
+    log_z = np.log(np.exp(y).sum())
+    bias = {}
+    for k in (16, 256):
+        index = _index(backend, db, k)
+        topk = est.topk_probe(db, h[None], k, index=index)
+        lz = np.asarray(
+            _draw_logz(db, h, topk, k, jax.random.key(seed + 500), DRAWS),
+            np.float64,
+        )
+        bias[k] = abs(lz.mean() - log_z)
+    # Jensen bias ~ 1/l: growing k=l 16x must shrink mean log-error a lot;
+    # 2x is a loose floor that still catches a broken tail stratum
+    assert bias[256] < 0.5 * bias[16], bias
+    # and at k=256 the estimator is tight in absolute terms
+    assert bias[256] < 0.05, bias

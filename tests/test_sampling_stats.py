@@ -1,0 +1,180 @@
+"""Statistical verification of the samplers (seeded, pre-registered).
+
+Pointwise tests elsewhere check mechanics (shapes, certificates, masks);
+these tests check the DISTRIBUTIONS the paper promises:
+
+* chi-square goodness of fit of ``dense_gumbel_max`` and (certificate-
+  gated) ``local_gumbel_max`` draws against the exact softmax on a small
+  vocab;
+* a total-variation bound for IVF-index-backed sampling at a measured
+  (fixed) recall: TV(empirical, softmax) <= certificate-failure rate +
+  finite-sample slack.
+
+False-positive budget (documented, pre-registered): every chi-square /
+coverage assertion runs at alpha = 1e-3 per (test, seed); the suite makes
+9 chi-square assertions (2 samplers + 1 TV-ish x 3 seeds), so a fresh
+seed set would spuriously fail with probability < 1%. All seeds below are
+FIXED, so the suite is deterministic — the budget describes the design
+risk taken when the seeds were chosen (they were not tuned: first three
+integers). No test relies on a single lucky seed: each runs and must pass
+on 3 distinct seeds.
+
+Alg-2 caveat: ``sample_fixed_b`` is exact up to certificate failure
+(prob <= delta per Thm 3.3, here k·l = 9216 >= n ln(1/delta) for
+delta = 1e-4 at n = 512), so its OUTPUT law is within TV 1e-4 of softmax
+— invisible at 2e4 draws. We chi-square ALL draws (no conditioning on
+``ok``, which would bias the accepted-draw law) and separately assert the
+certificate pass rate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.core import estimators as est
+from repro.core import mips
+
+ALPHA = 1e-3  # per-assertion significance (see module doc for the budget)
+SEEDS = (0, 1, 2)
+
+
+def _softmax_np(y):
+    y = np.asarray(y, np.float64)
+    p = np.exp(y - y.max())
+    return p / p.sum()
+
+
+def _chi2_pvalue(counts: np.ndarray, p: np.ndarray) -> float:
+    """Chi-square GOF p-value with tail bins merged so every expected
+    count is >= 5 (the classical validity rule)."""
+    n = counts.sum()
+    order = np.argsort(p)[::-1]
+    counts, p = counts[order], p[order]
+    exp = n * p
+    # merge the low-probability tail into one bin
+    keep = np.where(exp >= 5)[0]
+    cut = len(keep) if len(keep) == len(exp) else max(1, keep[-1] + 1)
+    obs = np.concatenate([counts[:cut], [counts[cut:].sum()]])
+    ex = np.concatenate([exp[:cut], [exp[cut:].sum()]])
+    obs, ex = obs[ex > 0], ex[ex > 0]
+    stat = ((obs - ex) ** 2 / ex).sum()
+    return float(stats.chi2.sf(stat, df=len(ex) - 1))
+
+
+def _problem(seed: int, n: int, d: int, temp: float):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    emb = jax.random.normal(k1, (n, d)) / np.sqrt(d)
+    h = jax.random.normal(k2, (d,)) / temp
+    return emb, h
+
+
+# ------------------------------------------------------- dense Gumbel-max
+@pytest.mark.parametrize("seed", SEEDS)
+def test_dense_gumbel_max_matches_softmax(seed):
+    n, d, draws = 64, 8, 20_000
+    emb, h = _problem(seed, n, d, temp=1.5)
+    p = _softmax_np(emb @ h)
+
+    @jax.jit
+    def draw(key):
+        hh = jnp.broadcast_to(h[None], (2000, d))
+        keys = jax.random.split(key, 2000)
+        ids, _ = est.dense_gumbel_max(None, emb, hh, keys=keys)
+        return ids
+
+    ids = np.concatenate([
+        np.asarray(draw(jax.random.fold_in(jax.random.key(seed + 100), i)))
+        for i in range(draws // 2000)
+    ])
+    counts = np.bincount(ids, minlength=n)
+    pv = _chi2_pvalue(counts, p)
+    assert pv > ALPHA, f"dense sampler deviates from softmax: p={pv:.2e}"
+
+
+# ------------------------------------------- lazy local Gumbel-max (Alg 2)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_local_gumbel_max_matches_softmax(seed):
+    """Certificate-gated Alg-2 draws on a small vocab: k=l=96 at n=512
+    gives delta <= 1e-4 (k·l >= n ln(1/delta)), so the sampler's law is
+    within TV 1e-4 of softmax and virtually every draw certifies."""
+    n, d, k, l, draws = 512, 16, 96, 96, 20_000
+    emb, h = _problem(seed, n, d, temp=1.0)
+    p = _softmax_np(emb @ h)
+
+    @jax.jit
+    def draw(key):
+        t = 1000
+        hh = jnp.broadcast_to(h[None], (t, d))
+        keys = jax.random.split(key, t)
+        res = est.local_gumbel_max(None, emb, hh, k=k, l=l, keys=keys)
+        return res.index, res.ok
+
+    ids, oks = [], []
+    for i in range(draws // 1000):
+        a, b = draw(jax.random.fold_in(jax.random.key(seed + 200), i))
+        ids.append(np.asarray(a))
+        oks.append(np.asarray(b))
+    ids, oks = np.concatenate(ids), np.concatenate(oks)
+    assert oks.mean() > 0.999, f"certificate pass rate {oks.mean():.4f}"
+    pv = _chi2_pvalue(np.bincount(ids, minlength=n), p)
+    assert pv > ALPHA, f"lazy-Gumbel sampler deviates from softmax: p={pv:.2e}"
+
+
+# --------------------------------------------- IVF-backed sampling TV bound
+def _clustered_db(n, d, seed):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    centers = jax.random.normal(k1, (32, d))
+    assign = jax.random.randint(k2, (n,), 0, 32)
+    db = centers[assign] + 0.5 * jax.random.normal(k3, (n, d))
+    return db / jnp.linalg.norm(db, axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_ivf_backed_sampling_tv_bound(seed):
+    """With an approximate probe the certificate can fail (the missed
+    top-k gap c is unknown); the sampler's law q then satisfies
+    TV(q, softmax) <= P(certificate fails). Check the empirical version:
+    TV(q_hat, p) <= fail_rate + slack, where slack bounds both the
+    finite-sample TV of q_hat around q (E||q_hat - q||_1 <= sqrt(n/M))
+    and the binomial error of the measured fail rate — at a measured,
+    asserted probe recall, so the regime is 'fixed recall', not a lucky
+    easy index."""
+    n, d, k, l, draws = 1024, 16, 128, 128, 40_000
+    db = _clustered_db(n, d, seed)
+    h = np.asarray(db[3] * 8.0)  # a peaked-but-spread softmax over the db
+    p = _softmax_np(db @ h)
+    index = mips.build_index(
+        mips.IVFConfig(n_clusters=32, n_probe=8, kmeans_iters=4), db
+    )
+    # fixed-recall regime: measure and pin probe recall@k
+    exact_ids = set(np.argsort(-(db @ h))[:k].tolist())
+    got = set(np.asarray(index.topk_batch(h[None], k).ids[0]).tolist())
+    recall = len(got & exact_ids) / k
+    assert recall >= 0.7, f"probe recall collapsed: {recall}"
+
+    @jax.jit
+    def draw(key):
+        t = 2000
+        hh = jnp.broadcast_to(jnp.asarray(h)[None], (t, d))
+        keys = jax.random.split(key, t)
+        res = est.local_gumbel_max(
+            None, db, hh, k=k, l=l, index=index, keys=keys
+        )
+        return res.index, res.ok
+
+    ids, oks = [], []
+    for i in range(draws // 2000):
+        a, b = draw(jax.random.fold_in(jax.random.key(seed + 300), i))
+        ids.append(np.asarray(a))
+        oks.append(np.asarray(b))
+    ids, oks = np.concatenate(ids), np.concatenate(oks)
+    fail = 1.0 - oks.mean()
+    q_hat = np.bincount(ids, minlength=n) / draws
+    tv = 0.5 * np.abs(q_hat - p).sum()
+    # slack: sqrt(n/M) for the empirical TV + 3-sigma on the fail rate
+    slack = np.sqrt(n / draws) + 3 * np.sqrt(max(fail, 1e-4) / draws)
+    assert tv <= fail + slack, (
+        f"TV {tv:.4f} exceeds certificate-failure bound {fail:.4f} "
+        f"+ slack {slack:.4f} (recall {recall:.2f})"
+    )

@@ -1,0 +1,324 @@
+"""Fused multi-step training engine: equivalence contracts + precision
+policy (DESIGN.md §9).
+
+The contracts, in decreasing strength:
+
+* fused T-step scan ≡ T sequential single-step dispatches — BITWISE, any
+  precision (same HLO body, same fold_in(base_key, step) key derivation);
+* gradient accumulation (scan) ≡ host-loop accumulation of the same
+  microbatches — BITWISE (same sums in the same order);
+* accumulated microbatch grads ≡ one full-batch grad — ALLCLOSE only:
+  splitting the batch changes the reduction order inside the matmuls, so
+  fp32 agreement is ~1e-6 relative, not bitwise (and under the amortized
+  head the two draw different estimator tails by construction — these
+  tests pin the exact head, which is deterministic);
+* checkpoint at a step that is NOT a multiple of ``fuse_steps`` (the
+  trainer clamps the fused window at ckpt boundaries), resume, and the
+  final state is bitwise identical to an uninterrupted run.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.transformer as T
+from repro import precision
+from repro.configs import get_smoke
+from repro.core import estimators as est
+from repro.data.synthetic import DataConfig, make_batch
+from repro.launch import steps as S
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import RunConfig, Trainer
+
+
+@pytest.fixture(autouse=True)
+def _no_remat(monkeypatch):
+    monkeypatch.setattr(T, "REMAT", False)
+
+
+CFG = get_smoke("tinyllama-1.1b")  # vocab 512 -> head resolves to exact
+
+
+def _opt(total):
+    return OptConfig(lr=1e-2, warmup_steps=2, total_steps=total)
+
+
+def _batches(n, batch=4, seq=32, seed=0):
+    dcfg = DataConfig(batch=batch, seq=seq, seed=seed)
+    return [make_batch(CFG, dcfg, i) for i in range(n)]
+
+
+def _stack(bs):
+    return jax.tree.map(lambda *xs: np.stack(xs), *bs)
+
+
+def _leaves_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True)
+    )
+
+
+# ------------------------------------------------------- fused == sequential
+@pytest.mark.parametrize("prec", ["f32", "bf16"])
+def test_fused_window_equals_sequential_steps_bitwise(prec):
+    """T fused optimizer steps reproduce T single-step dispatches bit for
+    bit — the engine's speedup is pure dispatch/host-sync amortization."""
+    tcfg = S.TrainConfig(opt=_opt(8), precision=prec)
+    model = Model(CFG, precision_policy=prec)
+    params = model.init(jax.random.key(0))
+    opt = adamw.init(params)
+    base = jax.random.key(17)
+    bs = _batches(4)
+
+    step = jax.jit(S.make_train_step(model, tcfg))
+    pa, oa = params, opt
+    for i, b in enumerate(bs):
+        k = jax.random.fold_in(base, np.uint32(i))
+        pa, oa, _ = step(pa, oa, jax.tree.map(jnp.asarray, b), k)
+
+    loop = jax.jit(S.make_train_loop_step(model, tcfg))
+    st, metrics = loop(
+        {"params": params, "opt": opt}, _stack(bs),
+        np.arange(4, dtype=np.uint32), base,
+    )
+    assert _leaves_equal(pa, st["params"]), "params diverged"
+    assert _leaves_equal(oa, st["opt"]), "optimizer state diverged"
+    # metrics come back stacked per step
+    assert metrics["loss"].shape == (4,)
+    assert np.all(np.isfinite(np.asarray(metrics["loss"])))
+
+
+def test_fused_window_invariant_to_chunking_bitwise():
+    """scan(4) == scan(1)+scan(3) == scan(2)+scan(2): the trainer may clamp
+    windows at log/ckpt/refresh boundaries without changing the run."""
+    tcfg = S.TrainConfig(opt=_opt(8), precision="f32")
+    model = Model(CFG, precision_policy="f32")
+    params = model.init(jax.random.key(0))
+    opt = adamw.init(params)
+    base = jax.random.key(17)
+    bs = _batches(4)
+    loop = jax.jit(S.make_train_loop_step(model, tcfg))
+
+    def run(chunks):
+        st, i = {"params": params, "opt": opt}, 0
+        for c in chunks:
+            st, _ = loop(st, _stack(bs[i:i + c]),
+                         np.arange(i, i + c, dtype=np.uint32), base)
+            i += c
+        return st
+
+    ref = run([4])
+    for chunks in ([1, 3], [2, 2], [1, 1, 1, 1]):
+        st = run(chunks)
+        assert _leaves_equal(ref, st), chunks
+
+
+# ------------------------------------------------------ gradient accumulation
+def _grad_fn(model):
+    return jax.grad(lambda p, b, k: model.loss_fn(p, b, k)[0])
+
+
+def test_accum_scan_equals_host_loop_bitwise():
+    """The in-dispatch accumulation scan sums exactly what a host loop over
+    the same microbatches would sum — bitwise, fp32 accumulators."""
+    model = Model(CFG, precision_policy="f32")
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(3)
+    (batch,) = _batches(1, batch=8)
+    batch = jax.tree.map(jnp.asarray, batch)
+    accum = 4
+
+    # the scan path, exactly as make_train_step builds it
+    tcfg = S.TrainConfig(opt=_opt(8), precision="f32", accum=accum)
+    opt = adamw.init(params)
+    step = jax.jit(S.make_train_step(model, tcfg))
+    p_scan, _, _ = step(params, opt, batch, key)
+
+    # host loop: same microbatch split, same per-microbatch keys, same
+    # fp32 sum order, one adamw.update
+    mbs = jax.tree.map(
+        lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+    )
+    keys = jax.random.split(key, accum)
+    gfn = jax.jit(_grad_fn(model))
+    g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    for i in range(accum):
+        mb = jax.tree.map(lambda x: x[i], mbs)
+        gi = gfn(params, mb, keys[i])
+        g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g, gi)
+    g = jax.tree.map(lambda x: x / accum, g)
+    p_loop, _, _ = jax.jit(
+        lambda g, o, p: adamw.update(g, o, p, tcfg.opt)
+    )(g, adamw.init(params), params)
+    assert _leaves_equal(p_scan, p_loop)
+
+
+@pytest.mark.parametrize("prec,rtol", [("f32", 3e-5), ("bf16", 3e-2)])
+def test_accum_matches_full_batch(prec, rtol):
+    """accum=N at microbatch B/N ~ one step at batch B. Reduction order
+    differs inside the batched matmuls, so fp32 agrees to ~1e-6 relative
+    (never bitwise); bf16 compute widens that, with fp32 accumulators
+    keeping it well-conditioned."""
+    model = Model(CFG, precision_policy=prec)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(3)
+    (batch,) = _batches(1, batch=8)
+    batch = jax.tree.map(jnp.asarray, batch)
+
+    gfull = jax.jit(_grad_fn(model))(params, batch, key)
+    mbs = jax.tree.map(
+        lambda x: x.reshape((4, 2) + x.shape[1:]), batch
+    )
+    keys = jax.random.split(key, 4)
+    gfn = jax.jit(_grad_fn(model))
+    g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    for i in range(4):
+        gi = gfn(params, jax.tree.map(lambda x: x[i], mbs), keys[i])
+        g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g, gi)
+    g = jax.tree.map(lambda x: x / 4, g)
+    for (pth, a), (_, b) in zip(
+        jax.tree_util.tree_leaves_with_path(gfull),
+        jax.tree_util.tree_leaves_with_path(g),
+        strict=True,
+    ):
+        a = np.asarray(a, np.float64)
+        b = np.asarray(b, np.float64)
+        scale = np.abs(a).max() + 1e-30
+        np.testing.assert_allclose(
+            a / scale, b / scale, atol=rtol,
+            err_msg=jax.tree_util.keystr(pth),
+        )
+
+
+# --------------------------------------------------- checkpoint mid-window
+def test_checkpoint_mid_window_resume_bitwise(tmp_path):
+    """ckpt_every=3 with fuse_steps=4: the trainer clamps fused windows at
+    checkpoint boundaries, and a stop/resume at step 3 is bitwise identical
+    to the uninterrupted run."""
+
+    def run_cfg(steps, total=8):
+        return RunConfig(
+            num_steps=steps, ckpt_every=3, log_every=100, batch=4, seq=32,
+            fuse_steps=4, train=S.TrainConfig(opt=_opt(total)),
+        )
+
+    def final_state(tr):
+        target = jax.eval_shape(lambda: {
+            k: v for k, v in tr.init_state().items() if k != "meta"})
+        state, _, step = tr.ckpt.restore(target)
+        return state, step
+
+    a_dir = os.path.join(str(tmp_path), "a")
+    tr_a = Trainer(CFG, run_cfg(8), a_dir)
+    assert tr_a.train()["status"] == "done"
+    state_a, step_a = final_state(tr_a)
+    assert step_a == 8
+
+    b_dir = os.path.join(str(tmp_path), "b")
+    tr_b1 = Trainer(CFG, run_cfg(3), b_dir)
+    assert tr_b1.train()["status"] == "done"
+    tr_b2 = Trainer(CFG, run_cfg(8), b_dir)
+    assert tr_b2.train()["status"] == "done"
+    state_b, _ = final_state(tr_b2)
+    for (pa, la), (_, lb) in zip(
+        jax.tree_util.tree_leaves_with_path(state_a),
+        jax.tree_util.tree_leaves_with_path(state_b),
+        strict=True,
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=jax.tree_util.keystr(pa),
+        )
+
+
+def test_fuse_steps_do_not_change_training(tmp_path):
+    """End to end: fuse_steps=3 (uneven chunking over 7 steps) and
+    fuse_steps=1 produce bitwise-identical final checkpoints."""
+
+    def run(fuse, sub):
+        tr = Trainer(CFG, RunConfig(
+            num_steps=7, ckpt_every=7, log_every=2, batch=4, seq=32,
+            fuse_steps=fuse, train=S.TrainConfig(opt=_opt(7)),
+        ), os.path.join(str(tmp_path), sub))
+        assert tr.train()["status"] == "done"
+        target = jax.eval_shape(lambda: {
+            k: v for k, v in tr.init_state().items() if k != "meta"})
+        state, _, _ = tr.ckpt.restore(target)
+        assert len(tr.metrics_log) == 7  # one entry per optimizer step
+        return state
+
+    assert _leaves_equal(run(1, "f1"), run(3, "f3"))
+
+
+# ------------------------------------------------------------- precision
+def test_policy_validation():
+    with pytest.raises(ValueError, match="unknown precision policy"):
+        precision.get_policy("fp16")
+    with pytest.raises(ValueError, match="estimator accumulators"):
+        precision.Policy(
+            name="bad", compute_dtype=jnp.bfloat16,
+            estimator_dtype=jnp.bfloat16,
+        )
+    with pytest.raises(ValueError, match="master params"):
+        precision.Policy(
+            name="bad", compute_dtype=jnp.bfloat16,
+            param_dtype=jnp.bfloat16,
+        )
+    assert precision.get_policy(None).name == "bf16"
+    assert precision.get_policy(precision.F32) is precision.F32
+
+
+def test_bf16_policy_keeps_masters_and_estimators_fp32():
+    model = Model(CFG, precision_policy="bf16")
+    params = model.init(jax.random.key(0))
+    # masters are fp32 regardless of compute policy
+    adamw.check_master_params(params)  # does not raise
+    bad = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="non-fp32 master"):
+        adamw.check_master_params(bad)
+    # activations enter the trunk in bf16
+    assert model.compute_dtype == jnp.bfloat16
+    x, _, _ = model._embed_inputs(
+        params, {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    )
+    assert x.dtype == jnp.bfloat16
+
+
+def test_estimator_partials_fp32_under_bf16_inputs():
+    """Algorithm-3 partials and Algorithm-2 certificates accumulate fp32
+    even when embeddings/queries/scores arrive in bf16."""
+    n, d, t = 512, 16, 6
+    emb = jax.random.normal(jax.random.key(0), (n, d), jnp.bfloat16)
+    h = jax.random.normal(jax.random.key(1), (t, d), jnp.bfloat16)
+    ids = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None], (t, 1))
+    log_w = jnp.zeros((t, 8), jnp.bfloat16)
+    lz = est.stratified_logz(emb, h, ids, log_w)
+    assert lz.dtype == jnp.float32
+    assert est.exact_logz(emb, h).dtype == jnp.float32
+    parts = est.loss_partials(
+        jax.random.key(2), emb, h, jnp.zeros((t,), jnp.int32),
+        mode="amortized", k=16, l=16, score_dtype=jnp.bfloat16,
+    )
+    assert parts.log_z.dtype == jnp.float32
+    assert parts.y_t.dtype == jnp.float32
+    res = est.local_gumbel_max(jax.random.key(3), emb, h, k=16, l=16)
+    assert res.max_val.dtype == jnp.float32
+    assert res.bound.dtype == jnp.float32
+
+
+def test_disabled_schedules_do_not_crash(tmp_path):
+    """ckpt_every=0 / log_every=0 mean 'disabled', not ZeroDivisionError;
+    the run still writes its final checkpoint."""
+    tr = Trainer(CFG, RunConfig(
+        num_steps=3, ckpt_every=0, log_every=0, batch=2, seq=16,
+        fuse_steps=2, train=S.TrainConfig(opt=_opt(3)),
+    ), str(tmp_path))
+    out = tr.train()
+    assert out["status"] == "done"
+    assert len(tr.metrics_log) == 3
+    assert tr.ckpt.latest_step() == 3  # done == num_steps still checkpoints
