@@ -1,0 +1,164 @@
+"""Quantized-index economics: IVF-PQ vs exact vs IVF at matched recall.
+
+The scaling wall for the amortized head is index HBM: the exact backend
+holds the full fp table and the IVF backend holds a cap-padded fp COPY of
+it (~``cap_factor``x the table!), so both grow linearly in ``vocab · d ·
+4`` bytes. The IVF-PQ backend stores uint8 residual codes plus shared
+codebooks and re-ranks against the model's own embedding rows (an alias,
+not a copy), so its index-owned HBM is ``~cap_factor·(m_sub + 4)`` bytes
+per row (codes + int32 ids, both cap-padded) — an order of magnitude
+down.
+
+This benchmark measures, on the vocab-32k LM grid (d=128, clustered
+embeddings, paper-style queries θ drawn near dataset rows):
+
+* ``memory_bytes`` per backend (the accounting the Index API reports);
+* probe wall time per query batch (CPU figures are indicative only — the
+  Pallas LUT kernel runs in interpret mode off-TPU, and XLA-CPU gathers
+  are not MXU matmuls);
+* measured **re-rank recall@k** of the PQ probe against the exact oracle —
+  the number that plugs into the estimator's TV-at-measured-recall
+  accounting (tests/test_sampling_stats.py).
+
+ACCEPTANCE (asserted below, both --smoke and full): PQ index memory is
+>= 8x smaller than the exact backend's while measured re-rank recall@64
+is >= 0.95.
+
+  PYTHONPATH=src python -m benchmarks.pq_index [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import clustered_db, random_queries, timeit
+from repro.core import mips
+
+N, D, K = 32768, 128, 64  # the vocab-32k acceptance grid
+MEM_TARGET = 8.0  # x reduction vs exact, asserted
+RECALL_TARGET = 0.95  # re-rank recall@K, asserted
+
+
+def _recall(index, exact, queries, k) -> float:
+    got = np.asarray(index.topk_batch(queries, k).ids)
+    want = np.asarray(exact.topk_batch(queries, k).ids)
+    return float(
+        np.mean([len(set(g) & set(w)) / k for g, w in zip(got, want)])
+    )
+
+
+def _probe_time(index, queries, k, iters) -> float:
+    fn = jax.jit(lambda ix, q: ix.topk_batch(q, k))
+    return timeit(fn, index, queries, iters=iters, warmup=1)
+
+
+def run(report, smoke: bool = False) -> dict:
+    iters = 3 if smoke else 10
+    n_q = 32 if smoke else 128
+    probes = (16,) if smoke else (8, 16, 32)
+
+    db = clustered_db(N, D, seed=7)
+    queries = random_queries(db, n_q, temperature=0.05, seed=3)
+    exact = mips.build_index(mips.ExactConfig(), db)
+    mem_exact = exact.memory_bytes()
+    t_exact = _probe_time(exact, queries, K, iters)
+    report(f"pq/exact_n{N//1024}k", t_exact * 1e6 / n_q,
+           f"mem_mb={mem_exact / 1e6:.2f}")
+
+    ivf = mips.build_index(
+        mips.IVFConfig(n_probe=16, kmeans_iters=6), db
+    )
+    r_ivf = _recall(ivf, exact, queries, K)
+    t_ivf = _probe_time(ivf, queries, K, iters)
+    report(
+        "pq/ivf_np16", t_ivf * 1e6 / n_q,
+        f"mem_mb={ivf.memory_bytes() / 1e6:.2f} "
+        f"mem_vs_exact={mem_exact / ivf.memory_bytes():.2f}x "
+        f"recall@{K}={r_ivf:.4f}",
+    )
+
+    out = {
+        "n": N, "d": D, "k": K,
+        "mem_exact_mb": round(mem_exact / 1e6, 3),
+        "mem_ivf_mb": round(ivf.memory_bytes() / 1e6, 3),
+        "probe_us_exact": round(t_exact * 1e6 / n_q, 1),
+        "recall_ivf": round(r_ivf, 4),
+        "rows": [],
+    }
+    best = None
+    for n_probe in probes:
+        pq = mips.build_index(
+            mips.PQConfig(
+                n_probe=n_probe, kmeans_iters=6, pq_iters=6, rerank=4 * K
+            ),
+            db,
+        )
+        spill = mips.index_spill(pq)
+        mem = pq.memory_bytes()
+        rec = _recall(pq, exact, queries, K)
+        t_pq = _probe_time(pq, queries, K, iters)
+        ratio = mem_exact / mem
+        row = {
+            "n_probe": n_probe,
+            "mem_mb": round(mem / 1e6, 3),
+            "mem_reduction_vs_exact": round(ratio, 2),
+            "rerank_recall": round(rec, 4),
+            "probe_us_per_q": round(t_pq * 1e6 / n_q, 1),
+            "spill": spill,
+        }
+        out["rows"].append(row)
+        report(
+            f"pq/ivfpq_np{n_probe}", t_pq * 1e6 / n_q,
+            f"mem_mb={mem / 1e6:.2f} mem_vs_exact={ratio:.1f}x "
+            f"recall@{K}={rec:.4f} spill={spill}",
+        )
+        if rec >= RECALL_TARGET and (best is None
+                                     or ratio > best["mem_reduction_vs_exact"]):
+            best = row
+
+    # ---- acceptance: >=8x index-memory reduction at >=0.95 recall --------
+    assert best is not None, (
+        f"no IVF-PQ row reached re-rank recall {RECALL_TARGET} "
+        f"(rows: {out['rows']})"
+    )
+    assert best["mem_reduction_vs_exact"] >= MEM_TARGET, (
+        f"memory reduction {best['mem_reduction_vs_exact']}x < "
+        f"{MEM_TARGET}x at recall {best['rerank_recall']}"
+    )
+    assert best["spill"] == 0, best
+    out["best"] = best
+    report(
+        "pq/acceptance", 0.0,
+        f"{best['mem_reduction_vs_exact']}x mem reduction at "
+        f"recall@{K}={best['rerank_recall']} (targets: "
+        f">={MEM_TARGET}x, >={RECALL_TARGET})",
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI grid: one probe setting, fewer timing iters "
+                         "(same vocab-32k database — the acceptance "
+                         "thresholds are asserted either way)")
+    ap.add_argument("--json", default=None,
+                    help="write the full result table to this path")
+    args = ap.parse_args()
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print("name,us_per_query,derived")
+    out = run(report, smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

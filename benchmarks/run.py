@@ -6,9 +6,10 @@ Prints ``name,us_per_call,derived`` CSV. Select subsets with
 
 ``--json-out PATH`` additionally writes one combined JSON document — a
 ``BENCH_*.json`` trajectory entry — with every reported row plus run
-metadata, so successive PRs can record comparable baselines (the first
-entry lives at BENCH_20260802_train.json; regenerate with the same
-command to extend the trajectory).
+metadata, so successive PRs can record comparable baselines (entries so
+far: BENCH_20260802_train.json [train], BENCH_20260802_serve_pq.json
+[serve+train+pq]; regenerate with the same command to extend the
+trajectory).
 """
 from __future__ import annotations
 
@@ -25,6 +26,7 @@ def main() -> None:
         index_refresh,
         learning,
         partition_tradeoff,
+        pq_index,
         roofline_report,
         sampling_accuracy,
         sampling_speed,
@@ -42,6 +44,7 @@ def main() -> None:
         "dist": dist_head.run,
         "serve": serve_engine.run,
         "train": train_engine.run,
+        "pq": pq_index.run,
         "roofline": roofline_report.run,
     }
     ap = argparse.ArgumentParser()
@@ -52,7 +55,7 @@ def main() -> None:
                          "(a BENCH_*.json trajectory entry)")
     ap.add_argument("--smoke", action="store_true",
                     help="pass smoke=True to suites that support it "
-                         "(serve, train)")
+                         "(serve, train, pq)")
     args = ap.parse_args()
     unknown = [w for w in args.suites if w not in suites]
     if unknown:
@@ -72,7 +75,7 @@ def main() -> None:
     t0 = time.time()
     for key in wanted:
         fn = suites[key]
-        if args.smoke and key in ("serve", "train"):
+        if args.smoke and key in ("serve", "train", "pq"):
             out = fn(report, smoke=True)
         else:
             out = fn(report)

@@ -40,10 +40,12 @@ from repro.core import estimators as est
 from repro.core import mips
 from repro.core.gumbel import SampleResult, default_kl
 
-__all__ = ["HeadConfig", "head_loss", "head_sample", "make_index"]
+__all__ = [
+    "HeadConfig", "head_loss", "head_sample", "make_index", "uses_index",
+]
 
 _MODES = ("exact", "topk_only", "amortized")
-_MIPS = ("exact", "ivf", "lsh")
+_MIPS = ("exact", "ivf", "ivfpq", "lsh")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +54,7 @@ class HeadConfig:
     k: int = 0  # |S|; 0 -> default_kl(n, delta)
     l: int = 0  # |T|; 0 -> same as k
     mode: str = "amortized"  # exact | topk_only | amortized
-    mips: str = "exact"  # exact | ivf | lsh  (index used for the top-k probe)
+    mips: str = "exact"  # exact | ivf | ivfpq | lsh  (top-k probe index)
     n_probe: int = 8
     use_kernel: bool = False
     chunk: int = 256  # token chunk for gathers
@@ -93,6 +95,16 @@ class HeadLossOut(NamedTuple):
     log_z: jax.Array  # (T,) partition estimates (diagnostics)
 
 
+def uses_index(cfg: HeadConfig) -> bool:
+    """Whether this head builds a MIPS index at all — the ONE encoding of
+    the rule (exact mode or exact backend, including resolved()'s
+    min_amortized_n downgrade, runs straight off ``emb``). Callers that
+    prepare index inputs (e.g. the trainer's donation-safe embedding
+    copy) check this first to avoid allocating for a None index."""
+    cfg = cfg.resolved()
+    return cfg.mode != "exact" and cfg.mips != "exact"
+
+
 def make_index(
     cfg: HeadConfig, emb: jax.Array, mesh=None, axis: str = "model"
 ) -> mips.Index | None:
@@ -109,11 +121,19 @@ def make_index(
     ``shard_map`` (pad rows are masked at probe time via ``n_valid``).
     """
     cfg = cfg.resolved()
-    if cfg.mode == "exact" or cfg.mips == "exact":
+    if not uses_index(cfg):
         return None  # exact top-k runs directly off `emb`
     mp = mesh.shape[axis] if mesh is not None else 1
     if cfg.mips == "ivf":
         mips_cfg = mips.IVFConfig(n_probe=cfg.n_probe, use_kernel=cfg.use_kernel)
+    elif cfg.mips == "ivfpq":
+        # quantized production index: re-rank pool sized to the PROBED k
+        # (per-shard k when sharded), so the exact re-rank always covers
+        # the head's candidate set with screening headroom on top
+        k_loc = max(8, cfg.k // mp)
+        mips_cfg = mips.PQConfig(
+            n_probe=cfg.n_probe, use_kernel=cfg.use_kernel, rerank=2 * k_loc
+        )
     else:  # "lsh" (resolved() validated the choices)
         # size buckets so the union of table candidates can cover the
         # PROBED k (the default load-based cap may be smaller than k).
@@ -127,7 +147,11 @@ def make_index(
         mips_cfg = mips.LSHConfig(bucket_cap=max(cap_load, cap_k))
     if mesh is not None:
         return mips.build_index(mips_cfg, emb, mesh=mesh, axis=axis)
-    return mips.build_index(mips_cfg, emb[: cfg.n])
+    # full-table fast path: slicing would copy, and the PQ backend keeps
+    # the caller's handle as its fp re-rank rows — pass the resident
+    # buffer itself whenever the vocab is unpadded
+    db = emb if cfg.n == emb.shape[0] else emb[: cfg.n]
+    return mips.build_index(mips_cfg, db)
 
 
 def head_loss(

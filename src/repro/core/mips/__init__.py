@@ -1,12 +1,14 @@
 """MIPS indexes as a stateful, jit-compatible Index API (DESIGN.md §7).
 
-Backends: exact oracle, IVF (production), SRP-LSH (theory reference).
-The per-backend config dataclass selects the backend — there is no string
-dispatch::
+Backends: exact oracle, IVF (production, full-precision rows), IVF-PQ
+(production, 8–16x-compressed uint8 codes + exact re-rank), SRP-LSH
+(theory reference). The per-backend config dataclass selects the backend —
+there is no string dispatch::
 
     from repro.core import mips
 
     index = mips.build_index(mips.IVFConfig(n_probe=16), db)
+    index = mips.build_index(mips.PQConfig(n_probe=16), db)  # quantized
     topk  = index.topk_batch(q, k)        # TopK[(b, k)]
     index = index.refresh(new_db)         # warm-started, shape-stable
     index.memory_bytes()
@@ -22,12 +24,14 @@ from repro.core.mips.base import (
     backend_cls,
     build_index,
     index_spill,
+    index_spill_parts,
     register_backend,
     state_bytes,
 )
 from repro.core.mips.exact import ExactConfig, ExactIndex
 from repro.core.mips.ivf import IVFConfig, IVFIndex, IVFState
 from repro.core.mips.lsh import LSHConfig, LSHIndex, default_bucket_cap
+from repro.core.mips.pq import IVFPQIndex, PQConfig, PQState
 from repro.core.mips.sharded import ShardedIndex
 
 __all__ = [
@@ -36,6 +40,7 @@ __all__ = [
     "backend_cls",
     "build_index",
     "index_spill",
+    "index_spill_parts",
     "register_backend",
     "state_bytes",
     "ExactConfig",
@@ -45,6 +50,9 @@ __all__ = [
     "IVFState",
     "LSHConfig",
     "LSHIndex",
+    "IVFPQIndex",
+    "PQConfig",
+    "PQState",
     "default_bucket_cap",
     "TopK",
 ]

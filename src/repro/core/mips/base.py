@@ -31,6 +31,7 @@ __all__ = [
     "backend_cls",
     "build_index",
     "index_spill",
+    "index_spill_parts",
     "register_backend",
     "state_bytes",
 ]
@@ -123,23 +124,47 @@ def build_index(
 
 
 def index_spill(index: Any) -> int:
-    """Rows an IVF build/refresh dropped from both the member tables and
-    the overflow buffer (summed across shards for a ShardedIndex); 0 means
-    exact database coverage. Returns 0 for non-IVF backends and ``None``.
-    Eager-only (reads device scalars)."""
+    """Coverage shortfall of a built index, summed across shards for a
+    ShardedIndex; 0 means every database row is reachable at the
+    configured probe/re-rank settings. Counts two uniform diagnostics:
+
+    * ``spill_count`` — rows an IVF/IVF-PQ build or refresh dropped from
+      both the member tables and the overflow buffer;
+    * ``rerank_spill`` — IVF-PQ re-rank pool overflow: configured exact
+      re-rank slots the probed candidate pool can never fill (a static
+      probe/re-rank misconfiguration, counted the same way so partial-fill
+      diagnostics stay uniform across backends).
+
+    Returns 0 for backends without either counter and for ``None``.
+    Eager-only (reads device scalars). The two counters call for different
+    operator fixes — use :func:`index_spill_parts` to word a warning."""
+    return sum(index_spill_parts(index))
+
+
+def index_spill_parts(index: Any) -> tuple[int, int]:
+    """(rows dropped at build, unfillable re-rank slots) — the breakdown
+    behind :func:`index_spill`, separated because the remedies differ:
+    build spill wants a bigger overflow buffer (``overflow_frac``), a
+    re-rank shortfall wants a smaller ``PQConfig.rerank`` or more probed
+    clusters. Eager-only (reads device scalars)."""
     if index is None:
-        return 0
+        return 0, 0
     stack = [getattr(index, "state", None)]
-    total = 0
+    dropped = short = 0
     while stack:
         x = stack.pop()
         if x is None:
             continue
+        counted = False
         if hasattr(x, "spill_count"):
-            total += int(jax.numpy.sum(x.spill_count))
-        elif isinstance(x, (tuple, list)):
+            dropped += int(jax.numpy.sum(x.spill_count))
+            counted = True
+        if hasattr(x, "rerank_spill"):
+            short += int(jax.numpy.sum(x.rerank_spill))
+            counted = True
+        if not counted and isinstance(x, (tuple, list)):
             stack.extend(x)
-    return total
+    return dropped, short
 
 
 def state_bytes(tree: Any) -> int:

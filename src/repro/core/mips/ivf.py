@@ -35,6 +35,8 @@ import numpy as np
 
 from repro.core.gumbel import TopK
 from repro.core.mips import base
+from repro.core.quant.kmeans import assign_clusters as _assign_clusters
+from repro.core.quant.kmeans import lloyd as _lloyd
 
 __all__ = ["IVFConfig", "IVFIndex", "IVFState"]
 
@@ -86,36 +88,12 @@ def _geometry(n: int, cfg: IVFConfig) -> tuple[int, int, int]:
 
 # --------------------------------------------------------------------------
 # on-device build: jitted Lloyd k-means + sort/scan padded packing
+# (the Lloyd/assignment core lives in core/quant/kmeans.py, shared with PQ
+# codebook training; the host-numpy reference below stays local on purpose)
 # --------------------------------------------------------------------------
-def _assign_clusters(dbf: jax.Array, cent: jax.Array) -> jax.Array:
-    """Nearest centroid per row: dist² = |x|² - 2x·c + |c|² (|x|² constant)."""
-    sq_c = (cent * cent).sum(-1)
-    return jnp.argmin(sq_c[None, :] - 2.0 * (dbf @ cent.T), axis=1).astype(
-        jnp.int32
-    )
-
-
-def _lloyd(dbf: jax.Array, cent: jax.Array, n_c: int, iters: int) -> jax.Array:
-    """Lloyd iterations with segment_sum centroid updates (empty clusters
-    keep their previous centroid, matching the host reference)."""
-    n = dbf.shape[0]
-
-    def body(_, cent):
-        assign = _assign_clusters(dbf, cent)
-        sums = jax.ops.segment_sum(dbf, assign, num_segments=n_c)
-        counts = jax.ops.segment_sum(
-            jnp.ones((n,), jnp.float32), assign, num_segments=n_c
-        )
-        return jnp.where(
-            counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cent
-        )
-
-    return jax.lax.fori_loop(0, iters, body, cent)
-
-
-def _pack(
-    db: jax.Array, assign: jax.Array, n_c: int, cap: int, o_cap: int
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+def _pack_ids(
+    assign: jax.Array, n_c: int, cap: int, o_cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Capacity-padded packing with static shapes, no host loop.
 
     Rows are sorted by cluster id; a row's rank within its cluster (its
@@ -124,8 +102,12 @@ def _pack(
     overflow buffer in sorted order. Out-of-range scatter positions use
     ``mode="drop"``, and the count of rows dropped even from the overflow
     buffer is returned as ``spill_count`` (0 on any sane geometry).
+
+    Returns (member_ids (n_c, cap), overflow_ids (o_cap,), spill_count ()).
+    Shared with the IVF-PQ build (core/mips/pq.py), which packs uint8
+    codes instead of gathered fp rows into the member tables.
     """
-    n = db.shape[0]
+    n = assign.shape[0]
     order = jnp.argsort(assign, stable=True).astype(jnp.int32)
     sorted_assign = assign[order]
     counts = jax.ops.segment_sum(
@@ -149,7 +131,14 @@ def _pack(
     )
     n_ovf = (~in_table).sum()
     spill = jnp.maximum(n_ovf - o_cap, 0).astype(jnp.int32)
+    return member_ids, overflow_ids, spill
 
+
+def _pack(
+    db: jax.Array, assign: jax.Array, n_c: int, cap: int, o_cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`_pack_ids` plus the gathered fp member/overflow row copies."""
+    member_ids, overflow_ids, spill = _pack_ids(assign, n_c, cap, o_cap)
     member_vecs = jnp.where(
         (member_ids >= 0)[..., None], db[jnp.maximum(member_ids, 0)], 0
     ).astype(db.dtype)
@@ -181,7 +170,7 @@ def _device_build(
     if init_cent is None:
         ids = jax.random.permutation(jax.random.key(seed), db.shape[0])[:n_c]
         init_cent = dbf[ids]
-    cent = _lloyd(dbf, init_cent.astype(jnp.float32), n_c, iters)
+    cent = _lloyd(dbf, init_cent.astype(jnp.float32), iters)
     assign = _assign_clusters(dbf, cent)
     member_ids, member_vecs, overflow_ids, overflow_vecs, spill = _pack(
         db, assign, n_c, cap, o_cap

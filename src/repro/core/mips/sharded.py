@@ -37,13 +37,14 @@ from repro.core.gumbel import TopK
 from repro.core.mips import base
 from repro.core.mips.exact import ExactConfig
 from repro.core.mips.ivf import IVFConfig
+from repro.core.mips.pq import PQConfig
 
 __all__ = ["ShardedIndex"]
 
 
 def _traceable_build(config: Any) -> bool:
     """Backends whose build/refresh can run inside a traced shard_map."""
-    if isinstance(config, ExactConfig):
+    if isinstance(config, (ExactConfig, PQConfig)):
         return True
     return isinstance(config, IVFConfig) and config.device_build
 
@@ -255,7 +256,26 @@ class ShardedIndex:
         return TopK(res.ids[0], res.values[0])
 
     def memory_bytes(self) -> int:
-        return base.state_bytes(self.state)
+        """Backend-accounted bytes, summed over shards. Delegating to the
+        backend's own ``memory_bytes`` (on a shard-0 view — per-shard
+        geometry is identical, so shards cost the same) keeps
+        backend-specific accounting rules: IVF-PQ reports its quantized
+        structures only. Caveat for PQ specifically: the shard_map build
+        materializes each shard's fp re-rank slice as a co-located copy
+        (traced outputs cannot alias inputs), so a sharded PQ index also
+        holds one distributed fp table — the size of the exact backend,
+        ~cap_factor x less than sharded IVF's padded member_vecs copy —
+        that this accounting deliberately leaves out. Shape-only: the
+        per-shard state is reconstituted from ShapeDtypeStruct views (a
+        physical slice would allocate a throwaway copy of every leaf on
+        each stats call)."""
+        children = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), self.state
+        )
+        loc = base.backend_cls(self.config).tree_unflatten(
+            self.config, children
+        )
+        return self.mp * loc.memory_bytes()
 
     # --------------------------------------------------------------- pytree
     def tree_flatten(self):

@@ -1,0 +1,41 @@
+"""Product-quantization primitives for the compressed MIPS index
+(DESIGN.md §3.6).
+
+Three pieces, all on-device and jit-traceable:
+
+* :mod:`repro.core.quant.kmeans` — per-subspace Lloyd k-means with
+  segment_sum updates (the same device k-means core the IVF coarse
+  quantizer uses, vmapped over PQ subspaces);
+* :func:`encode` / :func:`decode` — residual-PQ codes: each database row's
+  residual against its coarse centroid is split into ``m_sub`` subvectors
+  and each subvector stored as the uint8 id of its nearest codeword —
+  ``d·4`` bytes/row become ``m_sub`` bytes/row;
+* :func:`build_lut` — the asymmetric-distance trick: per query, one
+  ``(m_sub, ksub)`` table of ``q_m · codeword`` inner products, after which
+  scoring a coded row is ``m_sub`` table lookups + adds instead of a ``d``-
+  dim inner product. The query is never quantized, so the only
+  approximation is the codebook reconstruction error of the *database* row.
+
+The consumer is :class:`repro.core.mips.IVFPQIndex`, which combines these
+with the IVF coarse geometry and an exact re-rank over the top LUT
+candidates.
+"""
+from __future__ import annotations
+
+from repro.core.quant.kmeans import subspace_kmeans
+from repro.core.quant.pq import (
+    build_lut,
+    decode,
+    encode,
+    lut_scores,
+    train_codebooks,
+)
+
+__all__ = [
+    "subspace_kmeans",
+    "train_codebooks",
+    "encode",
+    "decode",
+    "build_lut",
+    "lut_scores",
+]

@@ -1,0 +1,62 @@
+"""On-device Lloyd k-means: the ONE segment-sum core shared by the IVF
+coarse quantizer (core/mips/ivf.py imports it) and PQ codebook training
+(vmapped over subspaces below).
+
+Conventions both consumers rely on: nearest-centroid assignment by the
+``|x|² - 2x·c + |c|²`` trick (the constant ``|x|²`` dropped), centroid
+updates via ``segment_sum``, and empty clusters keeping their previous
+centroid (matching the host-numpy reference build, whose parity the IVF
+tests assert). No data-dependent shapes anywhere, so builds/refreshes run
+inside ``jit`` — and shard-locally inside ``shard_map`` for the sharded
+indexes. This module deliberately depends on nothing but jax: ``quant``
+is a leaf package that ``core/mips`` builds on, never the reverse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["assign_clusters", "lloyd", "subspace_kmeans"]
+
+
+def assign_clusters(x: jax.Array, cent: jax.Array) -> jax.Array:
+    """Nearest centroid per row: argmin |x|² - 2x·c + |c|² (|x|² constant)."""
+    sq_c = (cent * cent).sum(-1)
+    return jnp.argmin(sq_c[None, :] - 2.0 * (x @ cent.T), axis=1).astype(
+        jnp.int32
+    )
+
+
+def lloyd(x: jax.Array, cent: jax.Array, iters: int) -> jax.Array:
+    """Lloyd iterations over ``x (n, d)`` from ``cent (k, d)``; empty
+    clusters keep their previous centroid."""
+    n = x.shape[0]
+    k = cent.shape[0]
+
+    def body(_, cent):
+        assign = assign_clusters(x, cent)
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        counts = jax.ops.segment_sum(
+            jnp.ones((n,), jnp.float32), assign, num_segments=k
+        )
+        return jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], cent
+        )
+
+    return jax.lax.fori_loop(0, iters, body, cent)
+
+
+def subspace_kmeans(
+    x: jax.Array,  # (m_sub, n, d_sub) per-subspace training rows, f32
+    init: jax.Array,  # (m_sub, ksub, d_sub) initial codebooks
+    iters: int,
+) -> jax.Array:
+    """Train all subspace codebooks jointly: vmapped Lloyd, one XLA program.
+
+    Returns (m_sub, ksub, d_sub) f32 codebooks. ``init`` warm-starts a
+    refresh (pass the previous codebooks); a cold build seeds it from
+    sampled rows (see :func:`repro.core.quant.pq.train_codebooks`).
+    """
+    return jax.vmap(lambda xs, cs: lloyd(xs, cs, iters))(
+        x.astype(jnp.float32), init.astype(jnp.float32)
+    )

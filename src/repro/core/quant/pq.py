@@ -1,0 +1,105 @@
+"""Residual product quantization: encode/decode + per-query LUTs.
+
+Layout conventions (DESIGN.md §3.6): a ``(n, d)`` f32 row block is split
+into ``m_sub`` contiguous subvectors of ``d_sub = d // m_sub`` dims; each
+subvector is replaced by the uint8 id of its nearest codeword in that
+subspace's ``(ksub, d_sub)`` codebook. ``ksub <= 256`` so a code is one
+byte — a row costs ``m_sub`` bytes instead of ``4 d``.
+
+Scoring is asymmetric (the query stays full precision): for a query ``q``,
+``build_lut`` tabulates every ``q_m · codeword`` once, after which a coded
+row's approximate inner product is ``sum_m lut[m, code[m]]`` — table
+lookups and adds, no FLOPs proportional to ``d``. Used residually (codes
+encode ``x - centroid(x)``), the total approximate score is
+``q·centroid + sum_m lut[m, code[m]]``; the coarse term is already computed
+by the IVF probe, so the LUT stage adds only the lookup sum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.kmeans import subspace_kmeans
+
+__all__ = ["train_codebooks", "encode", "decode", "build_lut", "lut_scores"]
+
+
+def _split(x: jax.Array, m_sub: int) -> jax.Array:
+    """(n, d) -> (m_sub, n, d_sub) subspace view."""
+    n, d = x.shape
+    if d % m_sub:
+        raise ValueError(f"feature dim {d} not divisible by m_sub={m_sub}")
+    return jnp.moveaxis(x.reshape(n, m_sub, d // m_sub), 1, 0)
+
+
+def train_codebooks(
+    x: jax.Array,  # (n, d) training rows (residuals for residual-PQ)
+    m_sub: int,
+    ksub: int,
+    iters: int,
+    *,
+    seed: int = 0,
+    init: jax.Array | None = None,
+) -> jax.Array:
+    """Train ``(m_sub, ksub, d_sub)`` codebooks on device (one XLA program).
+
+    ``init=None`` cold-starts every subspace from the SAME seeded row
+    sample (cheap, deterministic, and rows are iid across subspaces);
+    passing the previous codebooks warm-starts a refresh with frozen
+    shapes — the geometry contract the stateful Index API requires.
+    """
+    xs = _split(x.astype(jnp.float32), m_sub)  # (m, n, d_sub)
+    if init is None:
+        n = x.shape[0]
+        ids = jax.random.permutation(jax.random.key(seed), n)[:ksub]
+        ids = jnp.resize(ids, (ksub,))  # n < ksub: duplicate seeds are fine
+        init = xs[:, ids, :]
+    return subspace_kmeans(xs, init, iters)
+
+
+def encode(codebooks: jax.Array, x: jax.Array) -> jax.Array:
+    """(m, ksub, d_sub), (n, d) -> (n, m) uint8 nearest-codeword ids."""
+    xs = _split(x.astype(jnp.float32), codebooks.shape[0])  # (m, n, d_sub)
+
+    def one(xm, cb):  # (n, d_sub), (ksub, d_sub)
+        sq = (cb * cb).sum(-1)
+        return jnp.argmin(sq[None, :] - 2.0 * (xm @ cb.T), axis=1)
+
+    codes = jax.vmap(one)(xs, codebooks.astype(jnp.float32))  # (m, n)
+    return codes.T.astype(jnp.uint8)
+
+
+def decode(codebooks: jax.Array, codes: jax.Array) -> jax.Array:
+    """(m, ksub, d_sub), (n, m) uint8 -> (n, d) f32 reconstruction."""
+    m = codebooks.shape[0]
+    rows = jax.vmap(lambda cb, cm: cb[cm], in_axes=(0, 1))(
+        codebooks.astype(jnp.float32), codes.astype(jnp.int32)
+    )  # (m, n, d_sub)
+    return jnp.moveaxis(rows, 0, 1).reshape(codes.shape[0], m * rows.shape[-1])
+
+
+def build_lut(codebooks: jax.Array, q: jax.Array) -> jax.Array:
+    """(m, ksub, d_sub), (b, d) -> (b, m, ksub) inner-product tables.
+
+    ``lut[b, m, j] = q[b]_m · codebooks[m, j]``: the whole per-query cost of
+    the asymmetric scoring trick — ``m_sub · ksub · d_sub = d · ksub``
+    MACs per query, independent of how many rows are scored afterwards.
+    """
+    m = codebooks.shape[0]
+    b, d = q.shape
+    qs = q.astype(jnp.float32).reshape(b, m, d // m)  # (b, m, d_sub)
+    return jnp.einsum("bmd,mkd->bmk", qs, codebooks.astype(jnp.float32))
+
+
+def lut_scores(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """(b, m, ksub), (b, c, m) uint8 -> (b, c) summed table lookups.
+
+    The pure-XLA LUT accumulation (gather along the codeword axis); the
+    Pallas kernel (:mod:`repro.kernels.pq_lut_score`) computes the same
+    quantity per probed cluster without materializing the (b, c, m) gather
+    in HBM.
+    """
+    b, c, m = codes.shape
+    ct = jnp.moveaxis(codes.astype(jnp.int32), 2, 1)  # (b, m, c)
+    picked = jnp.take_along_axis(lut, ct, axis=2)  # (b, m, c)
+    return picked.sum(axis=1)

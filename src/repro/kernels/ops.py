@@ -14,10 +14,17 @@ from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.fused_estimator import fused_estimator as _fused_estimator
 from repro.kernels.ivf_gather_score import ivf_gather_score as _ivf_gather_score
+from repro.kernels.pq_lut_score import pq_lut_score as _pq_lut_score
 
 INTERPRET = jax.default_backend() != "tpu"
 
-__all__ = ["ivf_gather_score", "fused_estimator", "flash_decode", "INTERPRET"]
+__all__ = [
+    "ivf_gather_score",
+    "pq_lut_score",
+    "fused_estimator",
+    "flash_decode",
+    "INTERPRET",
+]
 
 
 def ivf_gather_score(
@@ -31,6 +38,13 @@ def ivf_gather_score(
     scores = _ivf_gather_score(member_vecs, probe, q, interpret=INTERPRET)
     ids = member_ids[probe].reshape(b, -1)  # tiny int32 gather: XLA
     return scores.reshape(b, -1), ids
+
+
+def pq_lut_score(
+    member_codes: jax.Array, probe: jax.Array, lut: jax.Array
+) -> jax.Array:
+    """Returns LUT screening scores (b, n_probe, cap) for the IVF-PQ probe."""
+    return _pq_lut_score(member_codes, probe, lut, interpret=INTERPRET)
 
 
 def fused_estimator(emb, ids, h, log_w):

@@ -4,7 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ivf_gather_score_ref", "fused_estimator_ref", "flash_decode_ref"]
+__all__ = [
+    "ivf_gather_score_ref",
+    "pq_lut_score_ref",
+    "fused_estimator_ref",
+    "flash_decode_ref",
+]
 
 
 def ivf_gather_score_ref(
@@ -15,6 +20,18 @@ def ivf_gather_score_ref(
     return jnp.einsum(
         "bpcd,bd->bpc", gathered.astype(jnp.float32), q.astype(jnp.float32)
     )
+
+
+def pq_lut_score_ref(
+    member_codes: jax.Array, probe: jax.Array, lut: jax.Array
+) -> jax.Array:
+    """(n_c,cap,m) u8, (b,np), (b,m,ksub) -> (b, np, cap) LUT sums."""
+    b, n_probe = probe.shape
+    cap, m = member_codes.shape[1:]
+    codes = member_codes[probe].reshape(b, n_probe * cap, m)
+    ct = jnp.moveaxis(codes.astype(jnp.int32), 2, 1)  # (b, m, np*cap)
+    picked = jnp.take_along_axis(lut.astype(jnp.float32), ct, axis=2)
+    return picked.sum(axis=1).reshape(b, n_probe, cap)
 
 
 def fused_estimator_ref(

@@ -28,9 +28,10 @@ def main() -> None:
     ap.add_argument("--head", default=None,
                     choices=[None, "exact", "topk_only", "amortized"])
     ap.add_argument("--mips", default=None,
-                    choices=[None, "exact", "ivf", "lsh"],
+                    choices=[None, "exact", "ivf", "ivfpq", "lsh"],
                     help="head top-k backend (ivf: stateful IVF index; "
-                         "lsh: SRP theory-reference index)")
+                         "ivfpq: quantized uint8-code index with exact "
+                         "re-rank; lsh: SRP theory-reference index)")
     ap.add_argument("--vocab", type=int, default=0,
                     help="override vocab size (e.g. to exercise the "
                          "amortized head on a smoke config)")

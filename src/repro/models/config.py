@@ -54,7 +54,7 @@ class ArchConfig:
 
     # --- amortized head (the paper's technique) ---
     head_mode: str = "amortized"  # exact | topk_only | amortized
-    head_mips: str = "exact"  # exact | ivf | lsh
+    head_mips: str = "exact"  # exact | ivf | ivfpq | lsh
     head_delta: float = 1e-4
     head_k: int = 0  # 0 -> default_kl(vocab, head_delta)
     head_l: int = 0

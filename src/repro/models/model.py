@@ -84,15 +84,29 @@ class Model:
         )
 
     # ---------------------------------------------------------------- index
+    @property
+    def head_uses_index(self) -> bool:
+        """Whether make_head_index will return an index (vs None for the
+        exact mode/backend — rule owned by amortized_head.uses_index)."""
+        return ah.uses_index(self.head_cfg)
+
     def _head_mesh(self):
         """The mesh for a sharded head index, or None (single-device)."""
         if self.mesh is not None and "model" in self.mesh.shape:
             return self.mesh
         return None
 
-    def make_head_index(self, params):
+    def make_head_index(self, params, db=None):
         """Build the head's stateful MIPS index over the current output
         embedding, or None when the exact path applies (exact mode/backend).
+
+        ``db`` overrides the embedding rows to build over — the trainer
+        passes a defensive copy because the PQ backend keeps its db handle
+        inside the index state, which rides through the fused train step
+        next to the DONATED params (XLA rejects a buffer that is both
+        donated and used in one Execute(), and the donated buffer dies
+        after the call regardless). Serving passes nothing and the index
+        aliases the resident table directly.
 
         With a TP mesh, this is a :class:`repro.core.mips.ShardedIndex`:
         per-TP-slice indexes whose state rides through the distributed
@@ -104,7 +118,9 @@ class Model:
         embedding drifts (train/trainer.py does this automatically).
         """
         return ah.make_index(
-            self.head_cfg, self._out_embed(params), mesh=self._head_mesh()
+            self.head_cfg,
+            self._out_embed(params) if db is None else db,
+            mesh=self._head_mesh(),
         )
 
     def head_index_db(self, params) -> jax.Array:
@@ -113,8 +129,9 @@ class Model:
         slice owns its pad rows, masked at probe time), else the
         logical-vocab slice."""
         emb = self._out_embed(params)
-        if self._head_mesh() is not None:
-            return emb
+        if self._head_mesh() is not None or self.head_cfg.n == emb.shape[0]:
+            return emb  # unsliced: refresh hands the PQ backend the
+            # resident buffer itself (its fp re-rank rows alias it)
         return emb[: self.head_cfg.n]
 
     # ---------------------------------------------------------------- loss

@@ -199,10 +199,7 @@ class Server:
         # (a ShardedIndex on a TP mesh — per-slice probe inside the
         # distributed head's shard_map)
         self.index = self.model.make_head_index(params)
-        spilled = mips.index_spill(self.index)
-        if spilled:  # coverage contract (DESIGN.md §3) violated
-            print(f"[server] WARNING: index build dropped {spilled} "
-                  f"rows — raise IVFConfig.overflow_frac")
+        self._index_health(where="build")
 
         @jax.jit
         def _reset_slots(cache, mask):
@@ -218,6 +215,23 @@ class Server:
 
         self._reset_slots = _reset_slots
 
+    def _index_health(self, where: str) -> None:
+        """Surface index health where an operator looks: ``stats`` carries
+        the index's device-HBM footprint and its coverage shortfall, and
+        the two shortfall kinds warn with their own remedies (dropped rows
+        vs a statically unfillable re-rank pool — mips.index_spill_parts)."""
+        dropped, short = mips.index_spill_parts(self.index)
+        self.stats["index_spill"] = dropped + short
+        self.stats["index_bytes"] = (
+            self.index.memory_bytes() if self.index is not None else 0
+        )
+        if dropped:  # coverage contract (DESIGN.md §3) violated
+            print(f"[server] WARNING: index {where} dropped {dropped} "
+                  f"rows — raise overflow_frac")
+        if short:
+            print(f"[server] WARNING: re-rank pool short {short} slots — "
+                  f"lower PQConfig.rerank or raise n_probe")
+
     def refresh_index(self, params=None) -> None:
         """Hot-swap the head index (e.g. after a params push).
 
@@ -229,8 +243,11 @@ class Server:
             self.params = params
         if self.index is None:
             self.index = self.model.make_head_index(self.params)
-            return
-        self.index = self.index.refresh(self.model.head_index_db(self.params))
+        else:
+            self.index = self.index.refresh(
+                self.model.head_index_db(self.params)
+            )
+        self._index_health(where="refresh")
 
     # ------------------------------------------------------------- admission
     def _validate(self, rid: int, prompt, results: list) -> list | None:

@@ -170,11 +170,30 @@ class Trainer:
         sharded-vs-sliced rule)."""
         return self.model.head_index_db(params)
 
+    def _index_db_and_snapshot(self, params):
+        """(rows to build/refresh over, drift snapshot) — ONE copy doing
+        double duty on the single-device path. The copy is mandatory, not
+        thrift: the PQ backend keeps its db handle inside the index state,
+        which travels through the fused train step next to the DONATED
+        params — XLA rejects a buffer that is both donated and used in the
+        same Execute(), and the donated buffer dies after the call anyway
+        (the long-standing reason the snapshot is a copy). Sharded index
+        state never aliases its build inputs (shard_map outputs), so only
+        the snapshot needs copying there."""
+        emb = self._head_emb(params)
+        if self.model._head_mesh() is None:
+            cp = jnp.array(emb, copy=True)
+            return cp, cp
+        return emb, jnp.array(emb, copy=True)
+
     def _init_head_index(self, params) -> None:
-        self.head_index = self.model.make_head_index(params)
+        if not self.model.head_uses_index:
+            self.head_index = None  # exact path: no index, no copies
+            return
+        db, snap = self._index_db_and_snapshot(params)
+        self.head_index = self.model.make_head_index(params, db=db)
         if self.head_index is not None:
-            # copy=True: the snapshot must not alias the (donated) params
-            self._index_snapshot = jnp.array(self._head_emb(params), copy=True)
+            self._index_snapshot = snap
 
     def _maybe_refresh_index(self, params, done: int) -> float:
         """Refresh the head index on schedule or on embedding drift.
@@ -192,18 +211,21 @@ class Trainer:
             run.index_drift_threshold > 0 and drift > run.index_drift_threshold
         )
         if due or tripped:
-            emb = self._head_emb(params)
+            db, snap = self._index_db_and_snapshot(params)
             # eager call on purpose: IVF's refresh is internally one jitted
             # XLA program (shard-local under shard_map for a ShardedIndex),
             # while LSH's is host-side — both work here
-            self.head_index = self.head_index.refresh(emb)
-            self._index_snapshot = jnp.array(emb, copy=True)
+            self.head_index = self.head_index.refresh(db)
+            self._index_snapshot = snap
             self.index_refreshes += 1
-            spill = mips.index_spill(self.head_index)
-            if spill:
+            dropped, short = mips.index_spill_parts(self.head_index)
+            if dropped:
                 print(f"[trainer] WARNING: index refresh at step {done} "
-                      f"dropped {spill} rows (overflow buffer full) — "
-                      f"raise IVFConfig.overflow_frac")
+                      f"dropped {dropped} rows (overflow buffer full) — "
+                      f"raise overflow_frac")
+            if short:
+                print(f"[trainer] WARNING: re-rank pool short {short} "
+                      f"slots — lower PQConfig.rerank or raise n_probe")
             if tripped:
                 print(f"[trainer] index refresh at step {done}: "
                       f"drift {drift:.4f} > {run.index_drift_threshold}")
@@ -256,6 +278,21 @@ class Trainer:
                       f"{self._pending[-1][0] + self._pending[-1][1] - 1}: "
                       f"{dt:.3f}s/step vs ema {self._ema:.3f}s/step")
             self._ema = 0.9 * self._ema + 0.1 * dt
+        # index health at flush granularity: the operator-visible log line
+        # carries the head index's HBM footprint and coverage shortfall
+        # (spill / PQ re-rank-pool overflow) — both were previously
+        # computed on device but never reported anywhere. index_spill is
+        # a blocking device read, so only pay for it when a log line will
+        # actually print this flush
+        index_note = ""
+        will_log = log and self.run.log_every > 0 and any(
+            (s0 + i) % self.run.log_every == 0
+            for s0, t, _ in self._pending for i in range(t)
+        )
+        if will_log and self.head_index is not None:
+            spill = mips.index_spill(self.head_index)
+            mb = self.head_index.memory_bytes() / 1e6
+            index_note = f" index={mb:.1f}MB spill={spill}"
         for s0, t, metrics in self._pending:
             host = jax.tree.map(np.asarray, metrics)
             for i in range(t):
@@ -268,7 +305,7 @@ class Trainer:
                         and (s0 + i) % self.run.log_every == 0):
                     print(f"[trainer] step {s0 + i} "
                           f"loss={entry.get('loss'):.4f} "
-                          f"({dt * 1e3:.0f}ms/step)")
+                          f"({dt * 1e3:.0f}ms/step){index_note}")
         self._pending = []
         return dict(self.metrics_log[-1])
 

@@ -37,7 +37,7 @@ def test_headconfig_rejects_unknown_mips():
 
 def test_headconfig_valid_choices_still_resolve():
     for mode in ("exact", "topk_only", "amortized"):
-        for backend in ("exact", "ivf", "lsh"):
+        for backend in ("exact", "ivf", "ivfpq", "lsh"):
             cfg = HeadConfig(n=N, mode=mode, mips=backend).resolved()
             assert cfg.k > 0 and cfg.l > 0
 

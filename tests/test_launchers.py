@@ -48,6 +48,38 @@ def test_serve_launcher_mips_lsh(monkeypatch, capsys):
     assert result["index_mb"] > 0  # an actual LSH index served the probe
 
 
+def test_train_launcher_mips_ivfpq(tmp_path, monkeypatch, capsys):
+    """--mips ivfpq reaches the quantized index end to end: build through
+    the launcher, codebooks refreshed with the embeddings on schedule."""
+    from repro.launch import train as train_cli
+
+    monkeypatch.setattr(sys, "argv", [
+        "train", "--arch", "tinyllama-1.1b", "--smoke", "--steps", "2",
+        "--batch", "2", "--seq", "16", "--head", "amortized",
+        "--mips", "ivfpq", "--vocab", "4096", "--index-refresh-every", "2",
+        "--workdir", str(tmp_path),
+    ])
+    train_cli.main()
+    result = _json_tail(capsys.readouterr().out)
+    assert result["status"] == "done"
+    assert result["index_refreshes"] == 1
+
+
+def test_serve_launcher_mips_ivfpq(monkeypatch, capsys):
+    from repro.launch import serve as serve_cli
+
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "tinyllama-1.1b", "--smoke", "--requests", "2",
+        "--slots", "2", "--new-tokens", "2", "--max-seq", "32",
+        "--head", "amortized", "--mips", "ivfpq", "--vocab", "4096",
+    ])
+    serve_cli.main()
+    result = _json_tail(capsys.readouterr().out)
+    assert result["requests"] == 2
+    assert result["decoded_tokens"] == 4
+    assert result["index_mb"] > 0  # a quantized index served the probe
+
+
 def test_launchers_reject_unknown_mips(monkeypatch, capsys):
     from repro.launch import train as train_cli
 

@@ -1,0 +1,284 @@
+"""Quantization subsystem: codebook round-trips, LUT scoring parity
+(Pallas vs reference), IVF-PQ index correctness, refresh shape-stability,
+and the memory-accounting contract the pq benchmark asserts at scale."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mips, quant
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _db(n=2048, d=32, seed=0, noise=0.3, n_centers=32):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    centers = jax.random.normal(k1, (n_centers, d))
+    assign = jax.random.randint(k2, (n,), 0, n_centers)
+    db = centers[assign] + noise * jax.random.normal(k3, (n, d))
+    return db / jnp.linalg.norm(db, axis=1, keepdims=True)
+
+
+def _recall(index, exact, queries, k=10):
+    got = np.asarray(index.topk_batch(queries, k).ids)
+    want = np.asarray(exact.topk_batch(queries, k).ids)
+    return float(np.mean([len(set(g) & set(w)) / k for g, w in zip(got, want)]))
+
+
+# ------------------------------------------------------------- codebooks
+def test_encode_decode_round_trip_error_bound():
+    """PQ reconstruction must (a) beat the zero-codebook baseline — Lloyd
+    strictly reduces distortion from any init, so the per-subspace MSE is
+    below the raw signal energy — and (b) be small in relative terms on
+    clustered data at 16x compression (d=32 f32 -> 8 uint8 codes)."""
+    x = _db(n=2048, d=32)
+    cb = quant.train_codebooks(x, m_sub=8, ksub=64, iters=8, seed=0)
+    codes = quant.encode(cb, x)
+    assert codes.dtype == jnp.uint8 and codes.shape == (2048, 8)
+    x_hat = quant.decode(cb, codes)
+    err = float(jnp.mean(jnp.sum((x - x_hat) ** 2, axis=1)))
+    raw = float(jnp.mean(jnp.sum(x**2, axis=1)))
+    assert err < raw, (err, raw)  # beats encoding everything as zero
+    assert err / raw < 0.25, err / raw  # and by a wide margin
+
+
+def test_encode_is_idempotent_on_codewords():
+    """A decoded row re-encodes to the same codes: each codeword's nearest
+    codeword is itself (the encode/decode pair is a projection)."""
+    x = _db(n=1024, d=16)
+    cb = quant.train_codebooks(x, m_sub=4, ksub=32, iters=6, seed=1)
+    codes = quant.encode(cb, x)
+    again = quant.encode(cb, quant.decode(cb, codes))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(again))
+
+
+def test_encode_rejects_indivisible_dims():
+    x = _db(n=128, d=30)
+    with pytest.raises(ValueError, match="not divisible"):
+        quant.train_codebooks(x, m_sub=8, ksub=16, iters=2)
+
+
+# ------------------------------------------------------------ LUT scoring
+def test_lut_scores_match_decode_dot():
+    """Asymmetric-distance identity: Σ_m lut[m, code_m] == q · decode(code)
+    (the LUT just precomputes the per-subspace partial dots)."""
+    x = _db(n=512, d=32, seed=2)
+    cb = quant.train_codebooks(x, m_sub=8, ksub=32, iters=6, seed=2)
+    codes = quant.encode(cb, x)
+    q = jax.random.normal(jax.random.key(7), (5, 32))
+    lut = quant.build_lut(cb, q)
+    via_lut = quant.lut_scores(lut, jnp.broadcast_to(codes, (5,) + codes.shape))
+    via_decode = quant.decode(cb, codes) @ q.T  # (n, 5)
+    np.testing.assert_allclose(
+        np.asarray(via_lut), np.asarray(via_decode.T), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pq_lut_kernel_matches_reference():
+    """Pallas LUT kernel (interpret) vs the pure-jnp oracle in kernels/ref."""
+    rng = np.random.default_rng(0)
+    n_c, cap, m, ksub, b, n_probe = 12, 40, 8, 32, 3, 4
+    codes = jnp.asarray(rng.integers(0, ksub, (n_c, cap, m)), jnp.uint8)
+    probe = jnp.asarray(rng.integers(0, n_c, (b, n_probe)), jnp.int32)
+    lut = jnp.asarray(rng.standard_normal((b, m, ksub)), jnp.float32)
+    got = kops.pq_lut_score(codes, probe, lut)
+    want = kref.pq_lut_score_ref(codes, probe, lut)
+    assert got.shape == (b, n_probe, cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- IVF-PQ index
+def test_ivfpq_full_probe_full_rerank_is_exact():
+    """Probing every cluster with a re-rank pool covering the whole
+    candidate set must return the exact top-k: LUT screening drops
+    nothing, and the re-rank scores are true inner products."""
+    db = _db(n=1024, d=32)
+    cfg = mips.PQConfig(
+        n_clusters=16, kmeans_iters=4, pq_iters=4, n_probe=16,
+        rerank=1 << 20,  # clamped to the pool: re-rank everything probed
+    )
+    index = mips.build_index(cfg, db)
+    # build coverage is exact (the deliberately over-asked re-rank width
+    # does trip the rerank_spill diagnostic — tested separately)
+    assert int(index.state.spill_count) == 0
+    q = jax.random.normal(jax.random.key(10), (4, 32))
+    exact = mips.build_index(mips.ExactConfig(), db)
+    tk = index.topk_batch(q, 10)
+    te = exact.topk_batch(q, 10)
+    for i in range(4):
+        assert set(np.asarray(tk.ids[i]).tolist()) == set(
+            np.asarray(te.ids[i]).tolist()
+        )
+    np.testing.assert_allclose(
+        np.asarray(tk.values), np.asarray(te.values), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ivfpq_values_are_exact_inner_products():
+    """The estimator-core contract: whatever rows survive screening, their
+    returned values are EXACT scores (the certificate/TV machinery then
+    applies unchanged, with screening error showing up only as recall)."""
+    db = _db(n=2048, d=32, seed=4)
+    index = mips.build_index(
+        mips.PQConfig(n_clusters=32, kmeans_iters=4, pq_iters=4, n_probe=8),
+        db,
+    )
+    q = jax.random.normal(jax.random.key(11), (6, 32))
+    tk = index.topk_batch(q, 16)
+    ids, vals = np.asarray(tk.ids), np.asarray(tk.values)
+    scores = np.asarray(db @ q.T).T  # (6, n)
+    for i in range(6):
+        live = ids[i] >= 0
+        np.testing.assert_allclose(
+            vals[i][live], scores[i][ids[i][live]], rtol=1e-4, atol=1e-4
+        )
+
+
+def test_ivfpq_recall_on_clustered_data():
+    db = _db(n=2048, d=32, seed=5)
+    index = mips.build_index(
+        mips.PQConfig(n_clusters=32, kmeans_iters=8, pq_iters=6, n_probe=8),
+        db,
+    )
+    exact = mips.build_index(mips.ExactConfig(), db)
+    queries = jnp.stack([
+        jax.random.normal(jax.random.key(400 + s), (32,)) for s in range(20)
+    ])
+    assert _recall(index, exact, queries, k=16) > 0.8
+
+
+def test_ivfpq_kernel_path_matches_xla_path():
+    db = _db(n=1024, d=32, seed=6)
+    cfg = mips.PQConfig(n_clusters=16, kmeans_iters=4, pq_iters=4, n_probe=4)
+    q = jax.random.normal(jax.random.key(13), (3, 32))
+    a = mips.build_index(cfg, db).topk_batch(q, 8)
+    b = mips.build_index(
+        dataclasses.replace(cfg, use_kernel=True), db
+    ).topk_batch(q, 8)
+    assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_allclose(
+        np.asarray(a.values), np.asarray(b.values), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_ivfpq_refresh_warm_start_shape_stable_under_jit():
+    """refresh over a drifted db preserves the pytree structure AND the
+    jit cache: a compiled query keeps its executable across the hot-swap
+    (the recompile-free contract the server/trainer rely on)."""
+    db = _db(n=1024, d=32, seed=7)
+    index = mips.build_index(
+        mips.PQConfig(n_clusters=16, kmeans_iters=6, pq_iters=4, n_probe=8),
+        db,
+    )
+    traces = []
+
+    @jax.jit
+    def query(idx, qq):
+        traces.append(1)
+        return idx.topk_batch(qq, 8)
+
+    q = jax.random.normal(jax.random.key(3), (4, 32))
+    query(index, q)
+    db2 = db + 0.1 * jax.random.normal(jax.random.key(21), db.shape)
+    db2 = db2 / jnp.linalg.norm(db2, axis=1, keepdims=True)
+    refreshed = index.refresh(db2)
+    assert jax.tree.structure(refreshed) == jax.tree.structure(index)
+    query(refreshed, q)
+    assert len(traces) == 1, "refresh retriggered compilation"
+    # warm-started refresh recovers recall on the drifted db
+    exact2 = mips.build_index(mips.ExactConfig(), db2)
+    queries = jnp.stack([
+        jax.random.normal(jax.random.key(600 + s), (32,)) for s in range(16)
+    ])
+    r_stale = _recall(index, exact2, queries)
+    r_refr = _recall(refreshed, exact2, queries)
+    assert r_refr >= r_stale - 1e-9, (r_refr, r_stale)
+
+
+def test_ivfpq_memory_accounting_excludes_db_alias():
+    """memory_bytes counts index-owned state only: the fp re-rank rows
+    alias the build database (the model's own embedding table), so the
+    quantized index must report far less than the exact backend — the
+    contract benchmarks/pq_index.py asserts at the vocab-32k scale."""
+    db = _db(n=4096, d=64, seed=8, n_centers=64)
+    pq = mips.build_index(
+        mips.PQConfig(n_clusters=64, kmeans_iters=4, pq_iters=4), db
+    )
+    exact = mips.build_index(mips.ExactConfig(), db)
+    assert pq.state.member_codes.dtype == jnp.uint8
+    # the db alias rides in the state pytree but not in the accounting
+    assert pq.memory_bytes() < mips.state_bytes(pq.state)
+    assert exact.memory_bytes() > 3 * pq.memory_bytes()
+    # and the IVF fp-copy index costs MORE than exact, not less
+    ivf = mips.build_index(mips.IVFConfig(n_clusters=64, kmeans_iters=4), db)
+    assert ivf.memory_bytes() > exact.memory_bytes()
+
+
+def test_ivfpq_db_is_true_alias_not_copy():
+    """The exclusion above must be physical on the eager path: build and
+    refresh attach the CALLER's buffer as state.db (jit outputs cannot
+    alias inputs, so a db returned from the jitted build would be a
+    silent full fp copy — the regression this test pins)."""
+    db = _db(n=512, d=16, seed=12)
+    pq = mips.build_index(
+        mips.PQConfig(n_clusters=8, kmeans_iters=3, pq_iters=3, m_sub=4,
+                      ksub=64),
+        db,
+    )
+    assert pq.state.db.unsafe_buffer_pointer() == db.unsafe_buffer_pointer()
+    db2 = db + 0.1 * jax.random.normal(jax.random.key(1), db.shape)
+    refreshed = pq.refresh(db2)
+    assert (refreshed.state.db.unsafe_buffer_pointer()
+            == db2.unsafe_buffer_pointer())
+    # the head hands the index its resident (unpadded) table unsliced
+    from repro.core.amortized_head import HeadConfig, make_index
+
+    emb = _db(n=4096, d=64, seed=13, n_centers=64)
+    cfg = HeadConfig(n=4096, k=64, l=64, mode="amortized", mips="ivfpq",
+                     min_amortized_n=1)
+    index = make_index(cfg, emb)
+    assert (index.state.db.unsafe_buffer_pointer()
+            == emb.unsafe_buffer_pointer())
+
+
+def test_ivfpq_rerank_spill_diagnostic():
+    """index_spill counts a statically unfillable re-rank pool the same
+    way it counts IVF build spill: 0 on sane geometry, positive when the
+    configured re-rank width exceeds n_probe*cap + o_cap."""
+    db = _db(n=512, d=16, seed=9)
+    sane = mips.build_index(
+        mips.PQConfig(n_clusters=8, kmeans_iters=3, pq_iters=3, n_probe=4,
+                      m_sub=4, ksub=64, rerank=32),
+        db,
+    )
+    assert mips.index_spill(sane) == 0
+    silly = mips.build_index(
+        mips.PQConfig(n_clusters=8, kmeans_iters=3, pq_iters=3, n_probe=1,
+                      m_sub=4, ksub=64, rerank=1 << 20),
+        db,
+    )
+    assert mips.index_spill(silly) > 0
+    assert int(silly.state.spill_count) == 0  # coverage itself is intact
+
+
+def test_ivfpq_through_local_gumbel_probe():
+    """The PQ index plugs into the head's probe machinery: local_gumbel_max
+    over a PQ-backed top-k produces certified samples."""
+    from repro.core import estimators as est
+
+    db = _db(n=1024, d=16, seed=10)
+    index = mips.build_index(
+        mips.PQConfig(n_clusters=16, kmeans_iters=4, pq_iters=4, n_probe=8,
+                      m_sub=4, ksub=64),
+        db,
+    )
+    h = jnp.broadcast_to(db[5] * 4.0, (64, 16))
+    keys = jax.random.split(jax.random.key(0), 64)
+    res = est.local_gumbel_max(
+        None, db, h, k=64, l=64, index=index, keys=keys
+    )
+    assert res.index.shape == (64,)
+    assert float(jnp.mean(res.ok)) > 0.9
