@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
 ``python -m benchmarks.run
-[fig2|table1|fig4|table2|fig7|refresh|dist|serve|train|roofline]``.
+[fig2|table1|fig4|table2|fig7|refresh|dist|serve|train|pq|decode_fused|roofline]``.
 
 ``--json-out PATH`` additionally writes one combined JSON document — a
 ``BENCH_*.json`` trajectory entry — with every reported row plus run
@@ -22,6 +22,7 @@ import time
 def main() -> None:
     from benchmarks import (
         amortized_cost,
+        decode_fused,
         dist_head,
         index_refresh,
         learning,
@@ -45,6 +46,7 @@ def main() -> None:
         "serve": serve_engine.run,
         "train": train_engine.run,
         "pq": pq_index.run,
+        "decode_fused": decode_fused.run,
         "roofline": roofline_report.run,
     }
     ap = argparse.ArgumentParser()
@@ -55,7 +57,7 @@ def main() -> None:
                          "(a BENCH_*.json trajectory entry)")
     ap.add_argument("--smoke", action="store_true",
                     help="pass smoke=True to suites that support it "
-                         "(serve, train, pq)")
+                         "(serve, train, pq, decode_fused)")
     args = ap.parse_args()
     unknown = [w for w in args.suites if w not in suites]
     if unknown:
@@ -75,7 +77,7 @@ def main() -> None:
     t0 = time.time()
     for key in wanted:
         fn = suites[key]
-        if args.smoke and key in ("serve", "train", "pq"):
+        if args.smoke and key in ("serve", "train", "pq", "decode_fused"):
             out = fn(report, smoke=True)
         else:
             out = fn(report)

@@ -57,6 +57,9 @@ class HeadConfig:
     mips: str = "exact"  # exact | ivf | ivfpq | lsh  (top-k probe index)
     n_probe: int = 8
     use_kernel: bool = False
+    fused_decode: bool = False  # decode: single-dispatch Pallas screen/
+    #   select + tail/argmax pipeline (kernels/decode_fused.py); samples
+    #   are bit-identical to use_kernel=True unfused decode
     chunk: int = 256  # token chunk for gathers
     delta: float = 1e-4
     c: float = 0.0  # assumed approximate-top-k gap (Def 3.1)
@@ -230,7 +233,8 @@ def head_sample(
         )
 
     res = est.local_gumbel_max(
-        key, embf, h, k=cfg.k, l=cfg.l, index=index, c=cfg.c, keys=keys
+        key, embf, h, k=cfg.k, l=cfg.l, index=index, c=cfg.c, keys=keys,
+        fused=cfg.fused_decode,
     )
     if strict:
         if keys is None:

@@ -38,7 +38,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.complement import sample_complement
-from repro.core.gumbel import SampleResult, TopK, sample_fixed_b
+from repro.core.gumbel import (
+    SampleResult,
+    TopK,
+    certificate,
+    plan_tail,
+    sample_fixed_b,
+)
 
 __all__ = [
     "ESTIMATOR_DTYPE",
@@ -345,6 +351,7 @@ def local_gumbel_max(
     c: float = 0.0,
     m_cap: int | None = None,
     keys: jax.Array | None = None,
+    fused: bool = False,
 ) -> SampleResult:
     """Batched lazy-Gumbel max over the local rows: per-token SampleResult
     with local ids plus the certificate terms (max_val, bound, overflow)
@@ -354,14 +361,37 @@ def local_gumbel_max(
     explicitly instead of deriving it as ``fold_in(key, row)`` — the serving
     engine uses this to make a token's sample a function of (request,
     position) alone, independent of batch composition, so fused multi-token
-    decode reproduces the single-step path bit for bit."""
+    decode reproduces the single-step path bit for bit.
+
+    ``fused=True`` routes the heavy stages through the single-dispatch
+    Pallas decode pipeline (:mod:`repro.kernels.decode_fused`): the probe
+    goes through the index's ``screen_select`` (gather/screen/re-rank and
+    top-k selection fused, candidate pool resident in VMEM) when the index
+    provides one (IVF, IVF-PQ — including their sharded per-shard
+    instances), and the Algorithm-2 tail finish through
+    :func:`repro.kernels.ops.tail_gather_argmax` (tail gather + perturbed
+    argmax fused; the jax.random tail plan stays in XLA). Samples and
+    certificate terms are BIT-IDENTICAL to ``fused=False`` with
+    ``use_kernel=True`` — same keys, same floating-point programs — which
+    tests/test_decode_fused.py asserts per backend."""
     t = h.shape[0]
     nv = emb.shape[0] if n_valid is None else n_valid
     if m_cap is None:
         m_cap = int(l + 6 * math.sqrt(l) + 8)
     embf = emb.astype(jnp.float32)
     hf = h.astype(jnp.float32)
-    topk = topk_probe(embf, hf, k, index=index, n_valid=n_valid)
+    screen = getattr(index, "screen_select", None) if fused else None
+    if screen is not None:
+        tk = screen(hf, k)
+        # same dead-slot masking as topk_probe's index branch
+        ids = tk.ids.astype(jnp.int32)
+        ok = ids >= 0
+        if n_valid is not None:
+            ok &= ids < n_valid
+        topk = TopK(ids, jnp.where(ok, tk.values.astype(jnp.float32),
+                                   -jnp.inf))
+    else:
+        topk = topk_probe(embf, hf, k, index=index, n_valid=n_valid)
     # dead probe slots (-inf value) must not shadow real rows in the
     # sampler's complement tail draw, and the cutoff/atom-rate math must
     # use the per-token LIVE slot count (see sample_fixed_b's k_valid);
@@ -372,6 +402,12 @@ def local_gumbel_max(
             key, jnp.arange(t, dtype=jnp.uint32)
         )
 
+    if fused:
+        return _fused_tail_argmax(
+            keys, embf, hf, ids_clean, topk.values, k_valid, nv,
+            l=l, m_cap=m_cap, c=c,
+        )
+
     def one(kk, tk_ids, tk_vals, kv, hh):
         score_fn = lambda ids: embf[jnp.minimum(ids, emb.shape[0] - 1)] @ hh
         return sample_fixed_b(
@@ -380,6 +416,54 @@ def local_gumbel_max(
         )
 
     return jax.vmap(one)(keys, ids_clean, topk.values, k_valid, hf)
+
+
+def _fused_tail_argmax(
+    keys: jax.Array,
+    embf: jax.Array,
+    hf: jax.Array,
+    ids_clean: jax.Array,
+    values: jax.Array,
+    k_valid: jax.Array,
+    nv,
+    *,
+    l: int,
+    m_cap: int,
+    c: float,
+) -> SampleResult:
+    """Algorithm-2 finish with the tail gather + perturbed argmax fused into
+    one Pallas dispatch. The per-token randomness (Gumbel perturbations of
+    S, Poisson atom count, complement positions, Exp heights) is drawn in
+    XLA by :func:`repro.core.gumbel.plan_tail` with exactly the key splits
+    and shapes of :func:`repro.core.gumbel.sample_fixed_b`, so the sampled
+    stream is bit-identical to the unfused path; only the (t, m_cap, d)
+    tail row gather — the HBM-heavy part — moves into the kernel."""
+    t, k = ids_clean.shape
+
+    def one_plan(kk, tk_ids, kv):
+        k_s, k_t = jax.random.split(kk)
+        g_s = jax.random.gumbel(k_s, (k,), dtype=jnp.float32)
+        b = jnp.log((jnp.asarray(nv, jnp.float32) - kv) / l)
+        plan = plan_tail(
+            k_t, tk_ids, nv, b, jnp.float32(l), m_cap, k_valid=kv
+        )
+        return g_s, b, plan
+
+    g_s, b, plan = jax.vmap(one_plan)(keys, ids_clean, k_valid)
+    pert_s = values.astype(jnp.float32) + g_s  # (t, k)
+    # defensive clamp, as the unfused score_fn's gather: complement draws
+    # are < nv <= embf.shape[0] already, so ids are unchanged
+    pos = jnp.minimum(plan.pos, embf.shape[0] - 1)
+
+    from repro.kernels import ops as kops
+
+    idx, max_val = kops.tail_gather_argmax(
+        embf, pos, plan.m_used, pert_s, ids_clean, plan.heights, hf
+    )
+    ok, bound = jax.vmap(
+        lambda v, bb, mv, ov: certificate(v, bb, c, mv, ov)
+    )(values, b, max_val, plan.overflow)
+    return SampleResult(idx, ok, plan.m_used, max_val, bound, plan.overflow)
 
 
 def dense_gumbel_max(

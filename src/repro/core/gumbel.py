@@ -49,6 +49,9 @@ from repro.core.complement import sample_complement
 __all__ = [
     "TopK",
     "SampleResult",
+    "TailPlan",
+    "plan_tail",
+    "certificate",
     "sample_adaptive_b",
     "sample_fixed_b",
     "gumbel_max_dense",
@@ -86,6 +89,70 @@ def gumbel_max_dense(key: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.argmax(y + g).astype(jnp.int32)
 
 
+class TailPlan(NamedTuple):
+    """The data-independent part of the Poissonized tail draw: everything
+    :func:`plan_tail` can decide from (key, S, n) alone — positions, heights,
+    live count — before any tail score is computed. The fused decode kernel
+    (:mod:`repro.kernels.decode_fused`) consumes a TailPlan directly: the
+    plan stays in XLA (it is all jax.random), only the score-gather + argmax
+    move into the kernel, which is what keeps the fused sampler bit-for-bit
+    identical to :func:`_finish`."""
+
+    pos: jax.Array  # (m_cap,) int32 tail positions (complement of S)
+    heights: jax.Array  # (m_cap,) f32 truncated-Gumbel heights B + Exp(1)
+    m_used: jax.Array  # () int32 — materialized tail candidates (<= m_cap)
+    overflow: jax.Array  # () bool — Poisson draw exceeded the static buffer
+
+
+def plan_tail(
+    key: jax.Array,
+    topk_ids: jax.Array,
+    n,
+    b: jax.Array,
+    lam: jax.Array,
+    m_cap: int,
+    k_valid=None,
+) -> TailPlan:
+    """Draw the Poissonized tail construction for cutoff ``b`` / rate
+    ``lam``: atom count (Poisson), positions (iid uniform over the
+    complement of the sorted S, with replacement), heights (B + Exp(1)).
+    The exact sequence of jax.random draws of the pre-refactor ``_finish``,
+    so samples are reproducible across the fused/unfused split."""
+    k_m, k_pos, k_h = jax.random.split(key, 3)
+    m = jax.random.poisson(k_m, lam, dtype=jnp.int32)
+    overflow = m > m_cap
+    m_used = jnp.minimum(m, m_cap)
+    s_sorted = jnp.sort(topk_ids).astype(jnp.int32)
+    pos = sample_complement(
+        k_pos, n, s_sorted, m_cap, n_excluded=k_valid
+    )  # (m_cap,)
+    heights = b + jax.random.exponential(k_h, (m_cap,), dtype=jnp.float32)
+    return TailPlan(pos, heights, m_used, overflow)
+
+
+def certificate(
+    values: jax.Array,
+    b: jax.Array,
+    c: float,
+    max_val: jax.Array,
+    overflow: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm-2 exactness certificate -> (ok, bound).
+
+    Dead S slots (value -inf: masked/padded probe results) are not real
+    top-k members — S_min must bound the NON-materialized scores, so take
+    the min over live slots only (all-dead => +inf bound => ok False).
+    A zero-row shard (no live slots AND empty tail: s_min=+inf, b=-inf)
+    holds no points at all, so nothing is non-materialized: bound=-inf,
+    not NaN — a NaN would veto the GLOBAL certificate via the pmin."""
+    vals = values.astype(jnp.float32)
+    s_min = jnp.min(jnp.where(jnp.isneginf(vals), jnp.inf, vals))
+    bound = s_min + c + b
+    bound = jnp.where(jnp.isnan(bound), -jnp.inf, bound)
+    ok = (max_val >= bound) & ~overflow
+    return ok, bound
+
+
 def _finish(
     key: jax.Array,
     topk: TopK,
@@ -99,35 +166,19 @@ def _finish(
     k_valid=None,
 ) -> SampleResult:
     """Shared tail materialization + argmax given cutoff b and atom rate lam."""
-    k_m, k_pos, k_h = jax.random.split(key, 3)
-    m = jax.random.poisson(k_m, lam, dtype=jnp.int32)
-    overflow = m > m_cap
-    m_used = jnp.minimum(m, m_cap)
-    s_sorted = jnp.sort(topk.ids).astype(jnp.int32)
-    pos = sample_complement(
-        k_pos, n, s_sorted, m_cap, n_excluded=k_valid
-    )  # (m_cap,)
-    heights = b + jax.random.exponential(k_h, (m_cap,), dtype=jnp.float32)
-    y_tail = score_fn(pos).astype(jnp.float32)  # (m_cap,)
-    live = jnp.arange(m_cap, dtype=jnp.int32) < m_used
-    pert_t = jnp.where(live, y_tail + heights, -jnp.inf)
+    plan = plan_tail(key, topk.ids, n, b, lam, m_cap, k_valid=k_valid)
+    y_tail = score_fn(plan.pos).astype(jnp.float32)  # (m_cap,)
+    live = jnp.arange(m_cap, dtype=jnp.int32) < plan.m_used
+    pert_t = jnp.where(live, y_tail + plan.heights, -jnp.inf)
 
     pert = jnp.concatenate([pert_s, pert_t])
-    ids = jnp.concatenate([topk.ids.astype(jnp.int32), pos])
+    ids = jnp.concatenate([topk.ids.astype(jnp.int32), plan.pos])
     best = jnp.argmax(pert)
     max_val = pert[best]
-    # dead S slots (value -inf: masked/padded probe results) are not real
-    # top-k members — S_min must bound the NON-materialized scores, so take
-    # the min over live slots only (all-dead => +inf bound => ok False)
-    vals = topk.values.astype(jnp.float32)
-    s_min = jnp.min(jnp.where(jnp.isneginf(vals), jnp.inf, vals))
-    bound = s_min + c + b
-    # a zero-row shard (no live slots AND empty tail: s_min=+inf, b=-inf)
-    # holds no points at all, so nothing is non-materialized: bound=-inf,
-    # not NaN — a NaN would veto the GLOBAL certificate via the pmin
-    bound = jnp.where(jnp.isnan(bound), -jnp.inf, bound)
-    ok = (max_val >= bound) & ~overflow
-    return SampleResult(ids[best], ok, m_used, max_val, bound, overflow)
+    ok, bound = certificate(topk.values, b, c, max_val, plan.overflow)
+    return SampleResult(
+        ids[best], ok, plan.m_used, max_val, bound, plan.overflow
+    )
 
 
 def sample_adaptive_b(

@@ -334,6 +334,33 @@ class IVFIndex:
         vals, pos = jax.lax.top_k(scores, k)
         return TopK(jnp.take_along_axis(ids, pos, axis=1), vals)
 
+    def screen_select(
+        self, q: jax.Array, k: int, *, n_probe: int | None = None
+    ) -> TopK:
+        """Fused probe: gather+score AND in-VMEM top-k selection in one
+        Pallas dispatch (:func:`repro.kernels.decode_fused.ivf_screen_select`)
+        — the ``(b, n_probe·cap + o_cap)`` candidate pool never reaches HBM.
+
+        Bit-identical (ids, values) to :meth:`topk_batch` with
+        ``use_kernel=True``: same per-``d_block`` f32 accumulation order,
+        same overflow scoring expression (kept in XLA glue), same
+        ``lax.top_k`` tie-break. The fused decode head
+        (``estimators.local_gumbel_max(fused=True)``) dispatches here.
+        """
+        state = self.state
+        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
+        qf = q.astype(jnp.float32)
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+        o_scores = (state.overflow_vecs.astype(jnp.float32) @ qf.T).T
+        from repro.kernels import ops as kops
+
+        vals, ids = kops.ivf_screen_select(
+            state.member_vecs, state.member_ids, o_scores,
+            state.overflow_ids, probe, qf, k=k,
+        )
+        return TopK(ids, vals)
+
     def memory_bytes(self) -> int:
         return base.state_bytes(self.state)
 

@@ -349,6 +349,52 @@ class IVFPQIndex:
         vals, p2 = jax.lax.top_k(exact, k)
         return TopK(jnp.take_along_axis(cand, p2, axis=1), vals)
 
+    def screen_select(
+        self, q: jax.Array, k: int, *, n_probe: int | None = None
+    ) -> TopK:
+        """Fused query pipeline: LUT screen + pool top-r in one Pallas
+        dispatch (:func:`repro.kernels.decode_fused.pq_screen_select`), then
+        exact re-rank + top-k in a second
+        (:func:`repro.kernels.decode_fused.rerank_select`) — neither the
+        ``(b, n_probe·cap + o_cap)`` screening pool nor the ``(b, r, d)``
+        re-rank gather ever reaches HBM.
+
+        Bit-identical (ids, values) to :meth:`topk_batch` with
+        ``use_kernel=True``: the LUT tile scorer is literally shared
+        (:func:`repro.kernels.pq_lut_score.lut_tile_scores`), the coarse
+        term and exact overflow scores use the same XLA expressions, and
+        the re-rank matvec has the unfused gemv's shape. The fused decode
+        head (``estimators.local_gumbel_max(fused=True)``) dispatches here.
+        """
+        state = self.state
+        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
+        b, d = q.shape
+        qf = q.astype(jnp.float32)
+        dbf = state.db
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+        lut = quant.build_lut(state.codebooks, qf)  # (b, m, ksub)
+        coarse = jnp.take_along_axis(c_scores, probe, axis=1)  # (b, n_probe)
+        o_ids = state.overflow_ids
+        o_vecs = jnp.where(
+            (o_ids >= 0)[:, None],
+            dbf[jnp.maximum(o_ids, 0)].astype(jnp.float32),
+            0.0,
+        )
+        o_scores = (o_vecs @ qf.T).T  # (b, o_cap), exact — as topk_batch
+        pool = n_probe * state.cap + o_ids.shape[0]
+        # unfused r is resolved over the k-padded pool; the kernel's
+        # extractor reproduces the pad slots' (-inf, -1) picks on its own
+        r = self._resolved_rerank(k, max(pool, k))
+        from repro.kernels import ops as kops
+
+        lut_vals, cand = kops.pq_screen_select(
+            state.member_codes, state.member_ids, coarse, o_scores, o_ids,
+            probe, lut, r=r,
+        )
+        vals, ids = kops.rerank_select(dbf, cand, lut_vals, qf, k=k)
+        return TopK(ids, vals)
+
     def memory_bytes(self) -> int:
         """Index-OWNED device memory: centroids, codebooks, member tables,
         codes, overflow ids. Excludes ``state.db`` — on the eager

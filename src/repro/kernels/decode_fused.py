@@ -1,0 +1,435 @@
+"""Pallas TPU kernel family: single-dispatch fused decode step.
+
+The decode hot path used to splinter the per-token head sample across four
+kernels plus XLA glue (probe gather-score → candidate pool top-k → tail
+gather → Gumbel argmax), round-tripping the ``(b, n_probe·cap)`` candidate
+pool and the ``(m_cap, d)`` tail gather through HBM between every stage.
+This module fuses the stages into a tile pipeline of (at most) two
+dispatches per token batch, keeping scores/ids in VMEM end to end:
+
+* :func:`ivf_screen_select` — IVF fp gather-score **and** pool top-k in one
+  kernel: per-probe cluster tiles are DMA'd by the scalar-prefetched probe
+  ids (exactly :mod:`repro.kernels.ivf_gather_score`'s accumulation, so the
+  scores are bit-identical), accumulated into a persistent
+  ``(n_probe, cap)`` VMEM pool, and on the last grid step the pool +
+  overflow scores are masked and reduced to the top-k — the pool never
+  reaches HBM.
+* :func:`pq_screen_select` — the IVF-PQ analogue: LUT screen via the shared
+  :func:`repro.kernels.pq_lut_score.lut_tile_scores` tile scorer (+ coarse
+  centroid term), pooled in VMEM, reduced to the top-r screening survivors.
+* :func:`rerank_select` — exact re-rank of the top-r survivors: db rows are
+  DMA'd one at a time by the scalar-prefetched candidate ids into a
+  ``(r, d)`` VMEM tile, scored with one f32 matvec, and reduced to the
+  top-k — the ``(b, r, d)`` gather never exists in HBM.
+* :func:`tail_gather_argmax` — the lazy-Gumbel finish (paper Algorithm 2):
+  tail rows at the Poissonized complement positions are DMA'd into an
+  ``(m_cap, d)`` VMEM tile, scored with one f32 matvec, perturbed with the
+  precomputed heights, concatenated with the perturbed top-k stratum, and
+  arg-maxed — returning the winning id and perturbed value (the
+  certificate's ``max_val``) per token.
+
+Bitwise parity contract
+-----------------------
+Every stage replicates the *same floating-point program* as the unfused
+kernel path: identical tile shapes and accumulation order for the screen
+(init-at-zero + per-``d_block`` f32 dot accumulate), identical one-matvec
+scoring for re-rank/tail (the unfused path's per-token gemv), and a top-k
+extraction whose tie-break (lower index first) matches ``jax.lax.top_k``.
+All jax.random draws (Gumbel, Poisson, complement positions, Exp heights)
+stay in XLA glue between dispatches, keyed identically to the unfused
+path — randomness is a function of (key, shape, distribution) only, so the
+fused sampler is bit-for-bit the unfused sampler. Asserted in
+``tests/test_decode_fused.py`` and in ``benchmarks/decode_fused.py``.
+
+Top-k extraction invariant: every pool construction here guarantees
+``score == -inf  ⟺  slot is dead`` (dead index slots carry id -1 and are
+masked; live members have finite dots/LUT sums). The extractor therefore
+emits id -1 for any -inf pick, which reproduces ``lax.top_k`` +
+``take_along_axis`` over a pool whose dead slots already hold id -1 — even
+when the extraction loop re-picks an exhausted slot (pool smaller than k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pq_lut_score import lut_tile_scores
+
+__all__ = [
+    "ivf_screen_select",
+    "pq_screen_select",
+    "rerank_select",
+    "tail_gather_argmax",
+]
+
+
+def _emit_topk(vals, ids, vals_ref, ids_ref):
+    """Reduce a (pool,) score/id pair to the top-k, written to (1, k) refs.
+
+    Iterative argmax extraction: first-occurrence argmax per round matches
+    ``jax.lax.top_k``'s lower-index-first tie-break; extracted slots are
+    burned to -inf. Emits id -1 for -inf picks (see module docstring).
+    """
+    k = vals_ref.shape[-1]
+
+    def body(i, carry):
+        pool, ov, oi = carry
+        p = jnp.argmax(pool)
+        v = pool[p]
+        emit = jnp.where(jnp.isneginf(v), jnp.int32(-1), ids[p])
+        return (
+            pool.at[p].set(-jnp.inf),
+            ov.at[i].set(v),
+            oi.at[i].set(emit.astype(jnp.int32)),
+        )
+
+    _, out_vals, out_ids = jax.lax.fori_loop(
+        0, k, body,
+        (vals, jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.int32)),
+    )
+    vals_ref[0, :] = out_vals
+    ids_ref[0, :] = out_ids
+
+
+def _row_store(ref, j, row):
+    """Store a 1-row tile at dynamic row j of a 2-D scratch ref."""
+    pl.store(ref, (pl.dslice(j, 1), pl.dslice(0, ref.shape[1])), row[None])
+
+
+# --------------------------------------------------------------------------
+# IVF: fused gather-score + pool top-k
+# --------------------------------------------------------------------------
+def _ivf_screen_kernel(
+    probe_ref, mv_ref, mid_ref, os_ref, oid_ref, q_ref,
+    vals_ref, ids_ref, pool_vals, pool_ids,
+):
+    j = pl.program_id(1)
+    dk = pl.program_id(2)
+    n_probe = pl.num_programs(1)
+    n_dk = pl.num_programs(2)
+    cap = pool_vals.shape[1]
+
+    @pl.when(dk == 0)
+    def _init():
+        _row_store(pool_vals, j, jnp.zeros((cap,), jnp.float32))
+        _row_store(pool_ids, j, mid_ref[0])
+
+    part = jnp.dot(
+        mv_ref[0].astype(jnp.float32), q_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    cur = pl.load(pool_vals, (pl.dslice(j, 1), pl.dslice(0, cap)))
+    pl.store(pool_vals, (pl.dslice(j, 1), pl.dslice(0, cap)), cur + part[None])
+
+    @pl.when((j == n_probe - 1) & (dk == n_dk - 1))
+    def _select():
+        vals = jnp.concatenate([pool_vals[...].reshape(-1), os_ref[0]])
+        ids = jnp.concatenate([pool_ids[...].reshape(-1), oid_ref[...]])
+        vals = jnp.where(ids >= 0, vals, -jnp.inf)
+        _emit_topk(vals, ids, vals_ref, ids_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "d_block", "interpret"))
+def ivf_screen_select(
+    member_vecs: jax.Array,  # (n_c, cap, d)
+    member_ids: jax.Array,  # (n_c, cap) int32 (-1 = dead slot)
+    overflow_scores: jax.Array,  # (b, o_cap) f32, precomputed in XLA glue
+    overflow_ids: jax.Array,  # (o_cap,) int32 (-1 = dead slot)
+    probe: jax.Array,  # (b, n_probe) int32 cluster ids
+    q: jax.Array,  # (b, d)
+    *,
+    k: int,
+    d_block: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (values (b, k) f32, ids (b, k) i32): top-k of the probed
+    member pool ∪ overflow, without materializing the pool in HBM."""
+    n_c, cap, d = member_vecs.shape
+    b, n_probe = probe.shape
+    o_cap = overflow_ids.shape[0]
+    d_blk = min(d_block, d)
+    assert d % d_blk == 0, (d, d_blk)
+    grid = (b, n_probe, d // d_blk)
+
+    vals, ids = pl.pallas_call(
+        _ivf_screen_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, cap, d_blk), lambda i, j, dk, probe: (probe[i, j], 0, dk)
+                ),
+                pl.BlockSpec((1, cap), lambda i, j, dk, probe: (probe[i, j], 0)),
+                pl.BlockSpec((1, o_cap), lambda i, j, dk, probe: (i, 0)),
+                pl.BlockSpec((o_cap,), lambda i, j, dk, probe: (0,)),
+                pl.BlockSpec((1, d_blk), lambda i, j, dk, probe: (i, dk)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k), lambda i, j, dk, probe: (i, 0)),
+                pl.BlockSpec((1, k), lambda i, j, dk, probe: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((n_probe, cap), jnp.float32),
+                pltpu.VMEM((n_probe, cap), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        probe.astype(jnp.int32),
+        member_vecs,
+        member_ids.astype(jnp.int32),
+        overflow_scores.astype(jnp.float32),
+        overflow_ids.astype(jnp.int32),
+        q,
+    )
+    return vals, ids
+
+
+# --------------------------------------------------------------------------
+# IVF-PQ: fused LUT screen + pool top-r
+# --------------------------------------------------------------------------
+def _pq_screen_kernel(
+    probe_ref, codes_ref, mid_ref, coarse_ref, os_ref, oid_ref, lut_ref,
+    vals_ref, ids_ref, pool_vals, pool_ids,
+):
+    j = pl.program_id(1)
+    n_probe = pl.num_programs(1)
+    acc = lut_tile_scores(codes_ref[0], lut_ref[0])  # (cap,) f32
+    _row_store(pool_vals, j, acc + coarse_ref[0][j])
+    _row_store(pool_ids, j, mid_ref[0])
+
+    @pl.when(j == n_probe - 1)
+    def _select():
+        vals = jnp.concatenate([pool_vals[...].reshape(-1), os_ref[0]])
+        ids = jnp.concatenate([pool_ids[...].reshape(-1), oid_ref[...]])
+        vals = jnp.where(ids >= 0, vals, -jnp.inf)
+        _emit_topk(vals, ids, vals_ref, ids_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "interpret"))
+def pq_screen_select(
+    member_codes: jax.Array,  # (n_c, cap, m_sub) uint8
+    member_ids: jax.Array,  # (n_c, cap) int32 (-1 = dead slot)
+    coarse: jax.Array,  # (b, n_probe) f32 centroid scores of probed clusters
+    overflow_scores: jax.Array,  # (b, o_cap) f32 EXACT scores (XLA glue)
+    overflow_ids: jax.Array,  # (o_cap,) int32 (-1 = dead slot)
+    probe: jax.Array,  # (b, n_probe) int32 cluster ids
+    lut: jax.Array,  # (b, m_sub, ksub) f32 per-query codeword tables
+    *,
+    r: int,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (values (b, r) f32, ids (b, r) i32): top-r LUT screening
+    survivors of the probed pool ∪ overflow (ADC score = LUT sum + coarse
+    centroid term), without materializing the pool in HBM."""
+    n_c, cap, m_sub = member_codes.shape
+    b, n_probe = probe.shape
+    o_cap = overflow_ids.shape[0]
+    assert lut.shape[1] == m_sub, (lut.shape, m_sub)
+    grid = (b, n_probe)
+
+    vals, ids = pl.pallas_call(
+        _pq_screen_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, cap, m_sub), lambda i, j, probe: (probe[i, j], 0, 0)
+                ),
+                pl.BlockSpec((1, cap), lambda i, j, probe: (probe[i, j], 0)),
+                pl.BlockSpec((1, n_probe), lambda i, j, probe: (i, 0)),
+                pl.BlockSpec((1, o_cap), lambda i, j, probe: (i, 0)),
+                pl.BlockSpec((o_cap,), lambda i, j, probe: (0,)),
+                pl.BlockSpec(
+                    (1, m_sub, lut.shape[2]), lambda i, j, probe: (i, 0, 0)
+                ),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, r), lambda i, j, probe: (i, 0)),
+                pl.BlockSpec((1, r), lambda i, j, probe: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((n_probe, cap), jnp.float32),
+                pltpu.VMEM((n_probe, cap), jnp.int32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), jnp.float32),
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        probe.astype(jnp.int32),
+        member_codes,
+        member_ids.astype(jnp.int32),
+        coarse.astype(jnp.float32),
+        overflow_scores.astype(jnp.float32),
+        overflow_ids.astype(jnp.int32),
+        lut.astype(jnp.float32),
+    )
+    return vals, ids
+
+
+# --------------------------------------------------------------------------
+# exact re-rank of screening survivors
+# --------------------------------------------------------------------------
+def _rerank_kernel(
+    cand_pref, db_row_ref, cand_ref, lv_ref, q_ref, vals_ref, ids_ref, rows
+):
+    j = pl.program_id(1)
+    r = pl.num_programs(1)
+    _row_store(rows, j, db_row_ref[0].astype(jnp.float32))
+
+    @pl.when(j == r - 1)
+    def _select():
+        exact = jnp.dot(
+            rows[...], q_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        cand = cand_ref[0]
+        dead = (cand < 0) | jnp.isneginf(lv_ref[0])
+        _emit_topk(jnp.where(dead, -jnp.inf, exact), cand, vals_ref, ids_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def rerank_select(
+    db: jax.Array,  # (n, d) full-precision rows
+    cand: jax.Array,  # (b, r) int32 screening survivors (-1 = dead)
+    lut_vals: jax.Array,  # (b, r) f32 screening scores (-inf = dead)
+    q: jax.Array,  # (b, d)
+    *,
+    k: int,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (values (b, k) f32, ids (b, k) i32): exact re-rank of the
+    top-r screening survivors, rows streamed by scalar-prefetched ids."""
+    n, d = db.shape
+    b, r = cand.shape
+    grid = (b, r)
+
+    vals, ids = pl.pallas_call(
+        _rerank_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # db row chosen by the prefetched (clamped) candidate ids
+                pl.BlockSpec((1, d), lambda i, j, cand: (cand[i, j], 0)),
+                pl.BlockSpec((1, r), lambda i, j, cand: (i, 0)),
+                pl.BlockSpec((1, r), lambda i, j, cand: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, j, cand: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, k), lambda i, j, cand: (i, 0)),
+                pl.BlockSpec((1, k), lambda i, j, cand: (i, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((r, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.maximum(cand, 0).astype(jnp.int32),  # prefetch: valid rows only
+        db,
+        cand.astype(jnp.int32),
+        lut_vals.astype(jnp.float32),
+        q,
+    )
+    return vals, ids
+
+
+# --------------------------------------------------------------------------
+# lazy-Gumbel tail gather + perturbed argmax (Algorithm 2 finish)
+# --------------------------------------------------------------------------
+def _tail_kernel(
+    pos_ref, mu_ref, emb_row_ref, ps_ref, sid_ref, hei_ref, h_ref,
+    idx_ref, max_ref, rows,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    m_cap = pl.num_programs(1)
+    _row_store(rows, j, emb_row_ref[0].astype(jnp.float32))
+
+    @pl.when(j == m_cap - 1)
+    def _finish():
+        # one (m_cap, d) · (d,) f32 matvec — the unfused path's per-token
+        # score_fn gemv, same shape, same reduction order
+        y_tail = jnp.dot(
+            rows[...], h_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        live = jnp.arange(m_cap, dtype=jnp.int32) < mu_ref[i]
+        pert_t = jnp.where(live, y_tail + hei_ref[0], -jnp.inf)
+        pert = jnp.concatenate([ps_ref[0], pert_t])
+        ids_all = jnp.concatenate([sid_ref[0], pos_ref[i, :]])
+        best = jnp.argmax(pert)
+        idx_ref[0, 0] = ids_all[best]
+        max_ref[0, 0] = pert[best]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tail_gather_argmax(
+    emb: jax.Array,  # (n, d) local feature table
+    pos: jax.Array,  # (t, m_cap) int32 tail positions (already clamped)
+    m_used: jax.Array,  # (t,) int32 live tail count
+    pert_s: jax.Array,  # (t, k) f32 perturbed top-k stratum (-inf = dead)
+    s_ids: jax.Array,  # (t, k) int32 sanitized top-k ids
+    heights: jax.Array,  # (t, m_cap) f32 truncated-Gumbel heights B+Exp(1)
+    h: jax.Array,  # (t, d) queries
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (index (t,) i32, max_val (t,) f32): the Algorithm-2 winner
+    over S ∪ tail and its perturbed value (the certificate's max_val), tail
+    rows streamed by scalar-prefetched positions — the (t, m_cap, d) gather
+    never exists in HBM."""
+    n, d = emb.shape
+    t, m_cap = pos.shape
+    grid = (t, m_cap)
+
+    idx, max_val = pl.pallas_call(
+        _tail_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                # tail row chosen by the prefetched positions
+                pl.BlockSpec((1, d), lambda i, j, pos, mu: (pos[i, j], 0)),
+                pl.BlockSpec((1, pert_s.shape[1]), lambda i, j, pos, mu: (i, 0)),
+                pl.BlockSpec((1, s_ids.shape[1]), lambda i, j, pos, mu: (i, 0)),
+                pl.BlockSpec((1, m_cap), lambda i, j, pos, mu: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, j, pos, mu: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1), lambda i, j, pos, mu: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i, j, pos, mu: (i, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((m_cap, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((t, 1), jnp.int32),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        pos.astype(jnp.int32),
+        m_used.astype(jnp.int32),
+        emb,
+        pert_s.astype(jnp.float32),
+        s_ids.astype(jnp.int32),
+        heights.astype(jnp.float32),
+        h,
+    )
+    return idx[:, 0], max_val[:, 0]

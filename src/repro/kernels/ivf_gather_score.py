@@ -7,6 +7,11 @@ clusters against the query. The XLA path materializes the gathered
 grid step DMAs exactly one ``(cap, d_blk)`` cluster tile HBM→VMEM and feeds
 the MXU — the gather never exists as an HBM intermediate.
 
+The member-*id* gather rides the same prefetch path: the ``(1, cap)`` int32
+id tile of the probed cluster is DMA'd alongside the vector tile and copied
+to an id output, so the former separate XLA ``member_ids[probe]`` gather
+(one more HBM round trip between kernel dispatches) is gone.
+
 Grid: ``(b, n_probe, d_blocks)`` — the d axis is innermost and accumulated
 into the f32 output block (init at d_blk==0), so arbitrarily large feature
 dims fit in VMEM with a fixed ``(cap, d_blk)`` working set.
@@ -23,12 +28,13 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["ivf_gather_score"]
 
 
-def _kernel(probe_ref, member_ref, q_ref, out_ref):
+def _kernel(probe_ref, member_ref, mid_ref, q_ref, out_ref, ids_ref):
     d_idx = pl.program_id(2)
 
     @pl.when(d_idx == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        ids_ref[0, 0, :] = mid_ref[0]
 
     members = member_ref[0]  # (cap, d_blk)
     q = q_ref[0]  # (d_blk,)
@@ -41,36 +47,44 @@ def _kernel(probe_ref, member_ref, q_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
 def ivf_gather_score(
     member_vecs: jax.Array,  # (n_c, cap, d)
+    member_ids: jax.Array,  # (n_c, cap) int32 db row ids (-1 = dead slot)
     probe: jax.Array,  # (b, n_probe) int32 cluster ids
     q: jax.Array,  # (b, d)
     *,
     d_block: int = 512,
     interpret: bool = True,  # CPU container: interpret; False on real TPU
-) -> jax.Array:
-    """Returns scores (b, n_probe, cap) = member_vecs[probe] · q."""
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (scores, ids), both (b, n_probe, cap):
+    ``scores = member_vecs[probe] · q`` and ``ids = member_ids[probe]``."""
     n_c, cap, d = member_vecs.shape
     b, n_probe = probe.shape
     d_blk = min(d_block, d)
     assert d % d_blk == 0, (d, d_blk)
     grid = (b, n_probe, d // d_blk)
 
-    out = pl.pallas_call(
+    scores, ids = pl.pallas_call(
         _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                # cluster tile chosen by the prefetched probe ids
+                # cluster tiles (vectors AND ids) chosen by the prefetched
+                # probe ids
                 pl.BlockSpec(
                     (1, cap, d_blk), lambda i, j, k, probe: (probe[i, j], 0, k)
                 ),
+                pl.BlockSpec((1, cap), lambda i, j, k, probe: (probe[i, j], 0)),
                 pl.BlockSpec((1, d_blk), lambda i, j, k, probe: (i, k)),
             ],
-            out_specs=pl.BlockSpec(
-                (1, 1, cap), lambda i, j, k, probe: (i, j, 0)
-            ),
+            out_specs=[
+                pl.BlockSpec((1, 1, cap), lambda i, j, k, probe: (i, j, 0)),
+                pl.BlockSpec((1, 1, cap), lambda i, j, k, probe: (i, j, 0)),
+            ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, n_probe, cap), jnp.float32),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_probe, cap), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_probe, cap), jnp.int32),
+        ],
         interpret=interpret,
-    )(probe.astype(jnp.int32), member_vecs, q)
-    return out
+    )(probe.astype(jnp.int32), member_vecs, member_ids.astype(jnp.int32), q)
+    return scores, ids

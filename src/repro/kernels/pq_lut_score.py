@@ -28,12 +28,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["pq_lut_score"]
+__all__ = ["pq_lut_score", "lut_tile_scores"]
 
 
-def _kernel(probe_ref, codes_ref, lut_ref, out_ref):
-    codes = codes_ref[0].astype(jnp.int32)  # (cap, m_sub)
-    lut = lut_ref[0]  # (m_sub, ksub)
+def lut_tile_scores(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Score one ``(cap, m_sub)`` code tile against one ``(m_sub, ksub)``
+    LUT: ``out[c] = Σ_m lut[m, codes[c, m]]`` as f32.
+
+    Shared between this kernel and the fused decode screen
+    (:mod:`repro.kernels.decode_fused`) so both paths are the *same
+    floating-point program* — the fused/unfused bitwise-parity guarantee
+    rests on it. Per subspace, a ``(cap, ksub)`` one-hot of the codes
+    matmuls the subspace's LUT row — gathers by vector index don't
+    vectorize on TPU, one-hot × table does.
+    """
+    codes = codes.astype(jnp.int32)  # (cap, m_sub)
     cap = codes.shape[0]
     m_sub, ksub = lut.shape
     cols = jax.lax.broadcasted_iota(jnp.int32, (cap, ksub), 1)
@@ -41,7 +50,11 @@ def _kernel(probe_ref, codes_ref, lut_ref, out_ref):
     for mi in range(m_sub):  # static unroll: one MXU matvec per subspace
         onehot = (codes[:, mi][:, None] == cols).astype(jnp.float32)
         acc += jnp.dot(onehot, lut[mi], preferred_element_type=jnp.float32)
-    out_ref[0, 0, :] = acc
+    return acc
+
+
+def _kernel(probe_ref, codes_ref, lut_ref, out_ref):
+    out_ref[0, 0, :] = lut_tile_scores(codes_ref[0], lut_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

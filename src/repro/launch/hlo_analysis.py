@@ -100,6 +100,10 @@ class HloCost:
     coll_by_kind: dict = dataclasses.field(default_factory=dict)
     coll_counts: dict = dataclasses.field(default_factory=dict)
     dot_count: int = 0
+    # executed top-level instruction sites (fusion = 1 site; while bodies
+    # trip-scaled; free ops like parameter/tuple excluded) — a dispatch/
+    # launch-overhead proxy for fused-vs-unfused comparisons
+    instr_count: int = 0
     while_trips: list = dataclasses.field(default_factory=list)
     # per-site detail for hillclimbing: (comp, op/kind, bytes, mult)
     coll_sites: list = dataclasses.field(default_factory=list)
@@ -114,6 +118,7 @@ class HloCost:
         for k, v in other.coll_counts.items():
             self.coll_counts[k] = self.coll_counts.get(k, 0) + int(v * mult)
         self.dot_count += int(other.dot_count * mult)
+        self.instr_count += int(other.instr_count * mult)
         for comp, kind, b, m in other.coll_sites:
             self.coll_sites.append((comp, kind, b, m * mult))
         for k, v in other.hbm_sites.items():
@@ -263,6 +268,8 @@ def _analyze_comp(
     for ins in comp.instrs:
         op = ins.opcode
         callees = _CALL_RE.findall(ins.line)
+        if op not in _NO_TRAFFIC:
+            cost.instr_count += 1
         if op == "while":
             body = cond = None
             bm = re.search(r"body=%?([\w.\-]+)", ins.line)

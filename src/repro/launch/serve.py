@@ -50,6 +50,12 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="re-sample certificate-failed tokens exactly "
                          "(in-dispatch fallback)")
+    ap.add_argument("--head-use-kernel", action="store_true",
+                    help="Pallas probe/estimator kernels in the head")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="single-dispatch fused decode step (Pallas "
+                         "screen/re-rank/tail pipeline; samples are "
+                         "bit-identical to the unfused kernel path)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -61,6 +67,10 @@ def main() -> None:
         cfg = cfg.scaled(head_mips=args.mips)
     if args.vocab:
         cfg = cfg.scaled(vocab=args.vocab)
+    if args.head_use_kernel:
+        cfg = cfg.scaled(head_use_kernel=True)
+    if args.fused_decode:
+        cfg = cfg.scaled(head_fused_decode=True)
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)

@@ -216,6 +216,13 @@ def make_decode_loop_step(model: Model, window: int, eos_id: int,
     dispatch + host-sync overhead ``window``-fold. Slots that finish
     mid-window stop emitting (and stop perturbing their state) on device;
     the host discovers this from the emitted mask after the fact.
+
+    With ``head_fused_decode`` set on the arch config, each scanned token
+    additionally runs the head's probe → screen → re-rank → certificate →
+    Gumbel-argmax as the single-dispatch Pallas pipeline
+    (kernels/decode_fused.py) — inherited here through ``model.decode_step``
+    with no loop-level change; per-token keys from :func:`slot_keys` keep
+    the samples bit-identical either way.
     """
 
     def decode_loop(params, cache, state, base_key, index=None):

@@ -283,7 +283,7 @@ def decode(
     if use_kernel is None:
         # interpret-mode Pallas on CPU would skew dry-run cost analysis;
         # the kernel is exercised explicitly by tests/test_kernels.py
-        use_kernel = not kops.INTERPRET
+        use_kernel = not kops.resolve_interpret()
     if use_kernel:
         o = kops.flash_decode(q[:, 0], cache["k"], cache["v"], lengths)
     else:

@@ -58,6 +58,10 @@ class ArchConfig:
     head_delta: float = 1e-4
     head_k: int = 0  # 0 -> default_kl(vocab, head_delta)
     head_l: int = 0
+    head_use_kernel: bool = False  # Pallas probe/estimator kernels
+    head_fused_decode: bool = False  # single-dispatch fused decode step
+    #   (kernels/decode_fused.py); bit-identical samples to the unfused
+    #   kernel path — see DESIGN.md §10
 
     # ------------------------------------------------------------------ #
     @property

@@ -163,6 +163,7 @@ def dist_head_sample(
             res = est.local_gumbel_max(
                 key, emb_loc, h_loc, k=k_loc, l=l_loc, index=index_loc,
                 n_valid=n_valid, c=cfg.c, keys=keys_loc,
+                fused=cfg.fused_decode,
             )
             gid = res.index + offset
             val = res.max_val

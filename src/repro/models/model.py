@@ -30,6 +30,8 @@ def _head_cfg(cfg: ArchConfig, policy: precision.Policy) -> ah.HeadConfig:
         mode=cfg.head_mode,
         mips=cfg.head_mips,
         delta=cfg.head_delta,
+        use_kernel=cfg.head_use_kernel,
+        fused_decode=cfg.head_fused_decode,
         score_dtype=policy.score_dtype,
     ).resolved()
 

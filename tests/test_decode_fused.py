@@ -1,0 +1,130 @@
+"""Fused single-dispatch decode vs the unfused kernel path: BITWISE parity.
+
+The contract (kernels/decode_fused.py module doc): with ``use_kernel=True``
+indexes, ``local_gumbel_max(..., fused=True)`` must reproduce the unfused
+sampler bit for bit — same sampled ids, same certificate terms — on every
+backend, because the fused kernels run the same floating-point programs and
+all randomness stays in identically-keyed XLA glue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators as est
+from repro.core import mips
+from repro.core.amortized_head import HeadConfig, head_sample, make_index
+
+N, D, K, L, T = 4096, 32, 32, 32, 4
+
+
+def _problem(seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    emb = jax.random.normal(k1, (N, D), jnp.float32)
+    emb = emb / jnp.linalg.norm(emb, axis=1, keepdims=True)
+    h = emb[jax.random.randint(k2, (T,), 0, N)] / 0.05
+    return emb, h
+
+
+def _assert_bitwise(a, b, label):
+    for field, x, y in zip(a._fields, a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (
+            f"{label}: fused decode diverged on {field}:\n{x}\nvs\n{y}"
+        )
+
+
+def _parity(index, label, n_valid=None, keys=None):
+    emb, h = _problem()
+    key = jax.random.key(42)
+    a = est.local_gumbel_max(
+        key, emb, h, k=K, l=L, index=index, n_valid=n_valid, keys=keys,
+        fused=False,
+    )
+    b = est.local_gumbel_max(
+        key, emb, h, k=K, l=L, index=index, n_valid=n_valid, keys=keys,
+        fused=True,
+    )
+    _assert_bitwise(a, b, label)
+    return a
+
+
+def test_dense_parity():
+    res = _parity(None, "dense")
+    assert bool(jnp.all((res.index >= 0) & (res.index < N)))
+
+
+def test_dense_parity_n_valid():
+    res = _parity(None, "dense+n_valid", n_valid=jnp.int32(N - 300))
+    assert bool(jnp.all(res.index < N - 300))
+
+
+def test_dense_parity_explicit_keys():
+    emb, h = _problem()
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        jax.random.key(5), jnp.arange(T, dtype=jnp.uint32)
+    )
+    _parity(None, "dense+keys", keys=keys)
+
+
+@pytest.fixture(scope="module")
+def ivf_index():
+    emb, _ = _problem()
+    return mips.build_index(
+        mips.IVFConfig(n_probe=4, kmeans_iters=2, use_kernel=True), emb
+    )
+
+
+@pytest.fixture(scope="module")
+def pq_index():
+    emb, _ = _problem()
+    return mips.build_index(
+        mips.PQConfig(
+            n_probe=4, kmeans_iters=2, pq_iters=2, rerank=2 * K,
+            use_kernel=True,
+        ),
+        emb,
+    )
+
+
+def test_ivf_parity(ivf_index):
+    _parity(ivf_index, "ivf")
+
+
+def test_ivf_parity_n_valid(ivf_index):
+    _parity(ivf_index, "ivf+n_valid", n_valid=jnp.int32(N - 300))
+
+
+def test_ivfpq_parity(pq_index):
+    _parity(pq_index, "ivfpq")
+
+
+def test_screen_select_matches_topk_batch(ivf_index, pq_index):
+    """The index-level contract the head path builds on: screen_select ==
+    topk_batch(use_kernel=True) bitwise, per backend."""
+    _, h = _problem()
+    for label, ix in (("ivf", ivf_index), ("ivfpq", pq_index)):
+        a = ix.topk_batch(h, K)
+        b = ix.screen_select(h, K)
+        assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids)), label
+        assert np.array_equal(np.asarray(a.values), np.asarray(b.values)), (
+            label
+        )
+
+
+def test_head_sample_fused_parity():
+    """Config-level threading: HeadConfig.fused_decode reproduces the
+    unfused head sampler bitwise, strict certificate fallback included."""
+    emb, h = _problem()
+    base = HeadConfig(
+        n=N, k=K, l=L, mips="ivf", n_probe=4, use_kernel=True, c=0.0
+    )
+    index = make_index(base, emb)
+    key = jax.random.key(3)
+    for strict in (False, True):
+        a = head_sample(emb, h, key, base, index=index, strict=strict)
+        b = head_sample(
+            emb, h, key,
+            HeadConfig(**{**base.__dict__, "fused_decode": True}),
+            index=index, strict=strict,
+        )
+        _assert_bitwise(a, b, f"head_sample(strict={strict})")

@@ -327,6 +327,44 @@ def test_sharded_ivfpq_build_refresh_query():
     assert "OK" in out
 
 
+def test_dist_fused_decode_bitwise_parity():
+    """Sharded fused decode: HeadConfig.fused_decode reproduces the unfused
+    kernel path bit for bit through shard_map — each shard's local_index is
+    a plain IVF/IVF-PQ instance, so the fused screen_select + tail pipeline
+    rides the distributed head with no shard-specific code."""
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.amortized_head import HeadConfig, make_index
+        from repro.models.head import dist_head_sample
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        N, D, T = 4096, 32, 8
+        emb = jax.random.normal(jax.random.key(0), (N, D))
+        emb = emb / jnp.linalg.norm(emb, axis=1, keepdims=True)
+        h = emb[jax.random.randint(jax.random.key(1), (T,), 0, N)] / 0.05
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            jax.random.key(7), jnp.arange(T, dtype=jnp.uint32))
+
+        for mips_kind in ("ivf", "ivfpq"):
+            cfg = HeadConfig(n=N, k=128, l=128, mode="amortized",
+                             mips=mips_kind, n_probe=4, use_kernel=True,
+                             min_amortized_n=1)
+            index = make_index(cfg, emb, mesh=mesh)
+            cfg_f = dataclasses.replace(cfg, fused_decode=True)
+            a = dist_head_sample(mesh, emb, h, jax.random.key(3), cfg,
+                                 index=index, keys=keys)
+            b = dist_head_sample(mesh, emb, h, jax.random.key(3), cfg_f,
+                                 index=index, keys=keys)
+            for x, y in zip(a, b):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                    mips_kind, x, y)
+            print("parity", mips_kind, "OK")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_compressed_allreduce_matches_psum():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
