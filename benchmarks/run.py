@@ -5,11 +5,16 @@ Prints ``name,us_per_call,derived`` CSV. Select subsets with
 [fig2|table1|fig4|table2|fig7|refresh|dist|serve|train|pq|decode_fused|roofline]``.
 
 ``--json-out PATH`` additionally writes one combined JSON document — a
-``BENCH_*.json`` trajectory entry — with every reported row plus run
-metadata, so successive PRs can record comparable baselines (entries so
+``BENCH_*.json`` trajectory entry (schema ``bench-trajectory-v1``) that
+merges EVERY selected suite's rows and structured results into one record
+per run, so successive PRs can record comparable baselines (entries so
 far: BENCH_20260802_train.json [train], BENCH_20260802_serve_pq.json
-[serve+train+pq]; regenerate with the same command to extend the
-trajectory).
+[serve+train+pq], BENCH_20260808_decode_fused.json [decode_fused];
+regenerate with the same command to extend the trajectory).
+
+``--compare ENTRY [ENTRY ...]`` reads committed entries back through
+:func:`load_trajectory` (tolerant of pre-v1 partial documents) and prints
+rows matched by name across entries side by side.
 """
 from __future__ import annotations
 
@@ -18,9 +23,61 @@ import json
 import platform
 import time
 
+SCHEMA = "bench-trajectory-v1"
+# suites accepting a reduced CI grid (fn(report, smoke=True))
+SMOKE_SUITES = ("serve", "train", "pq", "decode_fused", "adaptive")
+
+
+def load_trajectory(paths: list[str]) -> list[dict]:
+    """Back-compat reader for committed ``BENCH_*.json`` entries.
+
+    Normalizes every entry to the full v1 shape — missing keys (partial or
+    pre-v1 documents) are defaulted rather than KeyError'd, so readers can
+    iterate a mixed-age trajectory uniformly.
+    """
+    entries = []
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        schema = doc.get("schema", SCHEMA)
+        if not schema.startswith("bench-trajectory-"):
+            raise ValueError(f"{path}: unknown schema {schema!r}")
+        entries.append({
+            "path": path,
+            "schema": schema,
+            "suites": doc.get("suites", []),
+            "smoke": doc.get("smoke", False),
+            "unix_time": doc.get("unix_time", 0),
+            "platform": doc.get("platform", ""),
+            "backend": doc.get("backend", ""),
+            "rows": doc.get("rows", []),
+            "results": doc.get("results", {}),
+        })
+    return entries
+
+
+def compare(paths: list[str]) -> None:
+    """Print rows matched by name across trajectory entries."""
+    entries = load_trajectory(paths)
+    names: list[str] = []
+    for e in entries:
+        for r in e["rows"]:
+            if r["name"] not in names:
+                names.append(r["name"])
+    print("name," + ",".join(
+        f"{e['path']}({'smoke' if e['smoke'] else 'full'})" for e in entries
+    ))
+    for name in names:
+        cells = []
+        for e in entries:
+            hit = next((r for r in e["rows"] if r["name"] == name), None)
+            cells.append(f"{hit['us_per_call']:.1f}" if hit else "-")
+        print(f"{name}," + ",".join(cells))
+
 
 def main() -> None:
     from benchmarks import (
+        adaptive_probe,
         amortized_cost,
         decode_fused,
         dist_head,
@@ -47,6 +104,7 @@ def main() -> None:
         "train": train_engine.run,
         "pq": pq_index.run,
         "decode_fused": decode_fused.run,
+        "adaptive": adaptive_probe.run,
         "roofline": roofline_report.run,
     }
     ap = argparse.ArgumentParser()
@@ -56,9 +114,15 @@ def main() -> None:
                     help="write all reported rows + metadata to this path "
                          "(a BENCH_*.json trajectory entry)")
     ap.add_argument("--smoke", action="store_true",
-                    help="pass smoke=True to suites that support it "
-                         "(serve, train, pq, decode_fused)")
+                    help="pass smoke=True to suites that support it: "
+                         f"{SMOKE_SUITES}")
+    ap.add_argument("--compare", nargs="+", default=None, metavar="ENTRY",
+                    help="read BENCH_*.json entries (any schema age) and "
+                         "print side-by-side rows instead of running")
     args = ap.parse_args()
+    if args.compare:
+        compare(args.compare)
+        return
     unknown = [w for w in args.suites if w not in suites]
     if unknown:
         raise SystemExit(f"unknown suite(s) {unknown}; known: {list(suites)}")
@@ -77,7 +141,7 @@ def main() -> None:
     t0 = time.time()
     for key in wanted:
         fn = suites[key]
-        if args.smoke and key in ("serve", "train", "pq", "decode_fused"):
+        if args.smoke and key in SMOKE_SUITES:
             out = fn(report, smoke=True)
         else:
             out = fn(report)
@@ -85,7 +149,7 @@ def main() -> None:
             extra[key] = out
     if args.json_out:
         doc = {
-            "schema": "bench-trajectory-v1",
+            "schema": SCHEMA,
             "suites": wanted,
             # smoke vs full runs measure different grids/step counts —
             # recorded so trajectory entries are only compared like-for-like

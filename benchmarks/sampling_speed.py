@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import build_ivf, clustered_db, random_queries, timeit
 from repro.core.gumbel import default_kl, sample_fixed_b
-from repro.kernels import ref  # noqa: F401  (keeps kernel import warm)
+from repro.kernels import ref  # keeps kernel import warm (ruff.toml)
 
 D = 64
 SIZES = (10_000, 20_000, 40_000, 80_000, 160_000)

@@ -56,6 +56,12 @@ class HeadConfig:
     mode: str = "amortized"  # exact | topk_only | amortized
     mips: str = "exact"  # exact | ivf | ivfpq | lsh  (top-k probe index)
     n_probe: int = 8
+    adaptive_probe: bool = False  # certificate-gated staged widening: probe
+    #   n_probe_init clusters per token, widen geometrically (up to
+    #   n_probe_max) only for tokens whose gap certificate fails
+    #   (core/mips/adaptive.py); requires mips in {ivf, ivfpq}
+    n_probe_init: int = 0  # 0 -> n_probe (adaptive start width)
+    n_probe_max: int = 0  # 0 -> n_probe (adaptive width ceiling)
     use_kernel: bool = False
     fused_decode: bool = False  # decode: single-dispatch Pallas screen/
     #   select + tail/argmax pipeline (kernels/decode_fused.py); samples
@@ -77,6 +83,17 @@ class HeadConfig:
                 f"unknown head MIPS backend {self.mips!r}; "
                 f"valid choices: {_MIPS}"
             )
+        if self.adaptive_probe and self.mips not in ("ivf", "ivfpq"):
+            raise ValueError(
+                "adaptive_probe requires a clustered MIPS backend "
+                f"(ivf | ivfpq), got {self.mips!r}"
+            )
+        init = self.n_probe_init or self.n_probe
+        maxp = self.n_probe_max or self.n_probe
+        if self.adaptive_probe and init > maxp:
+            raise ValueError(
+                f"n_probe_init={init} exceeds n_probe_max={maxp}"
+            )
         k = self.k or default_kl(self.n, self.delta, self.c)
         l = self.l or k
         mode = self.mode
@@ -86,7 +103,9 @@ class HeadConfig:
             mode = "exact"
         k = min(k, self.n // 2)
         l = min(l, self.n // 2)
-        return dataclasses.replace(self, k=k, l=l, mode=mode)
+        return dataclasses.replace(
+            self, k=k, l=l, mode=mode, n_probe_init=init, n_probe_max=maxp
+        )
 
     @property
     def score_dt(self):
@@ -128,14 +147,19 @@ def make_index(
         return None  # exact top-k runs directly off `emb`
     mp = mesh.shape[axis] if mesh is not None else 1
     if cfg.mips == "ivf":
-        mips_cfg = mips.IVFConfig(n_probe=cfg.n_probe, use_kernel=cfg.use_kernel)
+        mips_cfg = mips.IVFConfig(
+            n_probe=cfg.n_probe, n_probe_init=cfg.n_probe_init,
+            n_probe_max=cfg.n_probe_max, use_kernel=cfg.use_kernel,
+        )
     elif cfg.mips == "ivfpq":
         # quantized production index: re-rank pool sized to the PROBED k
         # (per-shard k when sharded), so the exact re-rank always covers
         # the head's candidate set with screening headroom on top
         k_loc = max(8, cfg.k // mp)
         mips_cfg = mips.PQConfig(
-            n_probe=cfg.n_probe, use_kernel=cfg.use_kernel, rerank=2 * k_loc
+            n_probe=cfg.n_probe, n_probe_init=cfg.n_probe_init,
+            n_probe_max=cfg.n_probe_max, use_kernel=cfg.use_kernel,
+            rerank=2 * k_loc,
         )
     else:  # "lsh" (resolved() validated the choices)
         # size buckets so the union of table candidates can cover the
@@ -198,6 +222,7 @@ def head_sample(
     keys: jax.Array | None = None,
     strict: bool = False,
     strict_live: jax.Array | None = None,
+    router: Any = None,
 ) -> SampleResult:
     """Sample next-token ids for a batch of queries h: (T, d).
 
@@ -215,6 +240,12 @@ def head_sample(
     restricts the cond's trigger to live rows — a serving batch's frozen
     slots / admission pad rows sample garbage whose failed certificates
     must not charge the whole dispatch the dense fallback.
+
+    With ``cfg.adaptive_probe`` the probe routes through the index's
+    certificate-gated staged widening (``topk_adaptive``) and the result's
+    ``width`` field carries the per-token effective probe width; ``router``
+    optionally predicts each token's starting stage
+    (repro.models.router.ProbeRouter).
     """
     cfg = cfg.resolved()
     embf = emb.astype(jnp.float32)[: cfg.n]
@@ -234,7 +265,7 @@ def head_sample(
 
     res = est.local_gumbel_max(
         key, embf, h, k=cfg.k, l=cfg.l, index=index, c=cfg.c, keys=keys,
-        fused=cfg.fused_decode,
+        fused=cfg.fused_decode, adaptive=cfg.adaptive_probe, router=router,
     )
     if strict:
         if keys is None:

@@ -352,10 +352,23 @@ def local_gumbel_max(
     m_cap: int | None = None,
     keys: jax.Array | None = None,
     fused: bool = False,
+    adaptive: bool = False,
+    router: Any = None,
 ) -> SampleResult:
     """Batched lazy-Gumbel max over the local rows: per-token SampleResult
     with local ids plus the certificate terms (max_val, bound, overflow)
     that :func:`combine_sample_pmax` re-checks against the global winner.
+
+    ``adaptive=True`` routes the probe through the index's certificate-gated
+    staged widening (``topk_adaptive``, core/mips/adaptive.py) when the
+    index has one: each token probes only as many clusters as its gap
+    certificate needs, and the effective per-token width comes back in
+    ``SampleResult.width`` (None on fixed-width paths). The Algorithm-2
+    certificate below stays the sampling-exactness authority — the gap
+    certificate only routes bandwidth, and widening only ever grows the
+    candidate pool, so the TV-at-measured-recall machinery applies
+    unchanged. ``router`` (repro.models.router.ProbeRouter, optional)
+    predicts each query's starting stage.
 
     ``keys`` (optional, (T,) typed PRNG keys) pins each token's randomness
     explicitly instead of deriving it as ``fold_in(key, row)`` — the serving
@@ -380,8 +393,19 @@ def local_gumbel_max(
         m_cap = int(l + 6 * math.sqrt(l) + 8)
     embf = emb.astype(jnp.float32)
     hf = h.astype(jnp.float32)
+    width = None
     screen = getattr(index, "screen_select", None) if fused else None
-    if screen is not None:
+    if adaptive and hasattr(index, "topk_adaptive"):
+        atk = index.topk_adaptive(hf, k, c=c, fused=fused, router=router)
+        # same dead-slot masking as topk_probe's index branch
+        ids = atk.ids.astype(jnp.int32)
+        ok = ids >= 0
+        if n_valid is not None:
+            ok &= ids < n_valid
+        topk = TopK(ids, jnp.where(ok, atk.values.astype(jnp.float32),
+                                   -jnp.inf))
+        width = atk.width
+    elif screen is not None:
         tk = screen(hf, k)
         # same dead-slot masking as topk_probe's index branch
         ids = tk.ids.astype(jnp.int32)
@@ -403,19 +427,24 @@ def local_gumbel_max(
         )
 
     if fused:
-        return _fused_tail_argmax(
+        res = _fused_tail_argmax(
             keys, embf, hf, ids_clean, topk.values, k_valid, nv,
             l=l, m_cap=m_cap, c=c,
         )
+    else:
+        def one(kk, tk_ids, tk_vals, kv, hh):
+            score_fn = (
+                lambda ids: embf[jnp.minimum(ids, emb.shape[0] - 1)] @ hh
+            )
+            return sample_fixed_b(
+                kk, TopK(tk_ids, tk_vals), nv, score_fn, l=l, m_cap=m_cap,
+                c=c, k_valid=kv,
+            )
 
-    def one(kk, tk_ids, tk_vals, kv, hh):
-        score_fn = lambda ids: embf[jnp.minimum(ids, emb.shape[0] - 1)] @ hh
-        return sample_fixed_b(
-            kk, TopK(tk_ids, tk_vals), nv, score_fn, l=l, m_cap=m_cap, c=c,
-            k_valid=kv,
-        )
-
-    return jax.vmap(one)(keys, ids_clean, topk.values, k_valid, hf)
+        res = jax.vmap(one)(keys, ids_clean, topk.values, k_valid, hf)
+    if width is not None:
+        res = res._replace(width=width.astype(jnp.int32))
+    return res
 
 
 def _fused_tail_argmax(

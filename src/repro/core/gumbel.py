@@ -52,6 +52,7 @@ __all__ = [
     "TailPlan",
     "plan_tail",
     "certificate",
+    "gap_certificate",
     "sample_adaptive_b",
     "sample_fixed_b",
     "gumbel_max_dense",
@@ -75,6 +76,9 @@ class SampleResult(NamedTuple):
     #                     are provably below this (distributed combining
     #                     re-checks it against the *global* winner)
     overflow: jax.Array  # () bool — static tail buffer overflowed
+    width: jax.Array | None = None  # () int32 — effective probe width when
+    #   the adaptive staged probe produced the top-k (None on fixed-width
+    #   paths; the serving engine bins these into stats["probe_width_hist"])
 
 
 def default_kl(n: int, delta: float = 1e-4, c: float = 0.0) -> int:
@@ -151,6 +155,20 @@ def certificate(
     bound = jnp.where(jnp.isnan(bound), -jnp.inf, bound)
     ok = (max_val >= bound) & ~overflow
     return ok, bound
+
+
+def gap_certificate(
+    s_min: jax.Array, upper: jax.Array, c: float = 0.0
+) -> jax.Array:
+    """Adaptive-probe stopping rule: the candidate pool is a certified
+    c-approximate top-k (Def 3.1) iff every unprobed score is provably
+    <= ``s_min + c``, where ``s_min`` is the k-th best candidate found and
+    ``upper`` a sound bound on anything not yet probed
+    (:func:`repro.core.mips.adaptive.unprobed_bound_table`). Underfilled
+    pools carry ``s_min = -inf`` and only pass once nothing is left
+    unprobed (``upper = -inf``) — exhaustive coverage of a db smaller
+    than k is exact by definition."""
+    return upper <= s_min + c
 
 
 def _finish(

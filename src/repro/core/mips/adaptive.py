@@ -1,0 +1,165 @@
+"""Certificate-gated adaptive probe widening (staged per-query ``n_probe``).
+
+Fixed-width probing sizes ``n_probe`` for the worst query, so the common
+easy query pays the hard query's bandwidth. This module makes the probe
+width a per-query, data-dependent quantity: probe an initial prefix of
+``n_probe_init`` clusters in descending centroid-score order, evaluate a
+Def-3.1-style exactness certificate on the candidate pool, and widen on a
+geometric schedule (doubling up to ``n_probe_max``) only for the queries
+whose certificate fails.
+
+Stop rule (the approximate-top-k gap as a *computable* certificate)
+-------------------------------------------------------------------
+At build time each cluster stores its residual radius
+``rad_j = max_{x in j} ||x - c_j||``. For a query q, Cauchy–Schwarz bounds
+every row of cluster j by ``q·x <= q·c_j + ||q||·rad_j =: bound_j``. After
+probing the ``w`` highest-scoring clusters, let ``U(w)`` be the max of
+``bound_j`` over the *unprobed* clusters (ranks >= w) and ``s_min`` the
+k-th best candidate value found so far. If ``U(w) <= s_min + c`` then no
+unprobed row can displace the current top-k beyond the configured gap
+``c`` — the candidate set is a certified c-approximate top-k (exactly the
+set Algorithm 2's exactness guarantee assumes), so widening stops. Rows in
+the always-scanned overflow buffer are in the pool at every width, so only
+unprobed *clusters* enter ``U``; a nonzero build ``spill_count`` voids the
+bound (dropped rows are nowhere), failing the certificate at every stage.
+
+The staged search is a ``lax.while_loop`` over a static geometric width
+schedule with batch-level early exit: one program regardless of how many
+stages any query needs, so a fused decode dispatch stays a single program.
+With ``n_probe_init == n_probe_max`` the schedule has one stage whose
+masks are all-true, making the adaptive query BITWISE identical to the
+fixed-width ``topk_batch`` (asserted in tests/test_adaptive.py).
+
+An optional learned router (:mod:`repro.models.router`) predicts each
+query's certificate-passing stage from its centroid-score gap profile and
+starts the schedule there instead of at stage 0 — the certificate still
+gates every widening step, so a mispredicting router costs bandwidth,
+never correctness.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gumbel import gap_certificate
+
+__all__ = [
+    "AdaptiveTopK",
+    "stage_widths",
+    "unprobed_bound_table",
+    "staged_widen",
+]
+
+
+class AdaptiveTopK(NamedTuple):
+    """Adaptive-probe query result: the top-k plus per-query routing facts."""
+
+    ids: jax.Array  # (b, k) int32 (-1 = dead slot)
+    values: jax.Array  # (b, k) f32, descending (-inf = dead)
+    width: jax.Array  # (b,) int32 — clusters actually probed (the stage
+    #   the query stopped at; the probed-bytes accounting reads this)
+    certified: jax.Array  # (b,) bool — gap certificate passed at ``width``
+    #   (False => the query widened to n_probe_max and still failed)
+
+
+def stage_widths(init: int, maximum: int) -> tuple[int, ...]:
+    """Static geometric widening schedule: init, 2·init, ... capped at
+    ``maximum`` (always included as the final stage)."""
+    init = max(1, min(init, maximum))
+    widths = [init]
+    while widths[-1] < maximum:
+        widths.append(min(2 * widths[-1], maximum))
+    return tuple(widths)
+
+
+def unprobed_bound_table(
+    c_scores: jax.Array, radii: jax.Array, qf: jax.Array
+) -> jax.Array:
+    """Suffix table of unprobed-cluster score bounds.
+
+    Returns U of shape (b, n_c + 1) with ``U[:, w] = max_j bound_j`` over
+    the clusters ranked >= w by descending centroid score (the clusters a
+    width-w probe leaves untouched); ``U[:, n_c] = -inf`` (nothing left).
+    Empty clusters carry ``radii = -inf`` and bound nothing.
+    """
+    b = c_scores.shape[0]
+    q_norm = jnp.linalg.norm(qf, axis=1, keepdims=True)  # (b, 1)
+    bounds = jnp.where(
+        jnp.isneginf(radii)[None, :],
+        -jnp.inf,
+        c_scores + q_norm * radii[None, :],
+    )
+    order = jnp.argsort(-c_scores, axis=1)
+    ranked = jnp.take_along_axis(bounds, order, axis=1)
+    suffix = jax.lax.cummax(ranked[:, ::-1], axis=1)[:, ::-1]
+    return jnp.concatenate(
+        [suffix, jnp.full((b, 1), -jnp.inf, suffix.dtype)], axis=1
+    )
+
+
+def staged_widen(
+    stage_fn,
+    bound_table: jax.Array,
+    widths: tuple[int, ...],
+    k: int,
+    *,
+    c: float = 0.0,
+    no_spill: jax.Array | bool = True,
+    init_stage: jax.Array | None = None,
+) -> AdaptiveTopK:
+    """The staged-widening driver: a ``lax.while_loop`` over the static
+    width schedule with batch-level early exit.
+
+    ``stage_fn(width (b,) i32) -> (values (b, k) f32 desc, ids (b, k))``
+    evaluates one stage at a per-row width (0 = probe nothing but the
+    overflow buffer — used for rows that already stopped, so a fused
+    kernel stage skips their DMA and MXU work). ``bound_table`` is
+    :func:`unprobed_bound_table`'s output. Each row advances one stage per
+    iteration until its certificate passes or the schedule is exhausted;
+    the loop exits as soon as every row is done, so a batch of easy
+    queries runs exactly one stage.
+    """
+    n_stages = len(widths)
+    widths_arr = jnp.asarray(widths, jnp.int32)
+    b = bound_table.shape[0]
+    n_c = bound_table.shape[1] - 1
+    st0 = (
+        jnp.zeros((b,), jnp.int32)
+        if init_stage is None
+        else jnp.clip(init_stage.astype(jnp.int32), 0, n_stages - 1)
+    )
+    spill_ok = jnp.broadcast_to(jnp.asarray(no_spill, bool), (b,))
+
+    def cond(carry):
+        _, done, _, _, _, trip = carry
+        return (trip < n_stages) & ~jnp.all(done)
+
+    def body(carry):
+        st, done, cert, vals, ids, trip = carry
+        w = jnp.where(done, 0, widths_arr[st])
+        v_s, i_s = stage_fn(w)
+        s_min = v_s[:, -1]  # k-th best so far (-inf while pool underfills)
+        upper = jnp.take_along_axis(
+            bound_table, jnp.minimum(widths_arr[st], n_c)[:, None], axis=1
+        )[:, 0]
+        ok = gap_certificate(s_min, upper, c) & spill_ok
+        newly = ~done
+        vals = jnp.where(newly[:, None], v_s, vals)
+        ids = jnp.where(newly[:, None], i_s, ids)
+        cert = cert | (newly & ok)
+        done = done | ok | (st >= n_stages - 1)
+        st = jnp.where(done, st, st + 1)
+        return st, done, cert, vals, ids, trip + 1
+
+    init = (
+        st0,
+        jnp.zeros((b,), bool),
+        jnp.zeros((b,), bool),
+        jnp.full((b, k), -jnp.inf, jnp.float32),
+        jnp.full((b, k), -1, jnp.int32),
+        jnp.int32(0),
+    )
+    st, _, cert, vals, ids, _ = jax.lax.while_loop(cond, body, init)
+    return AdaptiveTopK(ids, vals, widths_arr[st], cert)

@@ -34,11 +34,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gumbel import TopK
-from repro.core.mips import base
+from repro.core.mips import adaptive, base
 from repro.core.quant.kmeans import assign_clusters as _assign_clusters
 from repro.core.quant.kmeans import lloyd as _lloyd
 
 __all__ = ["IVFConfig", "IVFIndex", "IVFState"]
+
+
+def _pad_pool(
+    scores: jax.Array, ids: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Pad a candidate pool narrower than k with dead slots (-inf, -1)."""
+    if scores.shape[1] < k:
+        pad = k - scores.shape[1]
+        scores = jnp.pad(scores, ((0, 0), (0, pad)),
+                         constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    return scores, ids
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +69,8 @@ class IVFConfig:
     refresh_iters: int = 2  # warm-started iterations per refresh
     seed: int = 0
     n_probe: int = 8  # clusters probed per query
+    n_probe_init: int = 0  # adaptive probe: starting width (0 -> n_probe)
+    n_probe_max: int = 0  # adaptive probe: widening ceiling (0 -> n_probe)
     use_kernel: bool = False  # Pallas gather+score kernel on the probe
     device_build: bool = True  # False: host-numpy reference build
 
@@ -68,6 +82,9 @@ class IVFState(NamedTuple):
     overflow_ids: jax.Array  # (o_cap,) i32, -1 padded
     overflow_vecs: jax.Array  # (o_cap, d)
     spill_count: jax.Array  # () i32 — rows that fit neither table (0 = exact)
+    radii: jax.Array  # (n_c,) f32 — max ||x - c_j|| over rows assigned to
+    #   cluster j (-inf for empty clusters): the adaptive probe's
+    #   Cauchy-Schwarz bound on unprobed cluster scores (adaptive.py)
 
     @property
     def n_clusters(self) -> int:
@@ -148,6 +165,22 @@ def _pack(
     return member_ids, member_vecs, overflow_ids, overflow_vecs, spill
 
 
+def _cluster_radii(
+    dbf: jax.Array, cent: jax.Array, assign: jax.Array
+) -> jax.Array:
+    """Per-cluster residual radius ``max ||x - c_j||`` over ALL rows
+    assigned to j (including rows that later spill to the overflow buffer —
+    a harmless overestimate, since overflow rows are scanned at every
+    width). Empty clusters report -inf so they bound nothing."""
+    rn = jnp.linalg.norm(dbf - cent[assign], axis=1)
+    n_c = cent.shape[0]
+    radii = jax.ops.segment_max(rn, assign, num_segments=n_c)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(assign, jnp.int32), assign, num_segments=n_c
+    )
+    return jnp.where(counts > 0, radii, -jnp.inf).astype(jnp.float32)
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_c", "cap", "o_cap", "iters", "seed")
 )
@@ -175,8 +208,10 @@ def _device_build(
     member_ids, member_vecs, overflow_ids, overflow_vecs, spill = _pack(
         db, assign, n_c, cap, o_cap
     )
+    radii = _cluster_radii(dbf, cent, assign)
     return IVFState(
-        cent, member_ids, member_vecs, overflow_ids, overflow_vecs, spill
+        cent, member_ids, member_vecs, overflow_ids, overflow_vecs, spill,
+        radii,
     )
 
 
@@ -226,6 +261,9 @@ def _host_build(
     overflow_vecs = np.where(
         (overflow_ids >= 0)[..., None], db_dt[np.maximum(overflow_ids, 0)], 0
     )
+    rn = np.linalg.norm(db_np - cent[assign], axis=1)
+    radii = np.full(n_c, -np.inf, dtype=np.float32)
+    np.maximum.at(radii, assign, rn.astype(np.float32))
     return IVFState(
         centroids=jnp.asarray(cent),
         member_ids=jnp.asarray(member_ids),
@@ -233,6 +271,7 @@ def _host_build(
         overflow_ids=jnp.asarray(overflow_ids),
         overflow_vecs=jnp.asarray(overflow_vecs, dtype=db.dtype),
         spill_count=jnp.asarray(spill, jnp.int32),
+        radii=jnp.asarray(radii, jnp.float32),
     )
 
 
@@ -291,17 +330,15 @@ class IVFIndex:
         res = self.topk_batch(q[None], k, n_probe=n_probe)
         return TopK(res.ids[0], res.values[0])
 
-    def topk_batch(
-        self, q: jax.Array, k: int, *, n_probe: int | None = None
-    ) -> TopK:
-        """Approximate top-k for a query batch (b, d) -> TopK[(b,k), (b,k)]."""
+    def _pool_scores(
+        self, qf: jax.Array, probe: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Member + overflow candidate pool for the given probe list:
+        (scores, ids) of shape (b, n_probe·cap + o_cap). Padded slots carry
+        id -1; their scores are NOT yet masked (callers apply their own
+        liveness mask so the fixed and adaptive paths share this exactly)."""
         state = self.state
-        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
-        b, d = q.shape
-        qf = q.astype(jnp.float32)
-        c_scores = qf @ state.centroids.T  # (b, n_c)
-        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
-
+        b = qf.shape[0]
         if self.config.use_kernel:
             from repro.kernels import ops as kops
 
@@ -325,14 +362,86 @@ class IVFIndex:
             ],
             axis=1,
         )
+        return scores, ids
+
+    def topk_batch(
+        self, q: jax.Array, k: int, *, n_probe: int | None = None
+    ) -> TopK:
+        """Approximate top-k for a query batch (b, d) -> TopK[(b,k), (b,k)]."""
+        state = self.state
+        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
+        qf = q.astype(jnp.float32)
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+        scores, ids = self._pool_scores(qf, probe)
         scores = jnp.where(ids >= 0, scores, -jnp.inf)
-        if scores.shape[1] < k:  # fewer candidates than k: pad dead slots
-            pad = k - scores.shape[1]
-            scores = jnp.pad(scores, ((0, 0), (0, pad)),
-                             constant_values=-jnp.inf)
-            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        scores, ids = _pad_pool(scores, ids, k)
         vals, pos = jax.lax.top_k(scores, k)
         return TopK(jnp.take_along_axis(ids, pos, axis=1), vals)
+
+    def topk_adaptive(
+        self,
+        q: jax.Array,
+        k: int,
+        *,
+        c: float = 0.0,
+        n_probe_init: int | None = None,
+        n_probe_max: int | None = None,
+        fused: bool = False,
+        router=None,
+    ) -> "adaptive.AdaptiveTopK":
+        """Certificate-gated staged probe: start at ``n_probe_init``
+        clusters, widen geometrically (per query) until the gap certificate
+        (:func:`repro.core.gumbel.gap_certificate`) passes or the width
+        hits ``n_probe_max``. With init == max this is one all-true-masked
+        stage, bitwise identical to :meth:`topk_batch` /
+        :meth:`screen_select`. ``router`` (optional,
+        :class:`repro.models.router.ProbeRouter`) picks the starting stage
+        per query; the certificate still gates every widening step."""
+        state = self.state
+        cfg = self.config
+        n_c = state.n_clusters
+        w_max = min(n_probe_max or cfg.n_probe_max or cfg.n_probe, n_c)
+        init = min(n_probe_init or cfg.n_probe_init or cfg.n_probe, w_max)
+        widths = adaptive.stage_widths(init, w_max)
+        qf = q.astype(jnp.float32)
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        bound_table = adaptive.unprobed_bound_table(c_scores, state.radii, qf)
+        _, probe = jax.lax.top_k(c_scores, w_max)
+        init_stage = (
+            None if router is None
+            else router.init_stage(c_scores, qf, widths)
+        )
+
+        if fused:
+            from repro.kernels import ops as kops
+
+            o_scores = (state.overflow_vecs.astype(jnp.float32) @ qf.T).T
+
+            def stage_fn(w):
+                return kops.ivf_screen_select(
+                    state.member_vecs, state.member_ids, o_scores,
+                    state.overflow_ids, probe, qf, k=k, probe_width=w,
+                )
+        else:
+            scores, ids = self._pool_scores(qf, probe)
+            cap = state.cap
+            slot = jnp.arange(scores.shape[1], dtype=jnp.int32)
+            member_slot = slot < w_max * cap  # overflow slots always live
+
+            def stage_fn(w):
+                live = ~member_slot[None, :] | (
+                    slot[None, :] < (w * cap)[:, None]
+                )
+                sc = jnp.where((ids >= 0) & live, scores, -jnp.inf)
+                sc, sids = _pad_pool(sc, ids, k)
+                vals, pos = jax.lax.top_k(sc, k)
+                return vals, jnp.take_along_axis(sids, pos, axis=1)
+
+        return adaptive.staged_widen(
+            stage_fn, bound_table, widths, k, c=c,
+            no_spill=state.spill_count == 0, init_stage=init_stage,
+        )
 
     def screen_select(
         self, q: jax.Array, k: int, *, n_probe: int | None = None

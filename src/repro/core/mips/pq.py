@@ -65,8 +65,8 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.gumbel import TopK
-from repro.core.mips import base
-from repro.core.mips.ivf import _geometry, _pack_ids
+from repro.core.mips import adaptive, base
+from repro.core.mips.ivf import _cluster_radii, _geometry, _pack_ids, _pad_pool
 from repro.core.quant.kmeans import assign_clusters, lloyd
 
 __all__ = ["PQConfig", "IVFPQIndex", "PQState"]
@@ -93,6 +93,11 @@ class PQConfig:
     rerank: int = 0  # top-r LUT candidates re-ranked exactly; 0 -> 2k
     seed: int = 0
     n_probe: int = 8  # clusters probed per query
+    n_probe_init: int = 0  # adaptive probe: starting width (0 -> n_probe)
+    n_probe_max: int = 0  # adaptive probe: widening ceiling (0 -> n_probe)
+    anisotropic_eta: float = 0.0  # ScaNN-style codebook training: weight of
+    #   the query-parallel residual component in the Lloyd objective
+    #   (quant.train_codebooks); 0 -> standard (isotropic) k-means
     use_kernel: bool = False  # Pallas LUT-scoring kernel on the screen
 
 
@@ -106,6 +111,10 @@ class PQState(NamedTuple):
     rerank_spill: jax.Array  # () i32 — configured re-rank slots the probed
     #   pool can never fill (rerank > n_probe·cap + o_cap); 0 on any sane
     #   geometry. Counted by base.index_spill alongside spill_count.
+    radii: jax.Array  # (n_c,) f32 — max ||x - c_j|| over rows assigned to
+    #   cluster j (-inf for empty clusters): the adaptive probe's
+    #   Cauchy-Schwarz bound on unprobed cluster scores (adaptive.py);
+    #   sound for the EXACT re-ranked values the certificate reads
     db: jax.Array  # (n, d) fp re-rank rows: the CALLER's db handle (same
     #   buffer, eager paths) — not index-owned memory; see module doc
 
@@ -141,7 +150,8 @@ def _pq_geometry(n: int, d: int, cfg: PQConfig) -> tuple[int, int, int, int]:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n_c", "cap", "o_cap", "m_sub", "ksub", "iters", "pq_iters", "seed"
+        "n_c", "cap", "o_cap", "m_sub", "ksub", "iters", "pq_iters", "seed",
+        "anisotropic_eta",
     ),
 )
 def _device_build(
@@ -157,6 +167,7 @@ def _device_build(
     iters: int,
     pq_iters: int,
     seed: int,
+    anisotropic_eta: float = 0.0,
 ) -> tuple:
     """Quantized structures of a full IVF-PQ (re)build as one XLA program:
     coarse k-means + packing + residual codebook training + encode.
@@ -181,13 +192,17 @@ def _device_build(
 
     residuals = dbf - cent[assign]  # (n, d)
     codebooks = quant.train_codebooks(
-        residuals, m_sub, ksub, pq_iters, seed=seed + 1, init=init_codebooks
+        residuals, m_sub, ksub, pq_iters, seed=seed + 1, init=init_codebooks,
+        anisotropic_eta=anisotropic_eta, anchors=dbf,
     )
     codes = quant.encode(codebooks, residuals)  # (n, m_sub) uint8
     member_codes = jnp.where(
         (member_ids >= 0)[..., None], codes[jnp.maximum(member_ids, 0)], 0
     )  # (n_c, cap, m_sub)
-    return cent, codebooks, member_ids, member_codes, overflow_ids, spill
+    radii = _cluster_radii(dbf, cent, assign)
+    return (
+        cent, codebooks, member_ids, member_codes, overflow_ids, spill, radii
+    )
 
 
 @base.register_backend(PQConfig)
@@ -208,7 +223,7 @@ class IVFPQIndex:
         parts = _device_build(
             db, None, None, n_c=n_c, cap=cap, o_cap=o_cap, m_sub=cfg.m_sub,
             ksub=ksub, iters=cfg.kmeans_iters, pq_iters=cfg.pq_iters,
-            seed=cfg.seed,
+            seed=cfg.seed, anisotropic_eta=cfg.anisotropic_eta,
         )
         return cls(cfg, cls._assemble(cfg, parts, db))
 
@@ -221,7 +236,8 @@ class IVFPQIndex:
         no fp bytes. (Inside a trace — the sharded shard_map build — the
         passthrough necessarily materializes as a per-shard copy of the
         shard's slice; see ShardedIndex.memory_bytes's note.)"""
-        cent, codebooks, member_ids, member_codes, overflow_ids, spill = parts
+        (cent, codebooks, member_ids, member_codes, overflow_ids, spill,
+         radii) = parts
         state = PQState(
             centroids=cent,
             codebooks=codebooks,
@@ -230,6 +246,7 @@ class IVFPQIndex:
             overflow_ids=overflow_ids,
             spill_count=spill,
             rerank_spill=jnp.zeros((), jnp.int32),
+            radii=radii,
             db=db,
         )
         return IVFPQIndex._stamp_rerank_spill(cfg, state)
@@ -270,6 +287,7 @@ class IVFPQIndex:
             iters=self.config.refresh_iters if iters is None else iters,
             pq_iters=self.config.pq_refresh_iters,
             seed=self.config.seed,
+            anisotropic_eta=self.config.anisotropic_eta,
         )
         return IVFPQIndex(self.config, self._assemble(self.config, parts, db))
 
@@ -285,22 +303,18 @@ class IVFPQIndex:
         res = self.topk_batch(q[None], k, n_probe=n_probe)
         return TopK(res.ids[0], res.values[0])
 
-    def topk_batch(
-        self, q: jax.Array, k: int, *, n_probe: int | None = None
-    ) -> TopK:
-        """LUT-screened, exactly re-ranked top-k: (b, d) -> TopK[(b, k)].
-
-        Returned values are EXACT inner products of the surviving rows
-        (stage-3 re-rank), so dead slots are the only -inf entries and the
-        estimator-side recall accounting needs no PQ-specific handling.
-        """
+    def _screen_pool(
+        self, qf: jax.Array, probe: jax.Array, c_scores: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """LUT screening pool for the given probe list: (scores, ids) of
+        shape (b, n_probe·cap + o_cap) — ADC member scores plus the EXACT
+        overflow scores. Padded slots carry id -1; their scores are NOT yet
+        masked (callers apply their own liveness mask so the fixed and
+        adaptive paths share this exactly)."""
         state = self.state
-        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
-        b, d = q.shape
-        qf = q.astype(jnp.float32)
+        b = qf.shape[0]
+        n_probe = probe.shape[1]
         dbf = state.db
-        c_scores = qf @ state.centroids.T  # (b, n_c)
-        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
         lut = quant.build_lut(state.codebooks, qf)  # (b, m, ksub)
 
         if self.config.use_kernel:
@@ -330,15 +344,13 @@ class IVFPQIndex:
         ids = jnp.concatenate(
             [ids, jnp.broadcast_to(o_ids, (b,) + o_ids.shape)], axis=1
         )
-        scores = jnp.where(ids >= 0, scores, -jnp.inf)
-        if scores.shape[1] < k:  # fewer candidates than k: pad dead slots
-            pad = k - scores.shape[1]
-            scores = jnp.pad(scores, ((0, 0), (0, pad)),
-                             constant_values=-jnp.inf)
-            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        return scores, ids
 
-        # stage 3: exact re-rank of the top-r LUT candidates with fp rows
-        r = self._resolved_rerank(k, scores.shape[1])
+    def _rerank_pool(
+        self, scores: jax.Array, ids: jax.Array, qf: jax.Array, k: int, r: int
+    ) -> TopK:
+        """Stage 3: exact re-rank of the top-r LUT candidates with fp rows."""
+        dbf = self.state.db
         lut_vals, pos = jax.lax.top_k(scores, r)
         cand = jnp.take_along_axis(ids, pos, axis=1)  # (b, r)
         rows = dbf[jnp.maximum(cand, 0)].astype(jnp.float32)  # (b, r, d)
@@ -348,6 +360,105 @@ class IVFPQIndex:
         )
         vals, p2 = jax.lax.top_k(exact, k)
         return TopK(jnp.take_along_axis(cand, p2, axis=1), vals)
+
+    def topk_batch(
+        self, q: jax.Array, k: int, *, n_probe: int | None = None
+    ) -> TopK:
+        """LUT-screened, exactly re-ranked top-k: (b, d) -> TopK[(b, k)].
+
+        Returned values are EXACT inner products of the surviving rows
+        (stage-3 re-rank), so dead slots are the only -inf entries and the
+        estimator-side recall accounting needs no PQ-specific handling.
+        """
+        state = self.state
+        n_probe = min(n_probe or self.config.n_probe, state.n_clusters)
+        qf = q.astype(jnp.float32)
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        _, probe = jax.lax.top_k(c_scores, n_probe)  # (b, n_probe)
+        scores, ids = self._screen_pool(qf, probe, c_scores)
+        scores = jnp.where(ids >= 0, scores, -jnp.inf)
+        scores, ids = _pad_pool(scores, ids, k)
+        r = self._resolved_rerank(k, scores.shape[1])
+        return self._rerank_pool(scores, ids, qf, k, r)
+
+    def topk_adaptive(
+        self,
+        q: jax.Array,
+        k: int,
+        *,
+        c: float = 0.0,
+        n_probe_init: int | None = None,
+        n_probe_max: int | None = None,
+        fused: bool = False,
+        router=None,
+    ) -> "adaptive.AdaptiveTopK":
+        """Certificate-gated staged probe (see ``IVFIndex.topk_adaptive``).
+
+        The gap certificate reads the stage's EXACT re-ranked values, for
+        which the centroid + radius bound is sound; LUT-screening misses
+        *within* probed clusters are not the certificate's concern (they
+        are the re-rank recall the benchmarks measure, unchanged from the
+        fixed-width pipeline). With init == max this is one all-true-masked
+        stage, bitwise identical to :meth:`topk_batch` /
+        :meth:`screen_select`."""
+        state = self.state
+        cfg = self.config
+        n_c = state.n_clusters
+        w_max = min(n_probe_max or cfg.n_probe_max or cfg.n_probe, n_c)
+        init = min(n_probe_init or cfg.n_probe_init or cfg.n_probe, w_max)
+        widths = adaptive.stage_widths(init, w_max)
+        qf = q.astype(jnp.float32)
+        c_scores = qf @ state.centroids.T  # (b, n_c)
+        bound_table = adaptive.unprobed_bound_table(c_scores, state.radii, qf)
+        _, probe = jax.lax.top_k(c_scores, w_max)
+        init_stage = (
+            None if router is None
+            else router.init_stage(c_scores, qf, widths)
+        )
+
+        if fused:
+            from repro.kernels import ops as kops
+
+            dbf = state.db
+            coarse = jnp.take_along_axis(c_scores, probe, axis=1)
+            o_ids = state.overflow_ids
+            o_vecs = jnp.where(
+                (o_ids >= 0)[:, None],
+                dbf[jnp.maximum(o_ids, 0)].astype(jnp.float32),
+                0.0,
+            )
+            o_scores = (o_vecs @ qf.T).T
+            lut = quant.build_lut(state.codebooks, qf)
+            pool = w_max * state.cap + o_ids.shape[0]
+            r = self._resolved_rerank(k, max(pool, k))
+
+            def stage_fn(w):
+                lut_vals, cand = kops.pq_screen_select(
+                    state.member_codes, state.member_ids, coarse, o_scores,
+                    o_ids, probe, lut, r=r, probe_width=w,
+                )
+                return kops.rerank_select(dbf, cand, lut_vals, qf, k=k)
+        else:
+            scores, ids = self._screen_pool(qf, probe, c_scores)
+            cap = state.cap
+            slot = jnp.arange(scores.shape[1], dtype=jnp.int32)
+            member_slot = slot < w_max * cap  # overflow slots always live
+            pool = max(scores.shape[1], k)
+            r = self._resolved_rerank(k, pool)
+
+            def stage_fn(w):
+                live = ~member_slot[None, :] | (
+                    slot[None, :] < (w * cap)[:, None]
+                )
+                sc = jnp.where((ids >= 0) & live, scores, -jnp.inf)
+                sc, sids = _pad_pool(sc, ids, k)
+                tk = self._rerank_pool(sc, sids, qf, k, r)
+                return tk.values, tk.ids
+
+        return adaptive.staged_widen(
+            stage_fn, bound_table, widths, k, c=c,
+            no_spill=state.spill_count == 0, init_stage=init_stage,
+        )
 
     def screen_select(
         self, q: jax.Array, k: int, *, n_probe: int | None = None
@@ -407,7 +518,7 @@ class IVFPQIndex:
         st = self.state
         return base.state_bytes(
             (st.centroids, st.codebooks, st.member_ids, st.member_codes,
-             st.overflow_ids, st.spill_count, st.rerank_spill)
+             st.overflow_ids, st.spill_count, st.rerank_spill, st.radii)
         )
 
     # --------------------------------------------------------------- pytree

@@ -35,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.gumbel import TopK
 from repro.core.mips import base
+from repro.core.mips.adaptive import AdaptiveTopK
 from repro.core.mips.exact import ExactConfig
 from repro.core.mips.ivf import IVFConfig
 from repro.core.mips.pq import PQConfig
@@ -254,6 +255,61 @@ class ShardedIndex:
     def topk(self, q: jax.Array, k: int) -> TopK:
         res = self.topk_batch(q[None], k)
         return TopK(res.ids[0], res.values[0])
+
+    def topk_adaptive(
+        self,
+        q: jax.Array,
+        k: int,
+        *,
+        c: float = 0.0,
+        n_probe_init: int | None = None,
+        n_probe_max: int | None = None,
+        fused: bool = False,
+        router=None,
+    ) -> AdaptiveTopK:
+        """GLOBAL certificate-gated adaptive probe: each shard runs its own
+        staged widening over its local clusters, results merge exactly like
+        :meth:`topk_batch`. The reported ``width`` is the max over shards
+        (shards probe in parallel, so the widest one is the critical path)
+        and ``certified`` the AND — the global pool is a certified
+        c-approximate top-k only if every shard's local pool is."""
+        backend = base.backend_cls(self.config)
+        if not hasattr(backend, "topk_adaptive"):
+            raise TypeError(
+                f"backend {backend.__name__} has no adaptive probe"
+            )
+        axis, n_local = self.axis, self.n_local
+
+        def local(q_loc, state_loc):
+            ix = self.local_index(state_loc)
+            atk = ix.topk_adaptive(
+                q_loc, k, c=c, n_probe_init=n_probe_init,
+                n_probe_max=n_probe_max, fused=fused, router=router,
+            )
+            off = jax.lax.axis_index(axis) * n_local
+            gid = jnp.where(atk.ids >= 0, atk.ids + off, -1)
+            vals = jnp.where(atk.ids >= 0, atk.values, -jnp.inf)
+            av = jax.lax.all_gather(vals, axis)  # (mp, b, k)
+            ag = jax.lax.all_gather(gid, axis)
+            aw = jax.lax.all_gather(atk.width, axis)  # (mp, b)
+            ac = jax.lax.all_gather(atk.certified, axis)
+            b = q_loc.shape[0]
+            av = jnp.moveaxis(av, 0, 1).reshape(b, -1)
+            ag = jnp.moveaxis(ag, 0, 1).reshape(b, -1)
+            v, pos = jax.lax.top_k(av, k)
+            return AdaptiveTopK(
+                jnp.take_along_axis(ag, pos, axis=1), v,
+                aw.max(axis=0), ac.all(axis=0),
+            )
+
+        fn = shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(), self.state_specs()),
+            out_specs=AdaptiveTopK(P(), P(), P(), P()),
+            check_vma=False,
+        )
+        return fn(q, self.state)
 
     def memory_bytes(self) -> int:
         """Backend-accounted bytes, summed over shards. Delegating to the

@@ -22,7 +22,11 @@ candidates.
 """
 from __future__ import annotations
 
-from repro.core.quant.kmeans import subspace_kmeans
+from repro.core.quant.kmeans import (
+    anisotropic_lloyd,
+    anisotropic_subspace_kmeans,
+    subspace_kmeans,
+)
 from repro.core.quant.pq import (
     build_lut,
     decode,
@@ -33,6 +37,8 @@ from repro.core.quant.pq import (
 
 __all__ = [
     "subspace_kmeans",
+    "anisotropic_lloyd",
+    "anisotropic_subspace_kmeans",
     "train_codebooks",
     "encode",
     "decode",

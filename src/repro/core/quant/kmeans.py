@@ -16,7 +16,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["assign_clusters", "lloyd", "subspace_kmeans"]
+__all__ = [
+    "assign_clusters",
+    "lloyd",
+    "subspace_kmeans",
+    "anisotropic_lloyd",
+    "anisotropic_subspace_kmeans",
+]
 
 
 def assign_clusters(x: jax.Array, cent: jax.Array) -> jax.Array:
@@ -60,3 +66,70 @@ def subspace_kmeans(
     return jax.vmap(lambda xs, cs: lloyd(xs, cs, iters))(
         x.astype(jnp.float32), init.astype(jnp.float32)
     )
+
+
+def anisotropic_lloyd(
+    x: jax.Array,  # (n, d) training rows (PQ residuals)
+    u: jax.Array,  # (n, d) per-row score-sensitive directions (see below)
+    cent: jax.Array,  # (k, d) initial centroids
+    iters: int,
+    eta: float,
+) -> jax.Array:
+    """Weighted Lloyd under the ScaNN-style score-aware loss
+    (Guo et al. 2020, PAPERS.md): per row, the quantization error is split
+    against the row's direction ``u`` into a query-parallel and an
+    orthogonal component, and the parallel one — the part that perturbs
+    inner-product *scores* for the queries that matter, those scoring the
+    row highly — is up-weighted by ``eta``:
+
+        loss(r, c) = η·⟨r-c, u⟩² + ||r-c||² - ⟨r-c, u⟩²
+                   = (r-c)ᵀ (I + (η-1) u uᵀ) (r-c)
+
+    Both Lloyd phases solve this EXACTLY (no gradient steps): assignment
+    expands the quadratic per codeword (row-constant terms dropped), and
+    the centroid update solves the per-cluster normal equations
+    ``(n_j I + (η-1) Σ u uᵀ) c = Σ r + (η-1) Σ u ⟨u, r⟩`` with one batched
+    ``linalg.solve`` over (k, d, d). ``eta = 1`` recovers standard Lloyd
+    (up to fp association); empty clusters keep their previous centroid.
+    """
+    n, d = x.shape
+    k = cent.shape[0]
+    w = eta - 1.0
+    a = (x * u).sum(-1)  # (n,) ⟨r, u⟩
+    eye = jnp.eye(d, dtype=jnp.float32)
+
+    def body(_, cent):
+        p = u @ cent.T  # (n, k) ⟨c_j, u_i⟩
+        sq_c = (cent * cent).sum(-1)
+        dist = sq_c[None, :] - 2.0 * (x @ cent.T) + w * (a[:, None] - p) ** 2
+        assign = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        counts = jax.ops.segment_sum(
+            jnp.ones((n,), jnp.float32), assign, num_segments=k
+        )
+        sx = jax.ops.segment_sum(x, assign, num_segments=k)
+        sua = jax.ops.segment_sum(u * a[:, None], assign, num_segments=k)
+        suu = jax.ops.segment_sum(
+            u[:, :, None] * u[:, None, :], assign, num_segments=k
+        )  # (k, d, d)
+        lhs = counts[:, None, None] * eye[None] + w * suu + 1e-6 * eye[None]
+        rhs = sx + w * sua
+        new = jnp.linalg.solve(lhs, rhs[..., None])[..., 0]
+        return jnp.where(counts[:, None] > 0, new, cent)
+
+    return jax.lax.fori_loop(0, iters, body, cent.astype(jnp.float32))
+
+
+def anisotropic_subspace_kmeans(
+    x: jax.Array,  # (m_sub, n, d_sub) per-subspace training rows
+    u: jax.Array,  # (m_sub, n, d_sub) per-subspace direction components
+    init: jax.Array,  # (m_sub, ksub, d_sub) initial codebooks
+    iters: int,
+    eta: float,
+) -> jax.Array:
+    """Vmapped :func:`anisotropic_lloyd` over PQ subspaces. ``u`` holds the
+    subvectors of each row's GLOBAL unit direction (not re-normalized per
+    subspace), so the per-subspace parallel penalties sum to the global
+    one up to the cross-subspace terms independent training ignores."""
+    return jax.vmap(
+        lambda xs, us, cs: anisotropic_lloyd(xs, us, cs, iters, eta)
+    )(x.astype(jnp.float32), u.astype(jnp.float32), init.astype(jnp.float32))

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.kmeans import subspace_kmeans
+from repro.core.quant.kmeans import anisotropic_subspace_kmeans, subspace_kmeans
 
 __all__ = ["train_codebooks", "encode", "decode", "build_lut", "lut_scores"]
 
@@ -40,6 +40,8 @@ def train_codebooks(
     *,
     seed: int = 0,
     init: jax.Array | None = None,
+    anisotropic_eta: float = 0.0,
+    anchors: jax.Array | None = None,
 ) -> jax.Array:
     """Train ``(m_sub, ksub, d_sub)`` codebooks on device (one XLA program).
 
@@ -47,6 +49,14 @@ def train_codebooks(
     sample (cheap, deterministic, and rows are iid across subspaces);
     passing the previous codebooks warm-starts a refresh with frozen
     shapes — the geometry contract the stateful Index API requires.
+
+    ``anisotropic_eta > 0`` switches the Lloyd objective to the ScaNN-style
+    score-aware loss (:func:`repro.core.quant.kmeans.anisotropic_lloyd`):
+    the component of each row's quantization error PARALLEL to that row's
+    direction — taken from ``anchors``, the original db rows whose
+    residuals ``x`` are — is up-weighted by ``eta``, because it is what
+    biases inner-product scores for the queries that rank the row highly.
+    ``eta = 1`` matches the standard objective; 0 (default) disables.
     """
     xs = _split(x.astype(jnp.float32), m_sub)  # (m, n, d_sub)
     if init is None:
@@ -54,6 +64,13 @@ def train_codebooks(
         ids = jax.random.permutation(jax.random.key(seed), n)[:ksub]
         ids = jnp.resize(ids, (ksub,))  # n < ksub: duplicate seeds are fine
         init = xs[:, ids, :]
+    if anisotropic_eta > 0.0 and anchors is not None:
+        norm = jnp.linalg.norm(anchors.astype(jnp.float32), axis=1,
+                               keepdims=True)
+        u = anchors.astype(jnp.float32) / jnp.maximum(norm, 1e-12)
+        return anisotropic_subspace_kmeans(
+            xs, _split(u, m_sub), init, iters, anisotropic_eta
+        )
     return subspace_kmeans(xs, init, iters)
 
 

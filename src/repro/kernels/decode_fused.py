@@ -104,33 +104,56 @@ def _row_store(ref, j, row):
 # IVF: fused gather-score + pool top-k
 # --------------------------------------------------------------------------
 def _ivf_screen_kernel(
-    probe_ref, mv_ref, mid_ref, os_ref, oid_ref, q_ref,
+    probe_ref, width_ref, mv_ref, mid_ref, os_ref, oid_ref, q_ref,
     vals_ref, ids_ref, pool_vals, pool_ids,
 ):
+    i = pl.program_id(0)
     j = pl.program_id(1)
     dk = pl.program_id(2)
     n_probe = pl.num_programs(1)
     n_dk = pl.num_programs(2)
     cap = pool_vals.shape[1]
 
-    @pl.when(dk == 0)
-    def _init():
-        _row_store(pool_vals, j, jnp.zeros((cap,), jnp.float32))
-        _row_store(pool_ids, j, mid_ref[0])
+    # Stages past this row's probe width are dead: their cluster tile DMA is
+    # elided by the clamped index map (block index repeats => Pallas skips
+    # the re-fetch) and the MXU accumulate is skipped here. The pool rows
+    # they leave uninitialized are masked out at select.
+    @pl.when(j < width_ref[i])
+    def _accumulate():
+        @pl.when(dk == 0)
+        def _init():
+            _row_store(pool_vals, j, jnp.zeros((cap,), jnp.float32))
+            _row_store(pool_ids, j, mid_ref[0])
 
-    part = jnp.dot(
-        mv_ref[0].astype(jnp.float32), q_ref[0].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
-    cur = pl.load(pool_vals, (pl.dslice(j, 1), pl.dslice(0, cap)))
-    pl.store(pool_vals, (pl.dslice(j, 1), pl.dslice(0, cap)), cur + part[None])
+        part = jnp.dot(
+            mv_ref[0].astype(jnp.float32), q_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        cur = pl.load(pool_vals, (pl.dslice(j, 1), pl.dslice(0, cap)))
+        pl.store(
+            pool_vals, (pl.dslice(j, 1), pl.dslice(0, cap)), cur + part[None]
+        )
 
     @pl.when((j == n_probe - 1) & (dk == n_dk - 1))
     def _select():
-        vals = jnp.concatenate([pool_vals[...].reshape(-1), os_ref[0]])
-        ids = jnp.concatenate([pool_ids[...].reshape(-1), oid_ref[...]])
+        live = (
+            jax.lax.broadcasted_iota(jnp.int32, (n_probe, cap), 0)
+            < width_ref[i]
+        )
+        vals = jnp.concatenate(
+            [jnp.where(live, pool_vals[...], -jnp.inf).reshape(-1), os_ref[0]]
+        )
+        ids = jnp.concatenate(
+            [jnp.where(live, pool_ids[...], -1).reshape(-1), oid_ref[...]]
+        )
         vals = jnp.where(ids >= 0, vals, -jnp.inf)
         _emit_topk(vals, ids, vals_ref, ids_ref)
+
+
+def _clamped_probe(i, j, probe, width):
+    """Probe id for (row i, stage j), clamped to the row's live width so
+    dead stages re-request the previous block (Pallas skips the DMA)."""
+    return probe[i, jnp.maximum(jnp.minimum(j, width[i] - 1), 0)]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "d_block", "interpret"))
@@ -141,37 +164,54 @@ def ivf_screen_select(
     overflow_ids: jax.Array,  # (o_cap,) int32 (-1 = dead slot)
     probe: jax.Array,  # (b, n_probe) int32 cluster ids
     q: jax.Array,  # (b, d)
+    probe_width: jax.Array | None = None,  # (b,) int32 live probe prefix
     *,
     k: int,
     d_block: int = 512,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (values (b, k) f32, ids (b, k) i32): top-k of the probed
-    member pool ∪ overflow, without materializing the pool in HBM."""
+    member pool ∪ overflow, without materializing the pool in HBM.
+
+    ``probe_width`` (adaptive probe, core/mips/adaptive.py) restricts row i
+    to its first ``probe_width[i]`` probe entries: stages beyond it cost
+    neither HBM reads (clamped index map) nor MXU work (``pl.when`` gate).
+    ``None`` means full width, which leaves the kernel program identical to
+    the fixed-width one."""
     n_c, cap, d = member_vecs.shape
     b, n_probe = probe.shape
     o_cap = overflow_ids.shape[0]
     d_blk = min(d_block, d)
     assert d % d_blk == 0, (d, d_blk)
     grid = (b, n_probe, d // d_blk)
+    if probe_width is None:
+        probe_width = jnp.full((b,), n_probe, jnp.int32)
 
     vals, ids = pl.pallas_call(
         _ivf_screen_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec(
-                    (1, cap, d_blk), lambda i, j, dk, probe: (probe[i, j], 0, dk)
+                    (1, cap, d_blk),
+                    lambda i, j, dk, probe, width: (
+                        _clamped_probe(i, j, probe, width), 0, dk
+                    ),
                 ),
-                pl.BlockSpec((1, cap), lambda i, j, dk, probe: (probe[i, j], 0)),
-                pl.BlockSpec((1, o_cap), lambda i, j, dk, probe: (i, 0)),
-                pl.BlockSpec((o_cap,), lambda i, j, dk, probe: (0,)),
-                pl.BlockSpec((1, d_blk), lambda i, j, dk, probe: (i, dk)),
+                pl.BlockSpec(
+                    (1, cap),
+                    lambda i, j, dk, probe, width: (
+                        _clamped_probe(i, j, probe, width), 0
+                    ),
+                ),
+                pl.BlockSpec((1, o_cap), lambda i, j, dk, probe, width: (i, 0)),
+                pl.BlockSpec((o_cap,), lambda i, j, dk, probe, width: (0,)),
+                pl.BlockSpec((1, d_blk), lambda i, j, dk, probe, width: (i, dk)),
             ],
             out_specs=[
-                pl.BlockSpec((1, k), lambda i, j, dk, probe: (i, 0)),
-                pl.BlockSpec((1, k), lambda i, j, dk, probe: (i, 0)),
+                pl.BlockSpec((1, k), lambda i, j, dk, probe, width: (i, 0)),
+                pl.BlockSpec((1, k), lambda i, j, dk, probe, width: (i, 0)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((n_probe, cap), jnp.float32),
@@ -185,6 +225,7 @@ def ivf_screen_select(
         interpret=interpret,
     )(
         probe.astype(jnp.int32),
+        probe_width.astype(jnp.int32),
         member_vecs,
         member_ids.astype(jnp.int32),
         overflow_scores.astype(jnp.float32),
@@ -198,19 +239,32 @@ def ivf_screen_select(
 # IVF-PQ: fused LUT screen + pool top-r
 # --------------------------------------------------------------------------
 def _pq_screen_kernel(
-    probe_ref, codes_ref, mid_ref, coarse_ref, os_ref, oid_ref, lut_ref,
-    vals_ref, ids_ref, pool_vals, pool_ids,
+    probe_ref, width_ref, codes_ref, mid_ref, coarse_ref, os_ref, oid_ref,
+    lut_ref, vals_ref, ids_ref, pool_vals, pool_ids,
 ):
+    i = pl.program_id(0)
     j = pl.program_id(1)
     n_probe = pl.num_programs(1)
-    acc = lut_tile_scores(codes_ref[0], lut_ref[0])  # (cap,) f32
-    _row_store(pool_vals, j, acc + coarse_ref[0][j])
-    _row_store(pool_ids, j, mid_ref[0])
+    cap = pool_vals.shape[1]
+
+    @pl.when(j < width_ref[i])
+    def _screen():
+        acc = lut_tile_scores(codes_ref[0], lut_ref[0])  # (cap,) f32
+        _row_store(pool_vals, j, acc + coarse_ref[0][j])
+        _row_store(pool_ids, j, mid_ref[0])
 
     @pl.when(j == n_probe - 1)
     def _select():
-        vals = jnp.concatenate([pool_vals[...].reshape(-1), os_ref[0]])
-        ids = jnp.concatenate([pool_ids[...].reshape(-1), oid_ref[...]])
+        live = (
+            jax.lax.broadcasted_iota(jnp.int32, (n_probe, cap), 0)
+            < width_ref[i]
+        )
+        vals = jnp.concatenate(
+            [jnp.where(live, pool_vals[...], -jnp.inf).reshape(-1), os_ref[0]]
+        )
+        ids = jnp.concatenate(
+            [jnp.where(live, pool_ids[...], -1).reshape(-1), oid_ref[...]]
+        )
         vals = jnp.where(ids >= 0, vals, -jnp.inf)
         _emit_topk(vals, ids, vals_ref, ids_ref)
 
@@ -224,39 +278,53 @@ def pq_screen_select(
     overflow_ids: jax.Array,  # (o_cap,) int32 (-1 = dead slot)
     probe: jax.Array,  # (b, n_probe) int32 cluster ids
     lut: jax.Array,  # (b, m_sub, ksub) f32 per-query codeword tables
+    probe_width: jax.Array | None = None,  # (b,) int32 live probe prefix
     *,
     r: int,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (values (b, r) f32, ids (b, r) i32): top-r LUT screening
     survivors of the probed pool ∪ overflow (ADC score = LUT sum + coarse
-    centroid term), without materializing the pool in HBM."""
+    centroid term), without materializing the pool in HBM. ``probe_width``
+    masks stages past the per-row adaptive width (see
+    :func:`ivf_screen_select`); ``None`` means full width."""
     n_c, cap, m_sub = member_codes.shape
     b, n_probe = probe.shape
     o_cap = overflow_ids.shape[0]
     assert lut.shape[1] == m_sub, (lut.shape, m_sub)
     grid = (b, n_probe)
+    if probe_width is None:
+        probe_width = jnp.full((b,), n_probe, jnp.int32)
 
     vals, ids = pl.pallas_call(
         _pq_screen_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec(
-                    (1, cap, m_sub), lambda i, j, probe: (probe[i, j], 0, 0)
+                    (1, cap, m_sub),
+                    lambda i, j, probe, width: (
+                        _clamped_probe(i, j, probe, width), 0, 0
+                    ),
                 ),
-                pl.BlockSpec((1, cap), lambda i, j, probe: (probe[i, j], 0)),
-                pl.BlockSpec((1, n_probe), lambda i, j, probe: (i, 0)),
-                pl.BlockSpec((1, o_cap), lambda i, j, probe: (i, 0)),
-                pl.BlockSpec((o_cap,), lambda i, j, probe: (0,)),
                 pl.BlockSpec(
-                    (1, m_sub, lut.shape[2]), lambda i, j, probe: (i, 0, 0)
+                    (1, cap),
+                    lambda i, j, probe, width: (
+                        _clamped_probe(i, j, probe, width), 0
+                    ),
+                ),
+                pl.BlockSpec((1, n_probe), lambda i, j, probe, width: (i, 0)),
+                pl.BlockSpec((1, o_cap), lambda i, j, probe, width: (i, 0)),
+                pl.BlockSpec((o_cap,), lambda i, j, probe, width: (0,)),
+                pl.BlockSpec(
+                    (1, m_sub, lut.shape[2]),
+                    lambda i, j, probe, width: (i, 0, 0),
                 ),
             ],
             out_specs=[
-                pl.BlockSpec((1, r), lambda i, j, probe: (i, 0)),
-                pl.BlockSpec((1, r), lambda i, j, probe: (i, 0)),
+                pl.BlockSpec((1, r), lambda i, j, probe, width: (i, 0)),
+                pl.BlockSpec((1, r), lambda i, j, probe, width: (i, 0)),
             ],
             scratch_shapes=[
                 pltpu.VMEM((n_probe, cap), jnp.float32),
@@ -270,6 +338,7 @@ def pq_screen_select(
         interpret=interpret,
     )(
         probe.astype(jnp.int32),
+        probe_width.astype(jnp.int32),
         member_codes,
         member_ids.astype(jnp.int32),
         coarse.astype(jnp.float32),

@@ -141,9 +141,13 @@ def flash_decode(q, k_cache, v_cache, lengths, *, s_block: int = 512):
 # fused decode step (see repro/kernels/decode_fused.py)
 # --------------------------------------------------------------------------
 def ivf_screen_select(
-    member_vecs, member_ids, overflow_scores, overflow_ids, probe, q, *, k: int
+    member_vecs, member_ids, overflow_scores, overflow_ids, probe, q,
+    *, k: int, probe_width=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused IVF gather-score + pool top-k -> (values (b,k), ids (b,k))."""
+    """Fused IVF gather-score + pool top-k -> (values (b,k), ids (b,k)).
+
+    ``probe_width`` ((b,) int32, optional): adaptive per-row live probe
+    prefix — stages past it are masked inside the kernel."""
     if OPAQUE_STUBS:
         b = probe.shape[0]
         return _stub(
@@ -156,15 +160,18 @@ def ivf_screen_select(
         )
     return _decode_fused.ivf_screen_select(
         member_vecs, member_ids, overflow_scores, overflow_ids, probe, q,
-        k=k, interpret=resolve_interpret(),
+        probe_width, k=k, interpret=resolve_interpret(),
     )
 
 
 def pq_screen_select(
     member_codes, member_ids, coarse, overflow_scores, overflow_ids, probe,
-    lut, *, r: int
+    lut, *, r: int, probe_width=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused IVF-PQ LUT screen + pool top-r -> (values (b,r), ids (b,r))."""
+    """Fused IVF-PQ LUT screen + pool top-r -> (values (b,r), ids (b,r)).
+
+    ``probe_width`` ((b,) int32, optional): adaptive per-row live probe
+    prefix — stages past it are masked inside the kernel."""
     if OPAQUE_STUBS:
         b = probe.shape[0]
         return _stub(
@@ -178,7 +185,7 @@ def pq_screen_select(
         )
     return _decode_fused.pq_screen_select(
         member_codes, member_ids, coarse, overflow_scores, overflow_ids,
-        probe, lut, r=r, interpret=resolve_interpret(),
+        probe, lut, probe_width, r=r, interpret=resolve_interpret(),
     )
 
 

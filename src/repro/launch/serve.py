@@ -56,6 +56,17 @@ def main() -> None:
                     help="single-dispatch fused decode step (Pallas "
                          "screen/re-rank/tail pipeline; samples are "
                          "bit-identical to the unfused kernel path)")
+    ap.add_argument("--adaptive-probe", action="store_true",
+                    help="certificate-gated staged probe widening: probe "
+                         "n-probe-init clusters per token, widen only for "
+                         "tokens whose gap certificate fails (ivf/ivfpq)")
+    ap.add_argument("--n-probe-init", type=int, default=0,
+                    help="adaptive probe start width (0: head n_probe)")
+    ap.add_argument("--n-probe-max", type=int, default=0,
+                    help="adaptive probe width ceiling (0: head n_probe)")
+    ap.add_argument("--probe-router", default="",
+                    help="adaptive stage router: 'fit' trains at startup, "
+                         "else a router.npz path (repro.models.router)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -71,6 +82,12 @@ def main() -> None:
         cfg = cfg.scaled(head_use_kernel=True)
     if args.fused_decode:
         cfg = cfg.scaled(head_fused_decode=True)
+    if args.adaptive_probe:
+        cfg = cfg.scaled(
+            head_adaptive_probe=True,
+            head_n_probe_init=args.n_probe_init,
+            head_n_probe_max=args.n_probe_max,
+        )
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
@@ -83,6 +100,7 @@ def main() -> None:
         max_new_tokens=args.new_tokens, engine=args.engine,
         decode_window=args.decode_window, prefill_chunk=args.prefill_chunk,
         overlength=args.overlength, strict=args.strict,
+        probe_router=args.probe_router,
     ))
     results = server.run(prompts)
     toks = sum(len(r.tokens) for r in results)
@@ -106,6 +124,10 @@ def main() -> None:
             round(server.index.memory_bytes() / 1e6, 2)
             if server.index is not None else 0.0
         ),
+        "probe_width_hist": {
+            str(k): v
+            for k, v in sorted(st["probe_width_hist"].items())
+        },
     }, indent=1))
 
 

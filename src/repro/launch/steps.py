@@ -152,7 +152,7 @@ def make_serve_step(model: Model):
     -> (next_ids, ok, cache, pos+1)."""
 
     def serve_step(params, cache, ids, pos, key, index=None):
-        nxt, ok, cache = model.decode_step(
+        nxt, ok, cache, _ = model.decode_step(
             params, cache, ids, pos, key, index=index
         )
         return nxt, ok, cache, pos + 1
@@ -208,8 +208,13 @@ def _advance(state: dict, nxt, eos_id: int, max_seq: int):
 def make_decode_loop_step(model: Model, window: int, eos_id: int,
                           max_seq: int, strict: bool = False):
     """Fused multi-token decode: ``decode_loop(params, cache, state,
-    base_key, index=None) -> (cache, state, tokens (T,B), ok (T,B),
-    emitted (T,B))``.
+    base_key, index=None, router=None) -> (cache, state, tokens (T,B),
+    ok (T,B), emitted (T,B), widths (T,B))``.
+
+    ``widths`` is the per-token effective probe width under the head's
+    certificate-gated adaptive probe (−1 on fixed-width paths); the engine
+    bins emitted slots' widths into ``Server.stats["probe_width_hist"]``.
+    ``router`` optionally carries a ProbeRouter pytree into each step.
 
     A ``lax.scan`` decodes ``window`` tokens per dispatch with per-slot
     active masks and on-device EOS/length-budget detection — amortizing
@@ -225,21 +230,22 @@ def make_decode_loop_step(model: Model, window: int, eos_id: int,
     the samples bit-identical either way.
     """
 
-    def decode_loop(params, cache, state, base_key, index=None):
+    def decode_loop(params, cache, state, base_key, index=None, router=None):
         def body(carry, _):
             cache, state = carry
             keys = slot_keys(base_key, state["rid"], state["pos"])
-            nxt, ok, cache = model.decode_step(
+            nxt, ok, cache, width = model.decode_step(
                 params, cache, state["ids"], state["pos"], None, index=index,
                 keys=keys, strict=strict, strict_live=state["active"],
+                router=router,
             )
             state, emitted = _advance(state, nxt, eos_id, max_seq)
-            return (cache, state), (state["ids"], ok, emitted)
+            return (cache, state), (state["ids"], ok, emitted, width)
 
-        (cache, state), (toks, oks, emitted) = jax.lax.scan(
+        (cache, state), (toks, oks, emitted, widths) = jax.lax.scan(
             body, (cache, state), None, length=window
         )
-        return cache, state, toks, oks, emitted
+        return cache, state, toks, oks, emitted, widths
 
     return decode_loop
 
@@ -288,18 +294,19 @@ def make_prefill_into_cache_step(model: Model, max_seq: int, eos_id: int,
 
 def make_reference_serve_step(model: Model, strict: bool = False):
     """Single-token serve step with engine-compatible key derivation:
-    ``serve_step(params, cache, ids, pos, rids, base_key, index=None) ->
-    (next_ids, ok, cache, pos+1)``. This is the teacher-forced comparator
-    the engine is validated against (same samples, one dispatch per
-    token)."""
+    ``serve_step(params, cache, ids, pos, rids, base_key, index=None,
+    router=None) -> (next_ids, ok, cache, pos+1, width)``. This is the
+    teacher-forced comparator the engine is validated against (same
+    samples, one dispatch per token)."""
 
-    def serve_step(params, cache, ids, pos, rids, base_key, index=None):
+    def serve_step(params, cache, ids, pos, rids, base_key, index=None,
+                   router=None):
         keys = slot_keys(base_key, rids, pos)
-        nxt, ok, cache = model.decode_step(
+        nxt, ok, cache, width = model.decode_step(
             params, cache, ids, pos, None, index=index, keys=keys,
-            strict=strict,
+            strict=strict, router=router,
         )
-        return nxt, ok, cache, pos + 1
+        return nxt, ok, cache, pos + 1, width
 
     return serve_step
 

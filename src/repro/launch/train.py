@@ -56,6 +56,17 @@ def main() -> None:
                     help="R > 0: refresh the head MIPS index every R steps")
     ap.add_argument("--index-drift-threshold", type=float, default=0.0,
                     help="> 0: refresh when relative embedding drift exceeds")
+    ap.add_argument("--adaptive-probe", action="store_true",
+                    help="certificate-gated staged probe widening in the "
+                         "head's MIPS queries (ivf/ivfpq)")
+    ap.add_argument("--n-probe-init", type=int, default=0,
+                    help="adaptive probe start width (0: head n_probe)")
+    ap.add_argument("--n-probe-max", type=int, default=0,
+                    help="adaptive probe width ceiling (0: head n_probe)")
+    ap.add_argument("--probe-router", action="store_true",
+                    help="fit the adaptive stage router on probe traces at "
+                         "index-refresh boundaries; saved to "
+                         "workdir/router.npz")
     ap.add_argument("--workdir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
@@ -67,6 +78,12 @@ def main() -> None:
         cfg = cfg.scaled(head_mips=args.mips)
     if args.vocab:
         cfg = cfg.scaled(vocab=args.vocab)
+    if args.adaptive_probe:
+        cfg = cfg.scaled(
+            head_adaptive_probe=True,
+            head_n_probe_init=args.n_probe_init,
+            head_n_probe_max=args.n_probe_max,
+        )
     run = RunConfig(
         num_steps=args.steps,
         batch=args.batch,
@@ -75,6 +92,7 @@ def main() -> None:
         fuse_steps=args.fuse_steps,
         index_refresh_every=args.index_refresh_every,
         index_drift_threshold=args.index_drift_threshold,
+        fit_probe_router=args.probe_router,
         train=TrainConfig(
             opt=OptConfig(lr=args.lr, total_steps=args.steps),
             accum=args.accum_steps,

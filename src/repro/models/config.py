@@ -62,6 +62,13 @@ class ArchConfig:
     head_fused_decode: bool = False  # single-dispatch fused decode step
     #   (kernels/decode_fused.py); bit-identical samples to the unfused
     #   kernel path — see DESIGN.md §10
+    head_n_probe: int = 8  # IVF/IVF-PQ clusters probed per query
+    head_adaptive_probe: bool = False  # certificate-gated staged widening:
+    #   probe head_n_probe_init clusters, widen geometrically (per token)
+    #   up to head_n_probe_max only when the gap certificate fails —
+    #   DESIGN.md §11
+    head_n_probe_init: int = 0  # 0 -> head_n_probe
+    head_n_probe_max: int = 0  # 0 -> head_n_probe
 
     # ------------------------------------------------------------------ #
     @property

@@ -119,20 +119,28 @@ def dist_head_sample(
     cfg: HeadConfig,
     index=None,  # optional ShardedIndex over the same (Vp, d) table
     keys: jax.Array | None = None,  # (T,) per-token typed PRNG keys
-) -> tuple[jax.Array, jax.Array]:
-    """Distributed lazy-Gumbel sampling. Returns (ids (T,), ok (T,)).
+    router=None,  # optional ProbeRouter (replicated pytree; adaptive probe)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Distributed lazy-Gumbel sampling. Returns (ids (T,), ok (T,),
+    width (T,)).
 
     ``keys`` pins each token's randomness to its own key (each shard folds
     in its model-axis index on top, keeping per-shard draws independent):
     the serving engine derives these from (request id, position) so samples
     are invariant to batch composition and decode fusion. Raw key data is
     threaded through shard_map (typed key arrays don't cross the shard_map
-    boundary on all jax versions)."""
+    boundary on all jax versions).
+
+    ``width`` is the per-token effective probe width under
+    ``cfg.adaptive_probe`` — each shard widens independently and the global
+    width is the max over shards (critical-path semantics: shards probe in
+    parallel); −1 on fixed-width paths."""
     cfg = cfg.resolved()
     mp = mesh.shape["model"]
     vp = emb.shape[0]
     v_loc, k_loc, l_loc = _shard_geometry(cfg, vp, mp)
     use_keys = keys is not None
+    use_router = router is not None
     if key is None:  # all randomness comes from `keys`; placeholder only
         key = jax.random.key(0)
 
@@ -142,15 +150,18 @@ def dist_head_sample(
         n_valid = jnp.clip(cfg.n - offset, 0, v_loc)
         key = jax.random.fold_in(key, midx)
         t_loc = h_loc.shape[0]
+        rest = list(rest)
         if use_keys:
-            kd_loc, idx_state = rest[0], rest[1:]
+            kd_loc = rest.pop(0)
             keys_loc = jax.vmap(jax.random.fold_in, (0, None))(
                 jax.random.wrap_key_data(kd_loc), midx
             )
         else:
-            idx_state = rest
             keys_loc = None
+        router_loc = rest.pop(0) if use_router else None
+        idx_state = tuple(rest)
 
+        width = jnp.full((t_loc,), -1, jnp.int32)
         if cfg.mode == "exact":
             loc_best, val = est.dense_gumbel_max(
                 key, emb_loc, h_loc, n_valid=n_valid, keys=keys_loc
@@ -163,14 +174,18 @@ def dist_head_sample(
             res = est.local_gumbel_max(
                 key, emb_loc, h_loc, k=k_loc, l=l_loc, index=index_loc,
                 n_valid=n_valid, c=cfg.c, keys=keys_loc,
-                fused=cfg.fused_decode,
+                fused=cfg.fused_decode, adaptive=cfg.adaptive_probe,
+                router=router_loc,
             )
             gid = res.index + offset
             val = res.max_val
             bound = res.bound
             ok = ~res.overflow
+            if res.width is not None:
+                width = res.width.astype(jnp.int32)
 
-        return est.combine_sample_pmax(gid, val, bound, ok, "model")
+        gid_g, ok_g = est.combine_sample_pmax(gid, val, bound, ok, "model")
+        return gid_g, ok_g, jax.lax.pmax(width, "model")
 
     idx_args, idx_specs = _index_args(index)
     tok_ax = _token_spec(mesh, h.shape[0])
@@ -178,12 +193,16 @@ def dist_head_sample(
     if use_keys:
         key_args = (jax.random.key_data(keys),)
         key_specs = (P(tok_ax, None),)
+    rt_args, rt_specs = (), ()
+    if use_router:
+        rt_args = (router,)
+        rt_specs = (P(),)  # replicated: every shard routes its local probe
     fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P("model", None), P(tok_ax, None), P(),
-                  *key_specs, *idx_specs),
-        out_specs=(P(tok_ax), P(tok_ax)),
+                  *key_specs, *rt_specs, *idx_specs),
+        out_specs=(P(tok_ax), P(tok_ax), P(tok_ax)),
         check_vma=False,
     )
-    return fn(emb, h, key, *key_args, *idx_args)
+    return fn(emb, h, key, *key_args, *rt_args, *idx_args)

@@ -30,6 +30,10 @@ def _head_cfg(cfg: ArchConfig, policy: precision.Policy) -> ah.HeadConfig:
         mode=cfg.head_mode,
         mips=cfg.head_mips,
         delta=cfg.head_delta,
+        n_probe=cfg.head_n_probe,
+        adaptive_probe=cfg.head_adaptive_probe,
+        n_probe_init=cfg.head_n_probe_init,
+        n_probe_max=cfg.head_n_probe_max,
         use_kernel=cfg.head_use_kernel,
         fused_decode=cfg.head_fused_decode,
         score_dtype=policy.score_dtype,
@@ -171,11 +175,18 @@ class Model:
 
     def decode_step(
         self, params, cache, ids: jax.Array, pos: jax.Array, key, index=None,
-        *, keys=None, strict: bool = False, strict_live=None,
-    ) -> tuple[jax.Array, jax.Array, Any]:
+        *, keys=None, strict: bool = False, strict_live=None, router=None,
+    ) -> tuple[jax.Array, jax.Array, Any, jax.Array]:
         """One serving step: (B,) last ids + (B,) positions -> next ids.
 
-        Returns (next_ids (B,), ok (B,), new_cache).
+        Returns (next_ids (B,), ok (B,), new_cache, width (B,)).
+
+        ``width`` is the per-slot effective probe width when the head runs
+        the certificate-gated adaptive probe (``head_cfg.adaptive_probe``),
+        −1 otherwise — the serving engine bins it into
+        ``Server.stats["probe_width_hist"]``. ``router`` optionally supplies
+        a :class:`repro.models.router.ProbeRouter` predicting each slot's
+        starting stage.
 
         ``keys`` ((B,) typed PRNG keys) pins each slot's sample randomness;
         the serving engine derives them from (request id, position) so a
@@ -194,17 +205,22 @@ class Model:
                     "strict exact-fallback is not wired through the "
                     "distributed head; serve with strict=False on a TP mesh"
                 )
-            nxt, ok = dist_head.dist_head_sample(
+            nxt, ok, width = dist_head.dist_head_sample(
                 self.mesh, self._out_embed(params), hq, key, self.head_cfg,
-                index=index, keys=keys,
+                index=index, keys=keys, router=router,
             )
         else:
             res = ah.head_sample(
                 self._out_embed(params), hq, key, self.head_cfg, index=index,
                 keys=keys, strict=strict, strict_live=strict_live,
+                router=router,
             )
             nxt, ok = res.index, res.ok
-        return nxt, ok, cache
+            width = (
+                res.width.astype(jnp.int32) if res.width is not None
+                else jnp.full(nxt.shape, -1, jnp.int32)
+            )
+        return nxt, ok, cache, width
 
     def prefill(
         self, params, batch, key, max_seq: int, index=None
@@ -222,7 +238,7 @@ class Model:
         )
         hq = h[:, -1]
         if self._head_mesh() is not None:
-            nxt, ok = dist_head.dist_head_sample(
+            nxt, ok, _ = dist_head.dist_head_sample(
                 self.mesh, self._out_embed(params), hq, key, self.head_cfg,
                 index=index,
             )
@@ -281,7 +297,7 @@ class Model:
                     "strict exact-fallback is not wired through the "
                     "distributed head; serve with strict=False on a TP mesh"
                 )
-            nxt, ok = dist_head.dist_head_sample(
+            nxt, ok, _ = dist_head.dist_head_sample(
                 self.mesh, self._out_embed(params), hq, None, self.head_cfg,
                 index=index, keys=keys,
             )

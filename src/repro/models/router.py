@@ -1,0 +1,227 @@
+"""Learned probe-width router for the certificate-gated adaptive probe.
+
+The staged-widening query (core/mips/adaptive.py) starts every query at
+stage 0 (``n_probe_init`` clusters) and pays one certificate round-trip per
+widening step. Most queries' final width is predictable from how fast their
+centroid scores decay: a query whose top centroid towers over the rest
+almost always certifies at the narrowest width, while a flat profile needs
+the ceiling. This module learns that mapping.
+
+* Features (:func:`stage_features`): the centroid-score gaps
+  ``top1 - top_{w_s}`` at each stage-boundary width ``w_s`` of the static
+  schedule, normalized by ``||q||`` so the profile is scale-free, plus
+  ``log1p(||q||)`` — ``S + 1`` numbers per query, all computed from the
+  ``(b, n_c)`` centroid scores the probe scores anyway.
+* Model (:class:`ProbeRouter`): a tiny MLP ``(S+1) -> hidden -> S`` whose
+  argmax picks the starting stage. It is a jax pytree (NamedTuple of
+  arrays), so it passes straight through jitted decode steps.
+* Labels (:func:`certified_stage_labels`): the FIRST stage whose gap
+  certificate passes, observed by running the single-stage probe at each
+  schedule width — the trainer logs these probe traces at index-refresh
+  boundaries and fits the router against them
+  (:func:`fit_router` / :func:`train_router`).
+
+A misprediction is a bandwidth bug, never a correctness bug: the
+certificate still gates every widening step, so an optimistic router just
+pays the widening rounds it tried to skip, and a pessimistic one probes
+wider than needed. ``staged_widen`` clips the predicted stage into the
+schedule, so a router trained for a different stage count degrades
+gracefully (feature dims must still match: S+1 inputs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ProbeRouter",
+    "stage_features",
+    "init_router",
+    "fit_router",
+    "certified_stage_labels",
+    "train_router",
+    "save_router",
+    "load_router",
+]
+
+HIDDEN = 16
+
+
+def stage_features(
+    c_scores: jax.Array,  # (b, n_c) centroid scores q @ centroids.T
+    qf: jax.Array,  # (b, d) f32 queries
+    widths: Sequence[int],  # static stage-width schedule
+) -> jax.Array:
+    """(b, S+1) routing features: per-stage top-score gaps + query norm.
+
+    ``gap_s = (top1 - top_{w_s}) / ||q||`` measures how much of the
+    centroid-score mass the first ``w_s`` clusters capture — exactly the
+    quantity the unprobed-mass bound (adaptive.unprobed_bound_table) keys
+    on, so the features are predictive of the certificate by construction.
+    """
+    n_c = c_scores.shape[1]
+    w_hi = min(max(widths), n_c - 1) if n_c > 1 else 0
+    top, _ = jax.lax.top_k(c_scores.astype(jnp.float32), w_hi + 1)
+    qn = jnp.linalg.norm(qf.astype(jnp.float32), axis=-1)  # (b,)
+    scale = jnp.maximum(qn, 1e-6)[:, None]
+    idx = jnp.asarray(
+        [min(int(w), top.shape[1] - 1) for w in widths], jnp.int32
+    )
+    gaps = (top[:, :1] - top[:, idx]) / scale  # (b, S)
+    return jnp.concatenate([gaps, jnp.log1p(qn)[:, None]], axis=1)
+
+
+class ProbeRouter(NamedTuple):
+    """Tiny stage-prediction MLP; a pytree, safe inside jitted steps."""
+
+    w1: jax.Array  # (S+1, hidden)
+    b1: jax.Array  # (hidden,)
+    w2: jax.Array  # (hidden, S)
+    b2: jax.Array  # (S,)
+
+    @property
+    def n_stages(self) -> int:
+        return self.w2.shape[1]
+
+    def logits(
+        self, c_scores: jax.Array, qf: jax.Array, widths: Sequence[int]
+    ) -> jax.Array:
+        x = stage_features(c_scores, qf, widths)
+        hid = jnp.tanh(x @ self.w1 + self.b1)
+        return hid @ self.w2 + self.b2  # (b, S)
+
+    def init_stage(
+        self, c_scores: jax.Array, qf: jax.Array, widths: Sequence[int]
+    ) -> jax.Array:
+        """(b,) int32 predicted starting stage (argmax over stage logits)."""
+        return jnp.argmax(
+            self.logits(c_scores, qf, widths), axis=-1
+        ).astype(jnp.int32)
+
+
+def init_router(
+    key: jax.Array, n_stages: int, hidden: int = HIDDEN
+) -> ProbeRouter:
+    """He-scaled random init; with one stage the router is trivially 0."""
+    f = n_stages + 1
+    k1, k2 = jax.random.split(jax.random.key(key) if isinstance(key, int)
+                              else key)
+    s1 = (2.0 / f) ** 0.5
+    s2 = (2.0 / hidden) ** 0.5
+    return ProbeRouter(
+        w1=jax.random.normal(k1, (f, hidden), jnp.float32) * s1,
+        b1=jnp.zeros((hidden,), jnp.float32),
+        w2=jax.random.normal(k2, (hidden, n_stages), jnp.float32) * s2,
+        b2=jnp.zeros((n_stages,), jnp.float32),
+    )
+
+
+def certified_stage_labels(
+    index, q: jax.Array, k: int, widths: Sequence[int], *, c: float = 0.0
+) -> jax.Array:
+    """(b,) int32 supervision: first schedule stage whose gap certificate
+    passes for each query (last stage when none does).
+
+    Each label probe runs the index's single-stage adaptive query
+    (``n_probe_init == n_probe_max == w``), i.e. exactly the fixed-width
+    program whose certificate the deployed staged search will evaluate —
+    the labels ARE the stopping rule's decisions, not a proxy.
+    """
+    certs = []
+    for w in widths:
+        atk = index.topk_adaptive(
+            q, k, c=c, n_probe_init=int(w), n_probe_max=int(w)
+        )
+        certs.append(atk.certified)
+    cert = jnp.stack(certs, axis=1)  # (b, S)
+    first = jnp.argmax(cert, axis=1).astype(jnp.int32)
+    return jnp.where(cert.any(axis=1), first, len(widths) - 1)
+
+
+def fit_router(
+    router: ProbeRouter,
+    feats: jax.Array,  # (n, S+1) from stage_features
+    labels: jax.Array,  # (n,) int32 stage labels
+    *,
+    steps: int = 300,
+    lr: float = 0.05,
+) -> ProbeRouter:
+    """Full-batch softmax cross-entropy fit (plain SGD, jitted fori_loop).
+
+    The problem is tiny (hundreds of weights, thousands of examples), so a
+    fixed-step full-batch loop is cheaper than any optimizer machinery and
+    keeps the fit deterministic for a given trace.
+    """
+    feats = feats.astype(jnp.float32)
+    labels = labels.astype(jnp.int32)
+
+    def loss_fn(r: ProbeRouter) -> jax.Array:
+        hid = jnp.tanh(feats @ r.w1 + r.b1)
+        logits = hid @ r.w2 + r.b2
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, labels[:, None], axis=1
+        )[:, 0]
+        return (lse - picked).mean()
+
+    @jax.jit
+    def run(r: ProbeRouter) -> ProbeRouter:
+        def body(_, r):
+            g = jax.grad(loss_fn)(r)
+            return jax.tree.map(lambda p, gg: p - lr * gg, r, g)
+
+        return jax.lax.fori_loop(0, steps, body, r)
+
+    return run(router)
+
+
+def train_router(
+    index,
+    q: jax.Array,  # (n, d) representative queries (e.g. logged hiddens)
+    k: int,
+    *,
+    c: float = 0.0,
+    n_probe_init: int | None = None,
+    n_probe_max: int | None = None,
+    steps: int = 300,
+    lr: float = 0.05,
+    seed: int = 0,
+) -> ProbeRouter:
+    """End-to-end supervised fit against the index's own certificate.
+
+    Resolves the stage schedule exactly as ``topk_adaptive`` does (config
+    defaults, geometric doubling), labels each query with its first
+    certificate-passing stage, and fits a fresh :class:`ProbeRouter`.
+    """
+    from repro.core.mips.adaptive import stage_widths
+
+    cfg = index.config
+    n_c = int(index.state.n_clusters)
+    w_max = min(n_probe_max or cfg.n_probe_max or cfg.n_probe, n_c)
+    init = min(n_probe_init or cfg.n_probe_init or cfg.n_probe, w_max)
+    widths = stage_widths(init, w_max)
+    qf = q.astype(jnp.float32)
+    c_scores = qf @ index.state.centroids.T
+    feats = stage_features(c_scores, qf, widths)
+    labels = certified_stage_labels(index, qf, k, widths, c=c)
+    router = init_router(jax.random.key(seed), len(widths))
+    return fit_router(router, feats, labels, steps=steps, lr=lr)
+
+
+def save_router(path: str, router: ProbeRouter) -> None:
+    """Persist to ``.npz`` (trainer writes ``workdir/router.npz``)."""
+    import os
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **{f: np.asarray(v) for f, v in router._asdict().items()})
+
+
+def load_router(path: str) -> ProbeRouter:
+    """Load a router saved by :func:`save_router`."""
+    with np.load(path) as data:
+        return ProbeRouter(
+            *(jnp.asarray(data[f]) for f in ProbeRouter._fields)
+        )

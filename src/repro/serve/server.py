@@ -70,6 +70,9 @@ class ServeConfig:
     decode_window: int = 8  # tokens decoded per dispatch (pipelined)
     prefill_chunk: int = 32  # prompt-length bucket granularity (pipelined)
     overlength: str = "truncate"  # truncate (keep newest) | reject
+    probe_router: str = ""  # adaptive probe's learned stage router:
+    #   "" disabled | "fit" train at startup on embedding-derived queries |
+    #   a path to a router .npz saved by repro.models.router.save_router
 
     @property
     def prompt_cap(self) -> int:
@@ -157,12 +160,13 @@ class Server:
             strict=scfg.strict,
         )
 
-        def decode_step(params, cache, state, base_key, index=None):
-            cache, state, toks, oks, emitted = decode_core(
-                params, cache, state, base_key, index
+        def decode_step(params, cache, state, base_key, index=None,
+                        router=None):
+            cache, state, toks, oks, emitted, widths = decode_core(
+                params, cache, state, base_key, index, router
             )
             cache, state = _pin(cache, state)
-            return cache, state, toks, oks, emitted
+            return cache, state, toks, oks, emitted, widths
 
         self.step_fn = jax.jit(decode_step, donate_argnums=(1, 2))
 
@@ -194,12 +198,16 @@ class Server:
             "prefill_dispatches": 0, "decode_dispatches": 0,
             "prefill_tokens": 0, "rejected": 0,
             "prefill_s": 0.0, "decode_s": 0.0,
+            # adaptive probe: emitted-token counts per effective probe
+            # width {width: count} — empty on fixed-width serving
+            "probe_width_hist": {},
         }
         # head MIPS index: built once over the frozen output embedding
         # (a ShardedIndex on a TP mesh — per-slice probe inside the
         # distributed head's shard_map)
         self.index = self.model.make_head_index(params)
         self._index_health(where="build")
+        self.router = self._make_router()
 
         @jax.jit
         def _reset_slots(cache, mask):
@@ -229,8 +237,69 @@ class Server:
             print(f"[server] WARNING: index {where} dropped {dropped} "
                   f"rows — raise overflow_frac")
         if short:
-            print(f"[server] WARNING: re-rank pool short {short} slots — "
-                  f"lower PQConfig.rerank or raise n_probe")
+            hc = self.model.head_cfg
+            if hc.adaptive_probe:
+                # fixed n_probe is the wrong knob once width is dynamic:
+                # the pool is sized by the per-query effective width, so
+                # the ceiling (and the certificate slack driving widening)
+                # is what the operator should move
+                print(
+                    f"[server] WARNING: re-rank pool short {short} slots "
+                    f"at effective probe width <= {hc.n_probe_max} "
+                    f"(adaptive; see stats['probe_width_hist']) — lower "
+                    f"PQConfig.rerank or raise n_probe_max"
+                )
+            else:
+                print(f"[server] WARNING: re-rank pool short {short} slots "
+                      f"— lower PQConfig.rerank or raise n_probe")
+
+    def _make_router(self):
+        """Build the adaptive probe's stage router per ``scfg.probe_router``
+        ("" disabled / "fit" supervised startup fit / an .npz path). The
+        startup fit synthesizes queries from the embedding rows the index
+        serves (scaled like serving-temperature hiddens), labels each with
+        its first certificate-passing stage, and trains the tiny MLP — all
+        device-side, a one-time cost."""
+        spec = self.scfg.probe_router
+        hc = self.model.head_cfg
+        if not spec:
+            return None
+        if not hc.adaptive_probe or self.index is None:
+            print("[server] WARNING: probe_router set but adaptive probe "
+                  "is off (head_adaptive_probe) — router ignored")
+            return None
+        from repro.models import router as router_lib
+
+        if spec != "fit":
+            return router_lib.load_router(spec)
+        state = getattr(self.index, "state", None)
+        if state is None or not hasattr(state, "centroids"):
+            print("[server] WARNING: probe_router='fit' needs a "
+                  "single-device clustered index — router disabled")
+            return None
+        emb = self.model.head_index_db(self.params)
+        stride = max(1, emb.shape[0] // 512)
+        qs = emb[::stride][:512].astype(jnp.float32)
+        qs = qs / jnp.maximum(
+            jnp.linalg.norm(qs, axis=1, keepdims=True), 1e-6
+        ) * 8.0  # low-temperature serving queries: peaked score profiles
+        return router_lib.train_router(
+            self.index, qs, hc.k, c=hc.c, seed=self.scfg.seed
+        )
+
+    def _bin_widths(self, widths: np.ndarray, mask: np.ndarray) -> None:
+        """Accumulate emitted tokens' effective probe widths into
+        ``stats["probe_width_hist"]`` (−1 sentinel = fixed-width path)."""
+        sel = widths >= 0
+        if mask is not None:
+            sel &= mask
+        w = widths[sel]
+        if w.size == 0:
+            return
+        hist = self.stats["probe_width_hist"]
+        vals, counts = np.unique(w, return_counts=True)
+        for v, n in zip(vals.tolist(), counts.tolist()):
+            hist[int(v)] = hist.get(int(v), 0) + int(n)
 
     def refresh_index(self, params=None) -> None:
         """Hot-swap the head index (e.g. after a params push).
@@ -366,8 +435,9 @@ class Server:
                         free.append(slot)
             else:  # decode window
                 _, arrs, snapshot = entry
-                toks, oks, emitted = (np.asarray(a) for a in arrs)
+                toks, oks, emitted, widths = (np.asarray(a) for a in arrs)
                 self.stats["decode_s"] += time.perf_counter() - t0
+                self._bin_widths(widths, emitted)
                 now = time.perf_counter()
                 for t in range(toks.shape[0]):
                     for slot in range(nslots):
@@ -423,10 +493,11 @@ class Server:
                 )
             # 2) fused decode over the slots the host believes live
             if any(r is not None for r in slot_req):
-                cache, state, toks, oks, emitted = self.step_fn(
-                    self.params, cache, state, base_key, self.index
+                cache, state, toks, oks, emitted, widths = self.step_fn(
+                    self.params, cache, state, base_key, self.index,
+                    self.router,
                 )
-                pending.append(("decode", (toks, oks, emitted),
+                pending.append(("decode", (toks, oks, emitted, widths),
                                 list(slot_req)))
                 self.stats["decode_dispatches"] += 1
                 self.stats["steps"] += 1
@@ -487,13 +558,17 @@ class Server:
                     ids_h[i] = req["prompt"][req["fed"]]
                 else:
                     ids_h[i] = req["out"][-1]
-            nxt, ok, cache, pos = self.ref_step_fn(
+            nxt, ok, cache, pos, width = self.ref_step_fn(
                 self.params, cache, jnp.asarray(ids_h), jnp.asarray(pos_h),
-                jnp.asarray(rids_h), base_key, self.index,
+                jnp.asarray(rids_h), base_key, self.index, self.router,
             )
             nxt_h = np.asarray(nxt)
             ok_h = np.asarray(ok)
             pos_h = np.array(pos)  # device value is authoritative
+            self._bin_widths(
+                np.asarray(width),
+                np.asarray([a is not None for a in active]),
+            )
             self.stats["steps"] += 1
             now = time.perf_counter()
             for i, rid in enumerate(active):

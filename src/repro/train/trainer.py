@@ -84,6 +84,9 @@ class RunConfig:
     straggler_factor: float = 3.0
     index_refresh_every: int = 0  # R > 0: refresh the head index every R steps
     index_drift_threshold: float = 0.0  # > 0: refresh when rel. L2 drift exceeds
+    fit_probe_router: bool = False  # adaptive probe: fit the stage router
+    #   (repro.models.router) against logged probe traces at every index
+    #   refresh boundary and save it to workdir/router.npz
     train: steps_lib.TrainConfig = dataclasses.field(
         default_factory=steps_lib.TrainConfig
     )
@@ -118,6 +121,9 @@ class Trainer:
         # ---- staleness-aware head-index refresh (DESIGN.md §7) ----
         self.head_index = None  # stateful MIPS index (None => exact path)
         self.index_refreshes = 0
+        # adaptive probe telemetry: {effective width: query count} logged
+        # from the refresh-boundary probe traces (empty when fixed-width)
+        self.probe_width_hist: dict[int, int] = {}
         self._index_snapshot = None  # embedding rows at last (re)build
         self._drift_fn = jax.jit(
             lambda emb, snap: jnp.linalg.norm(emb - snap)
@@ -224,12 +230,69 @@ class Trainer:
                       f"dropped {dropped} rows (overflow buffer full) — "
                       f"raise overflow_frac")
             if short:
-                print(f"[trainer] WARNING: re-rank pool short {short} "
-                      f"slots — lower PQConfig.rerank or raise n_probe")
+                hc = self.model.head_cfg
+                if hc.adaptive_probe:
+                    # the pool is sized by the per-query EFFECTIVE width
+                    # under adaptive probing — fixed n_probe is no longer
+                    # the knob; the ceiling is
+                    print(f"[trainer] WARNING: re-rank pool short {short} "
+                          f"slots at effective probe width <= "
+                          f"{hc.n_probe_max} (adaptive; hist "
+                          f"{self.probe_width_hist}) — lower "
+                          f"PQConfig.rerank or raise n_probe_max")
+                else:
+                    print(f"[trainer] WARNING: re-rank pool short {short} "
+                          f"slots — lower PQConfig.rerank or raise n_probe")
             if tripped:
                 print(f"[trainer] index refresh at step {done}: "
                       f"drift {drift:.4f} > {run.index_drift_threshold}")
+            self._probe_trace(params, done)
         return drift
+
+    def _probe_trace(self, params, done: int) -> None:
+        """Adaptive-probe telemetry + router fit at a refresh boundary.
+
+        Runs the staged-widening query over a deterministic sample of the
+        (just-refreshed) embedding rows scaled like serving-temperature
+        hiddens, folds the per-query effective widths into
+        ``probe_width_hist``, and — with ``run.fit_probe_router`` — fits
+        the stage router against the trace's certificate-passing widths
+        (supervision = the stopping rule's own decisions) and saves it to
+        ``workdir/router.npz`` for the server to load.
+        """
+        hc = self.model.head_cfg
+        if not hc.adaptive_probe or self.head_index is None:
+            return
+        state = getattr(self.head_index, "state", None)
+        if state is None or not hasattr(state, "centroids"):
+            return  # sharded index: per-shard widths stay device-side
+        emb = self._head_emb(params)
+        stride = max(1, emb.shape[0] // 256)
+        qs = emb[::stride][:256].astype(jnp.float32)
+        qs = qs / jnp.maximum(
+            jnp.linalg.norm(qs, axis=1, keepdims=True), 1e-6
+        ) * 8.0
+        atk = self.head_index.topk_adaptive(qs, hc.k, c=hc.c)
+        w = np.asarray(atk.width)
+        vals, counts = np.unique(w, return_counts=True)
+        for v, n in zip(vals.tolist(), counts.tolist()):
+            self.probe_width_hist[int(v)] = (
+                self.probe_width_hist.get(int(v), 0) + int(n)
+            )
+        print(f"[trainer] adaptive probe at step {done}: avg effective "
+              f"n_probe {w.mean():.2f} (ceiling {hc.n_probe_max}), "
+              f"certified {float(np.asarray(atk.certified).mean()):.2f}, "
+              f"width hist {self.probe_width_hist}")
+        if self.run.fit_probe_router:
+            from repro.models import router as router_lib
+
+            r = router_lib.train_router(
+                self.head_index, qs, hc.k, c=hc.c, seed=self.run.seed
+            )
+            path = os.path.join(self.workdir, "router.npz")
+            router_lib.save_router(path, r)
+            print(f"[trainer] probe router fitted on {qs.shape[0]} traces "
+                  f"-> {path}")
 
     # --------------------------------------------------------- fused loop
     def _next_boundary(self, step: int) -> int:
@@ -293,6 +356,12 @@ class Trainer:
             spill = mips.index_spill(self.head_index)
             mb = self.head_index.memory_bytes() / 1e6
             index_note = f" index={mb:.1f}MB spill={spill}"
+            if self.probe_width_hist:  # adaptive probe: effective width
+                tot = sum(self.probe_width_hist.values())
+                avg = sum(
+                    wd * n for wd, n in self.probe_width_hist.items()
+                ) / max(tot, 1)
+                index_note += f" probe_w={avg:.1f}"
         for s0, t, metrics in self._pending:
             host = jax.tree.map(np.asarray, metrics)
             for i in range(t):

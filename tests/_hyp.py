@@ -13,7 +13,7 @@ with keyword strategies, and ``@settings(max_examples=..., deadline=...)``.
 from __future__ import annotations
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
-    from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis import given, settings, strategies
 
     HAVE_HYPOTHESIS = True
 except ImportError:
@@ -38,7 +38,7 @@ except ImportError:
         def draw(self, strategy: _Strategy):
             return strategy._draw(self._rng)
 
-    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    class strategies:  # lowercase: mirrors the hypothesis module name
         @staticmethod
         def integers(min_value, max_value):
             return _Strategy(lambda rng: rng.randint(min_value, max_value))
@@ -70,7 +70,7 @@ except ImportError:
         def data():
             return _Strategy(_Data)
 
-    class settings:  # noqa: N801
+    class settings:  # lowercase: mirrors the hypothesis module name
         def __init__(self, max_examples=None, deadline=None, **_kw):
             self.max_examples = max_examples
 

@@ -1,0 +1,346 @@
+"""Certificate-gated adaptive probe: parity, monotonicity, router, aniso-PQ.
+
+The load-bearing invariant is BITWISE equivalence: with
+``n_probe_init == n_probe_max == n_probe`` the staged-widening schedule is
+one all-true-masked stage, so the adaptive query must run the *identical*
+float program as the fixed-width sampler — same ids AND same certificate
+terms (max_val/bound/m/overflow), on dense pool math and through the fused
+Pallas screen, for IVF and IVF-PQ alike. Anything weaker would make
+``--adaptive-probe`` change sampling semantics instead of just bandwidth.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimators as est
+from repro.core import mips
+from repro.core.mips.adaptive import stage_widths, unprobed_bound_table
+from repro.models import router as prouter
+
+N, D, T = 4096, 32, 16
+K = L = 64
+N_PROBE = 8
+
+# every SampleResult field except ``width`` (fixed path reports none)
+_FIELDS = ("index", "ok", "m", "max_val", "bound", "overflow")
+
+
+def _db(n=N, d=D, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    centers = jax.random.normal(k1, (32, d))
+    assign = jax.random.randint(k2, (n,), 0, 32)
+    db = centers[assign] + 0.3 * jax.random.normal(k3, (n, d))
+    return db / jnp.linalg.norm(db, axis=1, keepdims=True)
+
+
+def _queries(db, t=T, temp=0.05, seed=1):
+    ids = jax.random.randint(jax.random.key(seed), (t,), 0, db.shape[0])
+    return db[ids] / temp
+
+
+def _index(db, kind, **over):
+    if kind == "ivf":
+        cfg = mips.IVFConfig(
+            n_clusters=32, kmeans_iters=4, n_probe=N_PROBE, **over
+        )
+    else:
+        cfg = mips.PQConfig(
+            n_clusters=32, kmeans_iters=4, m_sub=4, pq_iters=4,
+            rerank=2 * K, n_probe=N_PROBE, **over
+        )
+    return mips.build_index(cfg, db)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: adaptive(init == max == n_probe) === fixed-width sampler
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["ivf", "ivfpq"])
+@pytest.mark.parametrize("fused", [False, True])
+def test_adaptive_degenerate_schedule_is_bitwise_fixed(kind, fused):
+    db = _db()
+    h = _queries(db)
+    key = jax.random.key(42)
+    fixed = _index(db, kind)
+    adap = _index(db, kind, n_probe_init=N_PROBE, n_probe_max=N_PROBE)
+
+    r_fix = est.local_gumbel_max(
+        key, db, h, k=K, l=L, index=fixed, fused=fused
+    )
+    r_adp = est.local_gumbel_max(
+        key, db, h, k=K, l=L, index=adap, fused=fused, adaptive=True
+    )
+    for f in _FIELDS:
+        a, b = getattr(r_fix, f), getattr(r_adp, f)
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"{kind} fused={fused}: field {f} diverged"
+        )
+    assert r_fix.width is None
+    np.testing.assert_array_equal(
+        np.asarray(r_adp.width), np.full((T,), N_PROBE, np.int32)
+    )
+
+
+@pytest.mark.parametrize("kind", ["ivf", "ivfpq"])
+def test_adaptive_topk_degenerate_matches_topk_batch(kind):
+    """Index-level parity: ids AND values bit-equal to the fixed query."""
+    db = _db(seed=3)
+    q = _queries(db, seed=4)
+    index = _index(db, kind)
+    fixed = index.topk_batch(q, K)
+    atk = index.topk_adaptive(
+        q, K, n_probe_init=N_PROBE, n_probe_max=N_PROBE
+    )
+    np.testing.assert_array_equal(np.asarray(fixed.ids), np.asarray(atk.ids))
+    np.testing.assert_array_equal(
+        np.asarray(fixed.values), np.asarray(atk.values)
+    )
+
+
+# ---------------------------------------------------------------------------
+# widening monotonicity + certificate semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["ivf", "ivfpq"])
+def test_certificate_pass_rate_monotone_in_width(kind):
+    """Widening can only help: the certificate-pass rate at each schedule
+    stage is non-decreasing in the stage width (U(w) shrinks, s_min grows).
+    """
+    db = _db(seed=5)
+    q = _queries(db, t=32, seed=6)
+    index = _index(db, kind)
+    widths = stage_widths(2, 32)
+    assert widths == (2, 4, 8, 16, 32)
+    rates = []
+    for w in widths:
+        atk = index.topk_adaptive(
+            q, K, c=1.0, n_probe_init=int(w), n_probe_max=int(w)
+        )
+        rates.append(float(np.mean(np.asarray(atk.certified))))
+    assert all(b >= a for a, b in zip(rates, rates[1:])), rates
+
+
+def test_staged_widen_stops_at_certified_width():
+    """Per-query widths land on the first certificate-passing stage, and a
+    certified staged query returns the same ids as probing at its width."""
+    db = _db(seed=7)
+    q = _queries(db, t=32, seed=8)
+    index = _index(db, "ivf", n_probe_init=2, n_probe_max=32)
+    c = 1.0
+    atk = index.topk_adaptive(q, K, c=c)
+    widths = stage_widths(2, 32)
+    assert set(np.asarray(atk.width).tolist()) <= set(widths)
+    # recompute each query at its reported width: ids must match exactly
+    for w in sorted(set(np.asarray(atk.width).tolist())):
+        sel = np.asarray(atk.width) == w
+        single = index.topk_adaptive(
+            q, K, c=c, n_probe_init=int(w), n_probe_max=int(w)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(atk.ids)[sel], np.asarray(single.ids)[sel]
+        )
+
+
+def test_unprobed_bound_dominates_unprobed_scores():
+    """Soundness of the certificate's upper bound: U[:, w] >= the true best
+    score in any cluster left unprobed at width w."""
+    db = _db(seed=9)
+    q = _queries(db, t=8, seed=10)
+    index = _index(db, "ivf")
+    st = index.state
+    qf = q.astype(jnp.float32)
+    c_scores = qf @ st.centroids.T
+    table = np.asarray(unprobed_bound_table(c_scores, st.radii, qf))
+    order = np.asarray(jnp.argsort(-c_scores, axis=1))
+    assign = np.asarray(
+        jnp.argmin(
+            (st.centroids * st.centroids).sum(-1)[None, :]
+            - 2.0 * (db @ st.centroids.T),
+            axis=1,
+        )
+    )
+    scores = np.asarray(qf @ db.T)  # (t, n)
+    n_c = st.centroids.shape[0]
+    for t in range(q.shape[0]):
+        for w in (1, 4, 16):
+            unprobed = set(order[t, w:].tolist())
+            mask = np.isin(assign, list(unprobed))
+            if not mask.any():
+                continue
+            assert table[t, w] >= scores[t, mask].max() - 1e-4
+    assert np.all(np.isneginf(table[:, n_c]))
+
+
+def test_spill_voids_certificate():
+    """A build with dropped rows must never certify (the bound can't see
+    spilled rows, so exactness is unprovable)."""
+    db = _db(seed=11)
+    q = _queries(db, t=8, seed=12)
+    index = mips.build_index(
+        mips.IVFConfig(
+            n_clusters=32, kmeans_iters=4, n_probe=N_PROBE,
+            cap_factor=0.25, overflow_frac=1.0 / 1024,
+        ),
+        db,
+    )
+    assert int(index.state.spill_count) > 0
+    atk = index.topk_adaptive(q, K, c=100.0, n_probe_init=2, n_probe_max=32)
+    assert not np.any(np.asarray(atk.certified))
+    np.testing.assert_array_equal(np.asarray(atk.width), 32)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+def test_router_features_and_stage_range():
+    db = _db(seed=13)
+    q = _queries(db, t=16, seed=14)
+    index = _index(db, "ivf")
+    widths = stage_widths(2, 32)
+    qf = q.astype(jnp.float32)
+    c_scores = qf @ index.state.centroids.T
+    feats = prouter.stage_features(c_scores, qf, widths)
+    assert feats.shape == (16, len(widths) + 1)
+    assert np.all(np.isfinite(np.asarray(feats)))
+    r = prouter.init_router(jax.random.key(0), len(widths))
+    stage = np.asarray(r.init_stage(c_scores, qf, widths))
+    assert stage.shape == (16,)
+    assert stage.min() >= 0 and stage.max() < len(widths)
+
+
+def test_train_router_roundtrip_and_routing(tmp_path):
+    db = _db(seed=15)
+    q = _queries(db, t=64, seed=16)
+    index = _index(db, "ivf", n_probe_init=2, n_probe_max=32)
+    r = prouter.train_router(index, q, K, c=1.0, steps=50)
+    path = str(tmp_path / "sub" / "router.npz")
+    prouter.save_router(path, r)
+    r2 = prouter.load_router(path)
+    for a, b in zip(r, r2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # routed query: still certified-or-at-ceiling, widths in-schedule
+    atk = index.topk_adaptive(q, K, c=1.0, router=r2)
+    assert set(np.asarray(atk.width).tolist()) <= set(stage_widths(2, 32))
+    # certificate gates every step, so routed ids match unrouted where both
+    # certify at the same width (routing is bandwidth, never correctness)
+    base = index.topk_adaptive(q, K, c=1.0)
+    same = np.asarray(atk.width) == np.asarray(base.width)
+    both = same & np.asarray(atk.certified) & np.asarray(base.certified)
+    np.testing.assert_array_equal(
+        np.asarray(atk.ids)[both], np.asarray(base.ids)[both]
+    )
+
+
+def test_certified_stage_labels_match_first_pass():
+    db = _db(seed=17)
+    q = _queries(db, t=16, seed=18)
+    index = _index(db, "ivf")
+    widths = stage_widths(2, 32)
+    labels = np.asarray(
+        prouter.certified_stage_labels(index, q, K, widths, c=1.0)
+    )
+    for t in range(q.shape[0]):
+        passes = [
+            bool(
+                np.asarray(
+                    index.topk_adaptive(
+                        q[t:t + 1], K, c=1.0,
+                        n_probe_init=int(w), n_probe_max=int(w),
+                    ).certified
+                )[0]
+            )
+            for w in widths
+        ]
+        want = passes.index(True) if any(passes) else len(widths) - 1
+        assert labels[t] == want
+
+
+# ---------------------------------------------------------------------------
+# anisotropic (score-aware) codebook training
+# ---------------------------------------------------------------------------
+
+
+def test_anisotropic_eta1_matches_standard_lloyd():
+    from repro.core.quant.kmeans import anisotropic_lloyd, lloyd
+
+    x = np.asarray(_db(n=512, d=16, seed=19), np.float32)
+    u = x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+    cent0 = x[:8].copy()
+    std = np.asarray(lloyd(jnp.asarray(x), jnp.asarray(cent0), 5))
+    ani = np.asarray(
+        anisotropic_lloyd(
+            jnp.asarray(x), jnp.asarray(u), jnp.asarray(cent0), 5, eta=1.0
+        )
+    )
+    np.testing.assert_allclose(ani, std, atol=1e-3)
+
+
+def test_anisotropic_eta_reduces_parallel_loss():
+    """eta > 1 trades total residual for query-parallel residual — the
+    component that perturbs inner-product scores."""
+    from repro.core.quant.kmeans import anisotropic_lloyd
+
+    rng = np.random.default_rng(20)
+    x = rng.standard_normal((2048, 16)).astype(np.float32)
+    u = x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+    cent0 = x[:16].copy()
+
+    def parallel_loss(cent):
+        from repro.core.quant.kmeans import assign_clusters
+
+        a = np.asarray(assign_clusters(jnp.asarray(x), jnp.asarray(cent)))
+        r = x - np.asarray(cent)[a]
+        return float((((r * u).sum(-1)) ** 2).mean())
+
+    iso = np.asarray(
+        anisotropic_lloyd(
+            jnp.asarray(x), jnp.asarray(u), jnp.asarray(cent0), 6, eta=1.0
+        )
+    )
+    ani = np.asarray(
+        anisotropic_lloyd(
+            jnp.asarray(x), jnp.asarray(u), jnp.asarray(cent0), 6, eta=4.0
+        )
+    )
+    assert parallel_loss(ani) < parallel_loss(iso)
+
+
+def test_pq_anisotropic_build_queries_fine():
+    """An eta > 0 IVF-PQ build is a drop-in: same shapes, sane recall."""
+    db = _db(seed=21)
+    q = _queries(db, t=16, seed=22)
+    exact = mips.build_index(mips.ExactConfig(), db)
+    pq = _index(db, "ivfpq", anisotropic_eta=4.0)
+    got = np.asarray(pq.topk_batch(q, K).ids)
+    want = np.asarray(exact.topk_batch(q, K).ids)
+    rec = np.mean([len(set(g) & set(w)) / K for g, w in zip(got, want)])
+    assert rec >= 0.8, rec
+
+
+# ---------------------------------------------------------------------------
+# head config validation
+# ---------------------------------------------------------------------------
+
+
+def test_head_config_adaptive_validation():
+    from repro.core.amortized_head import HeadConfig
+
+    with pytest.raises(ValueError, match="adaptive"):
+        HeadConfig(
+            n=4096, mode="amortized", mips="exact", adaptive_probe=True
+        ).resolved()
+    with pytest.raises(ValueError, match="exceeds"):
+        HeadConfig(
+            n=4096, mode="amortized", mips="ivf", adaptive_probe=True,
+            n_probe_init=16, n_probe_max=8,
+        ).resolved()
+    cfg = HeadConfig(
+        n=4096, mode="amortized", mips="ivf", adaptive_probe=True,
+        n_probe_init=2, n_probe_max=16,
+    ).resolved()
+    assert (cfg.n_probe_init, cfg.n_probe_max) == (2, 16)

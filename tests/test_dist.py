@@ -103,7 +103,7 @@ def test_dist_head_sample_distribution():
         def check(samp, index, rounds=800):
             ids_all, oks = [], []
             for s in range(rounds):
-                ids, ok = samp(index, jax.random.key(s))
+                ids, ok, _ = samp(index, jax.random.key(s))
                 ids_all.append(np.asarray(ids))
                 oks.append(np.asarray(ok))
             ids = np.concatenate(ids_all)      # rounds * 8 samples
@@ -360,6 +360,61 @@ def test_dist_fused_decode_bitwise_parity():
                 assert np.array_equal(np.asarray(x), np.asarray(y)), (
                     mips_kind, x, y)
             print("parity", mips_kind, "OK")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_dist_adaptive_probe_parity_and_staging():
+    """Sharded adaptive probe: with init == max == n_probe the adaptive
+    dist_head_sample is bitwise the fixed-width one (ids AND ok), and the
+    ShardedIndex degenerate topk_adaptive matches topk_batch exactly; a
+    staged config reports in-schedule global widths (pmax over shards)."""
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.amortized_head import HeadConfig, make_index
+        from repro.core.mips.adaptive import stage_widths
+        from repro.models.head import dist_head_sample
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        N, D, T = 4096, 32, 8
+        emb = jax.random.normal(jax.random.key(0), (N, D))
+        emb = emb / jnp.linalg.norm(emb, axis=1, keepdims=True)
+        h = emb[jax.random.randint(jax.random.key(1), (T,), 0, N)] / 0.05
+
+        for mips_kind in ("ivf", "ivfpq"):
+            cfg = HeadConfig(n=N, k=128, l=128, mode="amortized",
+                             mips=mips_kind, n_probe=4, min_amortized_n=1)
+            index = make_index(cfg, emb, mesh=mesh)
+
+            # index-level degenerate parity on the sharded backend
+            fixed = index.topk_batch(h, 64)
+            atk = index.topk_adaptive(h, 64, n_probe_init=4, n_probe_max=4)
+            assert np.array_equal(np.asarray(fixed.ids), np.asarray(atk.ids))
+            assert np.array_equal(np.asarray(fixed.values),
+                                  np.asarray(atk.values))
+
+            # head-level degenerate parity (adaptive cfg, init == max)
+            cfg_a = dataclasses.replace(
+                cfg, adaptive_probe=True, n_probe_init=4, n_probe_max=4)
+            ids_f, ok_f, w_f = dist_head_sample(
+                mesh, emb, h, jax.random.key(3), cfg, index=index)
+            ids_a, ok_a, w_a = dist_head_sample(
+                mesh, emb, h, jax.random.key(3), cfg_a, index=index)
+            assert np.array_equal(np.asarray(ids_f), np.asarray(ids_a))
+            assert np.array_equal(np.asarray(ok_f), np.asarray(ok_a))
+            assert np.all(np.asarray(w_f) == -1), w_f  # fixed: sentinel
+            assert np.all(np.asarray(w_a) == 4), w_a
+
+            # staged config: widths are pmax-combined and in-schedule
+            cfg_s = dataclasses.replace(
+                cfg, adaptive_probe=True, n_probe_init=2, n_probe_max=8)
+            ids_s, ok_s, w_s = dist_head_sample(
+                mesh, emb, h, jax.random.key(3), cfg_s, index=index)
+            sched = set(stage_widths(2, 8))
+            assert set(np.asarray(w_s).tolist()) <= sched, w_s
+            print("adaptive parity", mips_kind, "OK")
         print("OK")
     """)
     assert "OK" in out

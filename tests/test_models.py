@@ -53,8 +53,8 @@ def test_smoke_decode_step(arch):
     cache = m.init_cache(B, 128)
     ids = jnp.zeros((B,), jnp.int32)
     pos = jnp.zeros((B,), jnp.int32)
-    nxt, ok, cache = jax.jit(m.decode_step)(params, cache, ids, pos,
-                                            jax.random.key(4))
+    nxt, ok, cache, _ = jax.jit(m.decode_step)(params, cache, ids, pos,
+                                               jax.random.key(4))
     assert nxt.shape == (B,)
     assert bool(jnp.all((nxt >= 0) & (nxt < cfg.vocab))), arch
 
@@ -129,16 +129,17 @@ def test_prefill_matches_decode_continuation(arch):
     # path B: feed tokens one-by-one through decode_step
     cache_b = m.init_cache(1, 64)
     for t in range(l):
-        nxt_b, ok_b, cache_b = m.decode_step(
+        nxt_b, ok_b, cache_b, _ = m.decode_step(
             params, cache_b, toks[:, t], jnp.array([t], jnp.int32),
             jax.random.fold_in(jax.random.key(9), t),
         )
     # the *next* sampled token after both paths, same key => same sample
-    n_a, _, _ = m.decode_step(params, cache_a, nxt_a,
-                              pos_a, jax.random.key(11))
+    n_a, _, _, _ = m.decode_step(params, cache_a, nxt_a,
+                                 pos_a, jax.random.key(11))
     # replicate: feed nxt_a as the continuation token in path B
-    n_b, _, _ = m.decode_step(params, cache_b, nxt_a,
-                              jnp.array([l], jnp.int32), jax.random.key(11))
+    n_b, _, _, _ = m.decode_step(params, cache_b, nxt_a,
+                                 jnp.array([l], jnp.int32),
+                                 jax.random.key(11))
     assert int(n_a[0]) == int(n_b[0])
 
 
