@@ -25,7 +25,8 @@ import time
 
 SCHEMA = "bench-trajectory-v1"
 # suites accepting a reduced CI grid (fn(report, smoke=True))
-SMOKE_SUITES = ("serve", "train", "pq", "decode_fused", "adaptive")
+SMOKE_SUITES = ("serve", "train", "pq", "decode_fused", "adaptive",
+                "serve_load")
 
 
 def load_trajectory(paths: list[str]) -> list[dict]:
@@ -89,6 +90,7 @@ def main() -> None:
         sampling_accuracy,
         sampling_speed,
         serve_engine,
+        serve_load,
         train_engine,
     )
 
@@ -101,6 +103,7 @@ def main() -> None:
         "refresh": index_refresh.run,
         "dist": dist_head.run,
         "serve": serve_engine.run,
+        "serve_load": serve_load.run,
         "train": train_engine.run,
         "pq": pq_index.run,
         "decode_fused": decode_fused.run,

@@ -119,24 +119,32 @@ def data_shardings(batch_shapes: Any, mesh) -> Any:
     return jax.tree.map(one, batch_shapes)
 
 
-def cache_shardings(cache_shapes: Any, mesh, cfg) -> Any:
+def cache_shardings(cache_shapes: Any, mesh, cfg, paged: bool = False) -> Any:
     """KV/state caches: batch dim over ("pod","data") when divisible; the
-    head/width dim over "model" when divisible (decode TP)."""
+    head/width dim over "model" when divisible (decode TP).
+
+    ``paged``: the k/v leaves are the shared block pool ``(layers,
+    n_blocks, block_len, KV, hd)`` — axis 1 is a *physical block id*, not
+    a batch dim, and page-table gathers index it from every data row, so
+    it must stay replicated over ("pod","data") (only KV-head TP applies).
+    """
     fa = fsdp_axes(mesh)
 
     def one(path, leaf):
         keys = [str(getattr(p, "key", p)) for p in path]
         shape = leaf.shape  # leading dim = layer stack
         spec = [None] * len(shape)
-        if len(shape) >= 2:
+        name = keys[-1]
+        pool_leaf = paged and name in ("k", "v") and len(shape) == 5
+        if len(shape) >= 2 and not pool_leaf:
             if fa and _dim_ok(shape[1], mesh, fa):
                 spec[1] = fa  # batch
-        name = keys[-1]
         if name in ("k", "v") and len(shape) == 5:
-            # (layers, B, S, KV, hd): prefer KV-head TP, else seq TP
+            # dense (layers, B, S, KV, hd) / pool (layers, nb, bl, KV, hd):
+            # prefer KV-head TP, else (dense only) seq TP
             if _dim_ok(shape[3], mesh, "model"):
                 spec[3] = "model"
-            elif _dim_ok(shape[2], mesh, "model"):
+            elif not pool_leaf and _dim_ok(shape[2], mesh, "model"):
                 spec[2] = "model"
         elif name == "state" and len(shape) >= 3:
             if _dim_ok(shape[2], mesh, "model"):

@@ -47,6 +47,20 @@ def main() -> None:
                     choices=["truncate", "reject"],
                     help="admission policy for prompts longer than "
                          "max_seq - new_tokens")
+    ap.add_argument("--block-len", type=int, default=0,
+                    help="paged KV cache: block size in positions (0: dense "
+                         "slot-reserved rings). Must divide the attn ring "
+                         "length min(window or max-seq, max-seq)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="paged KV cache: shared pool size in blocks "
+                         "(0: auto — slots * pages-per-slot, the dense-"
+                         "equivalent coverage)")
+    ap.add_argument("--sched", default="fifo", choices=["fifo", "slo"],
+                    help="admission scheduler: fifo (arrival order, fixed "
+                         "window) or slo (priority + TTFT-deadline order, "
+                         "adaptive decode window)")
+    ap.add_argument("--ttft-slo", type=float, default=0.5,
+                    help="slo scheduler: per-request TTFT target (seconds)")
     ap.add_argument("--strict", action="store_true",
                     help="re-sample certificate-failed tokens exactly "
                          "(in-dispatch fallback)")
@@ -101,6 +115,8 @@ def main() -> None:
         decode_window=args.decode_window, prefill_chunk=args.prefill_chunk,
         overlength=args.overlength, strict=args.strict,
         probe_router=args.probe_router,
+        block_len=args.block_len, n_blocks=args.n_blocks,
+        sched=args.sched, ttft_slo_s=args.ttft_slo,
     ))
     results = server.run(prompts)
     toks = sum(len(r.tokens) for r in results)
@@ -120,6 +136,14 @@ def main() -> None:
             [r.ttft_s for r in results if r.status == "ok"] or [0.0])), 2),
         "itl_p50_ms": round(float(np.median(
             [r.itl_ms for r in results if r.status == "ok"] or [0.0])), 3),
+        "queue_p50_ms": round(1e3 * float(np.median(
+            [r.queue_time_s for r in results if r.status == "ok"]
+            or [0.0])), 2),
+        "queue_depth_peak": st["queue_depth_peak"],
+        "slot_occupancy_peak": st["slot_occupancy_peak"],
+        "block_util_peak": round(st["block_util_peak"], 4),
+        "block_stalls": st["block_stalls"],
+        "cache_mb": round(st["cache_bytes"] / 1e6, 3),
         "index_mb": (
             round(server.index.memory_bytes() / 1e6, 2)
             if server.index is not None else 0.0

@@ -206,7 +206,8 @@ def _advance(state: dict, nxt, eos_id: int, max_seq: int):
 
 
 def make_decode_loop_step(model: Model, window: int, eos_id: int,
-                          max_seq: int, strict: bool = False):
+                          max_seq: int, strict: bool = False,
+                          paged: bool = False):
     """Fused multi-token decode: ``decode_loop(params, cache, state,
     base_key, index=None, router=None) -> (cache, state, tokens (T,B),
     ok (T,B), emitted (T,B), widths (T,B))``.
@@ -228,6 +229,12 @@ def make_decode_loop_step(model: Model, window: int, eos_id: int,
     (kernels/decode_fused.py) — inherited here through ``model.decode_step``
     with no loop-level change; per-token keys from :func:`slot_keys` keep
     the samples bit-identical either way.
+
+    ``paged`` reads the slot page tables from ``state["pages"]`` ((B,
+    n_pages) physical-block ids, sentinel for unallocated) and passes each
+    slot's ``active`` flag as the KV ``write_mask`` — a retired slot's
+    blocks may already belong to another request, so its (frozen, garbage)
+    decode writes must be dropped on device.
     """
 
     def decode_loop(params, cache, state, base_key, index=None, router=None):
@@ -238,6 +245,8 @@ def make_decode_loop_step(model: Model, window: int, eos_id: int,
                 params, cache, state["ids"], state["pos"], None, index=index,
                 keys=keys, strict=strict, strict_live=state["active"],
                 router=router,
+                pages=state["pages"] if paged else None,
+                write_mask=state["active"] if paged else None,
             )
             state, emitted = _advance(state, nxt, eos_id, max_seq)
             return (cache, state), (state["ids"], ok, emitted, width)
@@ -251,10 +260,11 @@ def make_decode_loop_step(model: Model, window: int, eos_id: int,
 
 
 def make_prefill_into_cache_step(model: Model, max_seq: int, eos_id: int,
-                                 max_new_tokens: int, strict: bool = False):
+                                 max_new_tokens: int, strict: bool = False,
+                                 paged: bool = False):
     """Chunked batched prefill + slot admission: ``prefill_admit(params,
     cache, state, tokens (Bn,Lp), lengths, slots, rids, base_key,
-    index=None) -> (cache, state, first_ids, ok)``.
+    index=None, pages=None) -> (cache, state, first_ids, ok)``.
 
     Writes each admitted prompt's KV/SSM state straight into its slot's
     cache (one dispatch per admission batch instead of one per prompt
@@ -262,32 +272,42 @@ def make_prefill_into_cache_step(model: Model, max_seq: int, eos_id: int,
     state, and commits the slot records (ids/pos/active/budget/rid) on
     device. Rows with slot >= batch_slots are admission padding — their
     scatters are dropped.
+
+    ``paged``: ``pages`` ((Bn, n_pages) physical-block ids per admitted
+    row, sentinel-filled for pad rows) routes the prefill-built KV rings
+    into the shared pool and is committed into ``state["pages"]`` at each
+    row's slot, where the fused decode loop walks it.
     """
 
     def prefill_admit(params, cache, state, tokens, lengths, slots, rids,
-                      base_key, index=None):
+                      base_key, index=None, pages=None):
         lengths = lengths.astype(jnp.int32)
         keys = slot_keys(base_key, rids, lengths - 1)
         nxt, ok, cache = model.prefill_into_cache(
             params, cache, tokens, lengths, slots, keys, max_seq=max_seq,
             index=index, strict=strict,
             strict_live=rids >= 0,  # admission pad rows sample garbage
+            pages=pages if paged else None,
         )
         budget = jnp.full_like(lengths, max_new_tokens - 1)
         eos_hit = (nxt == eos_id) if eos_id >= 0 else jnp.zeros(
             nxt.shape, bool
         )
         alive = ~(eos_hit | (budget <= 0) | (lengths + 1 > max_seq - 1))
-        state = {
+        new_state = {
             "ids": state["ids"].at[slots].set(nxt),
             "pos": state["pos"].at[slots].set(lengths),
             "active": state["active"].at[slots].set(alive),
             "budget": state["budget"].at[slots].set(budget),
             "rid": state["rid"].at[slots].set(rids.astype(jnp.int32)),
         }
+        if paged:
+            new_state["pages"] = state["pages"].at[slots].set(
+                pages.astype(state["pages"].dtype)
+            )
         # `alive` stays device-internal (committed into state["active"]):
         # the host re-derives liveness from the emitted tokens
-        return cache, state, nxt, ok
+        return cache, new_state, nxt, ok
 
     return prefill_admit
 
@@ -300,11 +320,11 @@ def make_reference_serve_step(model: Model, strict: bool = False):
     samples, one dispatch per token)."""
 
     def serve_step(params, cache, ids, pos, rids, base_key, index=None,
-                   router=None):
+                   router=None, pages=None, write_mask=None):
         keys = slot_keys(base_key, rids, pos)
         nxt, ok, cache, width = model.decode_step(
             params, cache, ids, pos, None, index=index, keys=keys,
-            strict=strict, router=router,
+            strict=strict, router=router, pages=pages, write_mask=write_mask,
         )
         return nxt, ok, cache, pos + 1, width
 

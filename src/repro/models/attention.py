@@ -250,6 +250,29 @@ def init_cache(
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_pool(
+    cfg: ArchConfig, n_blocks: int, block_len: int, dtype
+) -> dict:
+    """Shared paged KV pool: ``n_blocks`` blocks of ``block_len`` positions,
+    owned by no slot — a per-slot page table (``pages``, threaded through
+    :func:`decode`) maps each slot's ring pages onto physical blocks. One
+    physical block id addresses the same block slice in every layer (the
+    pool leaf carries the layer-stack axis), so one allocation covers the
+    whole trunk."""
+    shape = (n_blocks, block_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_bytes_per_slot(cfg: ArchConfig, max_seq: int, dtype,
+                         window: int | None = None) -> int:
+    """HBM bytes ONE dense slot reserves for this layer's KV ring — the
+    quantity the paged pool frees serving from (slot count × this no longer
+    has to fit worst-case ``max_seq``)."""
+    win = cfg.window if window is None else window
+    s_c = min(win, max_seq) if win else max_seq
+    return 2 * s_c * cfg.n_kv_heads * cfg.head_dim * jnp.dtype(dtype).itemsize
+
+
 def decode(
     p: dict,
     cfg: ArchConfig,
@@ -259,10 +282,34 @@ def decode(
     *,
     window: int | None = None,
     use_kernel: bool | None = None,  # None: kernel on TPU, XLA ref on CPU
+    pages: jax.Array | None = None,  # (B, n_pages) physical block per page
+    write_mask: jax.Array | None = None,  # (B,) rows allowed to write KV
 ) -> tuple[jax.Array, dict]:
+    """Single-token decode against a per-slot KV ring OR a paged pool.
+
+    Dense (``pages=None``): ``cache`` leaves are ``(B, s_c, KV, hd)`` rings
+    owned by their slot; the new token writes ring slot ``pos % s_c``.
+
+    Paged: ``cache`` leaves are the shared ``(n_blocks, block_len, KV,
+    hd)`` pool and ``pages[b, i]`` names the physical block behind slot
+    ``b``'s i-th ring page — ring placement becomes page-table arithmetic
+    (page ``(pos % s_c) // block_len``, offset ``(pos % s_c) % block_len``
+    with ``s_c = n_pages * block_len``). Unallocated pages carry an
+    out-of-range sentinel: their writes are dropped by XLA scatter and
+    their (clamped-gather) garbage is masked by ``lengths`` before the
+    softmax, so the attended view is BITWISE the dense ring. ``write_mask``
+    (the engine passes the slot's ``active`` flag) drops retired slots'
+    writes — mandatory once blocks are recycled across requests, a no-op
+    effect-wise in the dense layout where a frozen slot only ever
+    overwrites its own ring row with the identical value.
+    """
     b, _, d = x.shape
     dt = x.dtype
-    s_c = cache["k"].shape[1]
+    if pages is None:
+        s_c = cache["k"].shape[1]
+    else:
+        n_blocks, block_len = cache["k"].shape[:2]
+        s_c = pages.shape[1] * block_len
     q = (x @ p["wq"].astype(dt)).reshape(b, 1, cfg.n_heads, cfg.head_dim)
     k = (x @ p["wk"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
     v = (x @ p["wv"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
@@ -273,10 +320,27 @@ def decode(
     # applied at their absolute position, so slot order is irrelevant)
     slot = pos % s_c
     ar = jnp.arange(b)
-    cache = {
-        "k": cache["k"].at[ar, slot].set(k[:, 0]),
-        "v": cache["v"].at[ar, slot].set(v[:, 0]),
-    }
+    if pages is None:
+        cache = {
+            "k": cache["k"].at[ar, slot].set(k[:, 0]),
+            "v": cache["v"].at[ar, slot].set(v[:, 0]),
+        }
+        k_view, v_view = cache["k"], cache["v"]
+    else:
+        phys = jnp.take_along_axis(
+            pages, (slot // block_len)[:, None], axis=1
+        )[:, 0]
+        if write_mask is not None:  # retired slot: block may be reowned
+            phys = jnp.where(write_mask, phys, n_blocks)  # OOB -> dropped
+        off = slot % block_len
+        cache = {
+            "k": cache["k"].at[phys, off].set(k[:, 0]),
+            "v": cache["v"].at[phys, off].set(v[:, 0]),
+        }
+        vshape = (b, s_c, cfg.n_kv_heads, cfg.head_dim)
+        # gather the slot's ring view (sentinel pages clamp; masked below)
+        k_view = cache["k"][pages].reshape(vshape)
+        v_view = cache["v"][pages].reshape(vshape)
     lengths = jnp.minimum(pos + 1, s_c).astype(jnp.int32)
     from repro.kernels import ops as kops
 
@@ -285,10 +349,10 @@ def decode(
         # the kernel is exercised explicitly by tests/test_kernels.py
         use_kernel = not kops.resolve_interpret()
     if use_kernel:
-        o = kops.flash_decode(q[:, 0], cache["k"], cache["v"], lengths)
+        o = kops.flash_decode(q[:, 0], k_view, v_view, lengths)
     else:
         from repro.kernels import ref as kref
 
-        o = kref.flash_decode_ref(q[:, 0], cache["k"], cache["v"], lengths)
+        o = kref.flash_decode_ref(q[:, 0], k_view, v_view, lengths)
     out = o.astype(dt).reshape(b, 1, cfg.d_attn) @ p["wo"].astype(dt)
     return out, cache

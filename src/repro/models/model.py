@@ -169,13 +169,17 @@ class Model:
         return total, {"nll": loss.mean(), "aux": aux, "log_z": log_z}
 
     # ---------------------------------------------------------------- decode
-    def init_cache(self, batch: int, max_seq: int, dtype=None):
+    def init_cache(self, batch: int, max_seq: int, dtype=None, paged=None):
+        """``paged`` (a :class:`repro.models.transformer.PagedLayout`) swaps
+        the attn KV leaves for the shared block pool; see init_cache there."""
         dtype = self.compute_dtype if dtype is None else dtype
-        return transformer.init_cache(self.cfg, batch, max_seq, dtype)
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype,
+                                      paged=paged)
 
     def decode_step(
         self, params, cache, ids: jax.Array, pos: jax.Array, key, index=None,
         *, keys=None, strict: bool = False, strict_live=None, router=None,
+        pages=None, write_mask=None,
     ) -> tuple[jax.Array, jax.Array, Any, jax.Array]:
         """One serving step: (B,) last ids + (B,) positions -> next ids.
 
@@ -193,11 +197,17 @@ class Model:
         token's sample is invariant to batch composition and decode fusion.
         ``strict`` re-samples certificate-failed tokens exactly (in-dispatch
         ``lax.cond`` fallback — single-device head only).
+
+        ``pages`` ((B, n_pages) page table) switches the attn cache leaves
+        to the paged-pool layout; ``write_mask`` ((B,) bool, the engine's
+        ``active`` flags) drops retired slots' KV writes so recycled blocks
+        are never corrupted.
         """
         cfg = self.cfg
         x = params["embed"][ids][:, None].astype(self.compute_dtype)  # (B,1,d)
         h, cache = transformer.apply_trunk_decode(params, cfg, x, cache, pos,
-                                                  mesh=self.mesh)
+                                                  mesh=self.mesh, pages=pages,
+                                                  write_mask=write_mask)
         hq = h[:, 0]  # (B, d)
         if self._head_mesh() is not None:
             if strict:
@@ -252,7 +262,7 @@ class Model:
     def prefill_into_cache(
         self, params, cache, tokens: jax.Array, lengths: jax.Array,
         slots: jax.Array, keys, max_seq: int, index=None,
-        strict: bool = False, strict_live=None,
+        strict: bool = False, strict_live=None, pages=None,
     ) -> tuple[jax.Array, jax.Array, Any]:
         """Batched chunked prefill written directly into serving-cache slots.
 
@@ -273,6 +283,9 @@ class Model:
             discarded (admission-batch padding).
           keys: (Bn,) per-request typed PRNG keys for the first sample.
           max_seq: the serving cache's max_seq (cache shapes must match).
+          pages: optional (Bn, n_pages) physical-block table — the cache is
+            the paged pool and each admitted row's KV ring is page-cut into
+            its allocated blocks (sentinel entries dropped).
 
         Returns (next_ids (Bn,), ok (Bn,), cache).
         """
@@ -308,7 +321,8 @@ class Model:
                 strict_live=strict_live,
             )
             nxt, ok = res.index, res.ok
-        cache = transformer.insert_cache_slots(cache, part, slots)
+        cache = transformer.insert_cache_slots(cache, part, slots, cfg=cfg,
+                                               pages=pages)
         return nxt, ok, cache
 
     # ---------------------------------------------------------------- encoder

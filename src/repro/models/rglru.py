@@ -111,11 +111,20 @@ def forward(
 
 
 def init_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    """Per-slot decode state. Like the SSM block this is FIXED-SIZE in the
+    sequence dimension (a (W,) recurrence state + conv tail), so the paged
+    serving cache keeps it slot-resident — only attention KV is pooled."""
     w = cfg.lru_dim
     return {
         "state": jnp.zeros((batch, w), jnp.float32),
         "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
     }
+
+
+def cache_bytes_per_slot(cfg: ArchConfig, dtype) -> int:
+    """HBM bytes one serving slot's RG-LRU state costs (max_seq-free)."""
+    w = cfg.lru_dim
+    return 4 * w + (cfg.conv_width - 1) * w * jnp.dtype(dtype).itemsize
 
 
 def decode(

@@ -157,6 +157,10 @@ def forward(
 
 
 def init_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    """Per-slot decode state. Deliberately FIXED-SIZE in the sequence
+    dimension (an (H, hd, N) state + a (width-1)-deep conv tail), so the
+    paged serving cache keeps it slot-resident: only the attention KV ring
+    pays per-position HBM and therefore only attention is block-pooled."""
     conv_dim = cfg.d_inner + 2 * cfg.ssm_state
     return {
         "state": jnp.zeros(
@@ -164,6 +168,15 @@ def init_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
         ),
         "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
     }
+
+
+def cache_bytes_per_slot(cfg: ArchConfig, dtype) -> int:
+    """HBM bytes one serving slot's SSM state costs (max_seq-independent —
+    the reason slots are cheap once the KV ring is paged)."""
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    state = 4 * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state  # fp32
+    conv = (cfg.conv_width - 1) * conv_dim * jnp.dtype(dtype).itemsize
+    return state + conv
 
 
 def decode(

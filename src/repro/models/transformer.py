@@ -8,6 +8,7 @@ layer axis and consumed by ``lax.scan`` — keeping HLO size (and therefore
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -25,6 +26,8 @@ __all__ = [
     "init_cache",
     "apply_trunk_decode",
     "insert_cache_slots",
+    "PagedLayout",
+    "ring_len",
 ]
 
 REMAT = True  # module-level knob (tests may disable for speed)
@@ -36,6 +39,42 @@ def _layer_window(cfg: ArchConfig) -> int:
     ring and the prefill-built cache silently disagree on shape/semantics
     (the griffin local_window bug this replaces)."""
     return cfg.local_window if cfg.layer_pattern == "griffin" else cfg.window
+
+
+def ring_len(cfg: ArchConfig, max_seq: int) -> int:
+    """KV ring length s_c for this arch's attn layers — the quantity a
+    per-slot page table must cover (``n_pages * block_len == s_c``). Public
+    because the serving allocator sizes page tables from it."""
+    win = _layer_window(cfg)
+    return min(win, max_seq) if win else max_seq
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Paged-pool geometry for the attention KV cache.
+
+    ``n_blocks`` physical blocks of ``block_len`` positions are shared by
+    all serving slots; a per-slot page table of ``ring_len(cfg, max_seq) //
+    block_len`` entries maps ring pages onto physical blocks. Block id
+    ``n_blocks`` is the OOB sentinel for unallocated pages (scatter drops
+    it, gather clamps — garbage masked by decode ``lengths``). SSM/RG-LRU/
+    conv state is max_seq-free and stays slot-resident (dense)."""
+
+    block_len: int
+    n_blocks: int
+
+    def n_pages(self, cfg: ArchConfig, max_seq: int) -> int:
+        s_c = ring_len(cfg, max_seq)
+        if s_c % self.block_len:
+            raise ValueError(
+                f"block_len={self.block_len} must divide the KV ring length "
+                f"s_c={s_c} (window/max_seq geometry)"
+            )
+        return s_c // self.block_len
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_blocks
 
 
 def _constrain_batch(x: jax.Array, mesh):
@@ -263,7 +302,14 @@ def apply_trunk_prefill(
     return h, caches
 
 
-def insert_cache_slots(full: list, part: list, slots: jax.Array) -> list:
+def insert_cache_slots(
+    full: list,
+    part: list,
+    slots: jax.Array,
+    *,
+    cfg: ArchConfig | None = None,
+    pages: jax.Array | None = None,
+) -> list:
     """Scatter a prefill-built cache ``part`` (leaves (layers, Bn, ...))
     into batch slots of a serving cache ``full`` (leaves (layers, B, ...)).
 
@@ -272,17 +318,61 @@ def insert_cache_slots(full: list, part: list, slots: jax.Array) -> list:
     request. Rows whose slot id is out of range (>= B) are dropped by XLA's
     scatter semantics; the engine uses slot id B for the pad rows of a
     partially-filled admission batch.
+
+    Paged layout (``pages`` given, requires ``cfg``): attn KV leaves of
+    ``full`` are the shared pool ``(layers, n_blocks, block_len, KV, hd)``;
+    the prefill-built ring ``(layers, Bn, s_c, KV, hd)`` is re-cut into
+    pages and scattered to each admitted row's physical blocks
+    (``pages[b, i]``, sentinel ``n_blocks`` for unallocated/pad rows —
+    dropped). Non-attn leaves stay slot-scattered as in the dense layout.
     """
-    return jax.tree.map(
-        lambda f, p: f.at[:, slots].set(p.astype(f.dtype)), full, part
-    )
+    if pages is None:
+        return jax.tree.map(
+            lambda f, p: f.at[:, slots].set(p.astype(f.dtype)), full, part
+        )
+    if cfg is None:
+        raise ValueError("paged insert_cache_slots needs cfg")
+    block_len = None
+    for g_full, (pattern, _) in zip(full, block_groups(cfg)):
+        for j, kind in enumerate(pattern):
+            if kind == "attn":
+                block_len = g_full[str(j)]["k"].shape[2]
+    assert block_len is not None, "paged insert on an attn-free arch"
+    n_pages = pages.shape[1]
+
+    def _scatter_attn(f, p):
+        # p: (layers, Bn, s_c, KV, hd) -> page-cut -> pool scatter
+        lyr, bn = p.shape[:2]
+        pr = p.reshape((lyr, bn, n_pages, block_len) + p.shape[3:])
+        return f.at[:, pages].set(pr.astype(f.dtype))
+
+    out = []
+    for g_full, g_part, (pattern, _) in zip(full, part, block_groups(cfg)):
+        new_g = {}
+        for j, kind in enumerate(pattern):
+            f, p = g_full[str(j)], g_part[str(j)]
+            if kind == "attn":
+                new_g[str(j)] = jax.tree.map(_scatter_attn, f, p)
+            else:
+                new_g[str(j)] = jax.tree.map(
+                    lambda fl, pl: fl.at[:, slots].set(pl.astype(fl.dtype)),
+                    f, p,
+                )
+        out.append(new_g)
+    return out
 
 
 # ----------------------------------------------------------------- decode
 
 
-def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int, dtype):
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int, dtype,
+                 paged: PagedLayout | None = None):
     if kind == "attn":
+        if paged is not None:
+            paged.n_pages(cfg, max_seq)  # validate geometry
+            return attention.init_pool(
+                cfg, paged.n_blocks, paged.block_len, dtype
+            )
         win = _layer_window(cfg)
         return attention.init_cache(cfg, batch, max_seq, dtype, window=win)
     if kind == "ssm":
@@ -292,13 +382,27 @@ def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_seq: int, dtype):
     raise ValueError(kind)
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> list:
-    """Cache pytree mirroring the block-group structure (stacked)."""
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype,
+               paged: PagedLayout | None = None) -> list:
+    """Cache pytree mirroring the block-group structure (stacked).
+
+    With ``paged`` the attn leaves become the shared block pool
+    ``(count, n_blocks, block_len, KV, hd)`` — batch-free; slot -> position
+    resolution happens through the page table at decode/insert time. SSM /
+    RG-LRU leaves keep their dense per-slot ``(count, batch, ...)`` shape."""
+    if paged is not None and not any(
+        k == "attn" for k in cfg.layer_kinds()
+    ):
+        raise ValueError(
+            "paged cache layout requires attention layers; "
+            f"arch {cfg.layer_pattern!r} has none (its decode state is "
+            "already max_seq-free)"
+        )
     caches = []
     for pattern, count in block_groups(cfg):
         group = {}
         for j, kind in enumerate(pattern):
-            one = _block_cache(cfg, kind, batch, max_seq, dtype)
+            one = _block_cache(cfg, kind, batch, max_seq, dtype, paged=paged)
             group[str(j)] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one
             )
@@ -314,6 +418,8 @@ def _apply_block_decode(
     cache: dict,
     pos: jax.Array,  # (B,)
     mesh=None,
+    pages: jax.Array | None = None,
+    write_mask: jax.Array | None = None,
 ) -> tuple[jax.Array, dict]:
     x = rms_norm(h, p["norm1"], cfg.norm_eps)
     if kind == "ssm":
@@ -321,7 +427,8 @@ def _apply_block_decode(
         return h + mix, cache
     if kind == "attn":
         win = _layer_window(cfg)
-        mix, cache = attention.decode(p["mix"], cfg, x, cache, pos, window=win)
+        mix, cache = attention.decode(p["mix"], cfg, x, cache, pos, window=win,
+                                      pages=pages, write_mask=write_mask)
     else:
         mix, cache = rglru.decode(p["mix"], cfg, x, cache)
     h = h + mix
@@ -345,6 +452,8 @@ def apply_trunk_decode(
     caches: list,
     pos: jax.Array,  # (B,)
     mesh=None,
+    pages: jax.Array | None = None,  # (B, n_pages) page table (paged cache)
+    write_mask: jax.Array | None = None,  # (B,) live-slot mask for KV writes
 ) -> tuple[jax.Array, list]:
     new_caches = []
     x = _constrain_batch(x, mesh)
@@ -358,7 +467,7 @@ def apply_trunk_decode(
             for j, kind in enumerate(pattern):
                 h, new_c[str(j)] = _apply_block_decode(
                     layer_p[str(j)], cfg, kind, h, layer_c[str(j)], pos,
-                    mesh=mesh,
+                    mesh=mesh, pages=pages, write_mask=write_mask,
                 )
             return h, new_c
 

@@ -1,1 +1,6 @@
-"""repro.serve"""
+"""repro.serve: continuous-batching serving tier.
+
+server     — the engine (ServeConfig / Server / RequestResult)
+paging     — paged KV block pool: host allocator + page tables
+scheduler  — admission-queue policies (fifo | slo)
+"""

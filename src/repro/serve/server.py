@@ -38,11 +38,32 @@ correctness comparator and benchmark baseline.
 ``strict=True`` re-samples certificate-failed tokens (``ok=False``) with
 the exact dense sampler inside the dispatch (``lax.cond`` — the O(n·d)
 fallback only executes when a window actually contains a flagged token).
+
+**Paged block cache** (``ServeConfig.block_len > 0``): instead of every
+slot reserving a full ``max_seq``-length KV ring, attn KV lives in a
+shared ``(n_blocks, block_len, ...)`` pool (models/attention.init_pool)
+and each slot walks a page table committed at admission — so slot count
+decouples from worst-case sequence length and concurrency is bounded by
+*actual* cache use, not the worst case. Admission allocates a request's
+whole-lifetime blocks up front (serve/paging.py: exhaustion is an
+admission stall, never a mid-decode stall or an OOB write) and frees
+them at EOS/finish. A priority + SLO-aware scheduler (serve/scheduler.py,
+``ServeConfig.sched``) orders the admission queue by TTFT deadline and
+picks the fused decode window per dispatch from the ITL EWMA feedback.
+Tokens stay BITWISE identical to the dense layout — placement is pure
+page-table arithmetic over the same ring positions, and sample keys
+never see the layout.
+
+``Server.run`` also accepts open-loop ``arrivals`` (per-request enqueue
+offsets, seconds): requests become admissible only once their arrival
+time passes, which is what the Poisson load benchmark
+(benchmarks/serve_load.py) drives.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import time
 from typing import Any
 
@@ -54,8 +75,23 @@ from repro.core import mips
 from repro.launch import steps as steps_lib
 from repro.models.config import ArchConfig
 from repro.models.model import Model
+from repro.serve import paging, scheduler as sched_lib
 
 __all__ = ["ServeConfig", "Server", "RequestResult"]
+
+_LOG = logging.getLogger("repro.serve")
+
+
+def _warn(msg: str) -> None:
+    """Single funnel for operator-facing serving diagnostics. Routed
+    through ``logging`` (logger ``repro.serve``) so deployments aggregate
+    them like any other log line; a stderr handler is installed lazily so
+    bare scripts still see the warnings without logging config."""
+    if not _LOG.handlers and not logging.getLogger().handlers:
+        h = logging.StreamHandler()
+        h.setFormatter(logging.Formatter("[server] %(levelname)s: %(message)s"))
+        _LOG.addHandler(h)
+    _LOG.warning(msg)
 
 
 @dataclasses.dataclass
@@ -73,6 +109,12 @@ class ServeConfig:
     probe_router: str = ""  # adaptive probe's learned stage router:
     #   "" disabled | "fit" train at startup on embedding-derived queries |
     #   a path to a router .npz saved by repro.models.router.save_router
+    block_len: int = 0  # >0: paged KV pool with this block size (positions);
+    #   0: dense slot-reserved rings (the historical layout)
+    n_blocks: int = 0  # paged pool size; 0 = auto (batch_slots * pages per
+    #   slot — same KV coverage as dense, for drop-in parity)
+    sched: str = "fifo"  # admission scheduler: fifo | slo (serve/scheduler)
+    ttft_slo_s: float = 0.5  # slo scheduler: per-request TTFT target
 
     @property
     def prompt_cap(self) -> int:
@@ -81,6 +123,10 @@ class ServeConfig:
         by construction — Server rejects max_new_tokens >= max_seq."""
         return self.max_seq - self.max_new_tokens
 
+    @property
+    def paged(self) -> bool:
+        return self.block_len > 0
+
 
 @dataclasses.dataclass
 class RequestResult:
@@ -88,8 +134,11 @@ class RequestResult:
     tokens: list
     ok_rate: float
     latency_s: float
-    ttft_s: float = 0.0  # host-observed time to first token
+    ttft_s: float = 0.0  # host-observed time to first token (from enqueue)
     itl_ms: float = 0.0  # host-observed mean inter-token latency
+    queue_time_s: float = 0.0  # admission-queue wait (enqueue -> prefill
+    #   dispatch) — the part of TTFT the scheduler/pool owns, as opposed
+    #   to prefill compute
     prompt_len: int = 0  # admitted (possibly truncated) prompt length
     status: str = "ok"  # ok | rejected
 
@@ -124,10 +173,64 @@ class Server:
                 "strict exact-fallback is not wired through the distributed "
                 "head; serve with strict=False on a TP mesh"
             )
+        if scfg.sched not in ("fifo", "slo"):
+            raise ValueError(f"unknown scheduler {scfg.sched!r} (fifo | slo)")
         self.cfg = cfg
         self.scfg = scfg
         self.model = Model(cfg, mesh)
         self.params = params
+
+        # ---- paged block pool geometry (None on the dense layout)
+        self.spec: paging.PagedSpec | None = None
+        self.alloc: paging.BlockAllocator | None = None
+        paged_layout = None
+        if scfg.paged:
+            if scfg.engine != "pipelined":
+                raise ValueError(
+                    "paged cache layout requires engine='pipelined' (the "
+                    "reference loop is the dense comparator)"
+                )
+            from repro.models.transformer import ring_len
+
+            n_pages = paging.PagedSpec.from_arch(
+                cfg, scfg.max_seq, scfg.block_len, 1
+            ).n_pages
+            n_blocks = scfg.n_blocks or scfg.batch_slots * n_pages
+            self.spec = paging.PagedSpec.from_arch(
+                cfg, scfg.max_seq, scfg.block_len, n_blocks
+            )
+            paged_layout = self.spec.layout
+            # admission feasibility: the maximal admissible request must fit
+            # the pool outright, or it could never be admitted (a permanent
+            # stall, not a recoverable one)
+            need_max = self.spec.pages_needed(scfg.prompt_cap,
+                                              scfg.max_new_tokens)
+            if need_max > self.spec.n_blocks:
+                raise ValueError(
+                    f"n_blocks={self.spec.n_blocks} cannot hold a maximal "
+                    f"request (prompt_cap={scfg.prompt_cap} + "
+                    f"max_new_tokens={scfg.max_new_tokens} needs {need_max} "
+                    f"blocks of {scfg.block_len})"
+                )
+            # page-table overflow invariant: every position a request can
+            # ever write ( < max_seq, enforced by admission + the device
+            # done-rule) lands at page (pos % s_c) // block_len < n_pages.
+            # Block exhaustion is therefore always an admission-time stall,
+            # never an out-of-bounds page-table write.
+            assert (scfg.prompt_cap + scfg.max_new_tokens <= scfg.max_seq
+                    and self.spec.n_pages * scfg.block_len
+                    == ring_len(cfg, scfg.max_seq)), (
+                "page table does not cover the admissible position range"
+            )
+            self.alloc = paging.BlockAllocator(self.spec)
+        self.sched = sched_lib.make_scheduler(scfg.sched, scfg.ttft_slo_s)
+        # fused-window variants the slo scheduler may pick per dispatch
+        # (compiled lazily on first use; fifo only ever uses the largest)
+        self._windows = sorted({1, max(1, scfg.decode_window // 4),
+                                scfg.decode_window})
+        if scfg.sched == "fifo":
+            self._windows = [scfg.decode_window]
+        self._itl_ms = 0.0  # EWMA per-token decode wall time (slo feedback)
         # canonical shardings for the engine's device state: without a
         # fixed target, a fresh host-built state (single-device) and the
         # previous dispatch's GSPMD-placed outputs hash as different jit
@@ -139,12 +242,16 @@ class Server:
             from repro.launch import mesh as mesh_lib
 
             shapes = jax.eval_shape(
-                lambda: self.model.init_cache(scfg.batch_slots, scfg.max_seq)
+                lambda: self.model.init_cache(scfg.batch_slots, scfg.max_seq,
+                                              paged=paged_layout)
             )
-            self._cache_sh = mesh_lib.cache_shardings(shapes, mesh, cfg)
+            self._cache_sh = mesh_lib.cache_shardings(shapes, mesh, cfg,
+                                                      paged=scfg.paged)
             rep = NamedSharding(mesh, P())
-            self._state_sh = {k: rep for k in
-                              ("ids", "pos", "active", "budget", "rid")}
+            state_keys = ["ids", "pos", "active", "budget", "rid"]
+            if scfg.paged:
+                state_keys.append("pages")
+            self._state_sh = {k: rep for k in state_keys}
 
         def _pin(cache, state):
             if self._cache_sh is None:
@@ -153,33 +260,41 @@ class Server:
             state = jax.lax.with_sharding_constraint(state, self._state_sh)
             return cache, state
 
-        # fused decode window: cache + per-slot state are device-resident
-        # and donated through every dispatch
-        decode_core = steps_lib.make_decode_loop_step(
-            self.model, scfg.decode_window, scfg.eos_id, scfg.max_seq,
-            strict=scfg.strict,
-        )
+        # fused decode windows: cache + per-slot state are device-resident
+        # and donated through every dispatch. One jitted variant per window
+        # size the scheduler may pick, compiled lazily on first use.
+        self._pin = _pin
+        self._decode_fns: dict[int, Any] = {}
 
-        def decode_step(params, cache, state, base_key, index=None,
-                        router=None):
-            cache, state, toks, oks, emitted, widths = decode_core(
-                params, cache, state, base_key, index, router
+        def _make_decode_fn(window: int):
+            decode_core = steps_lib.make_decode_loop_step(
+                self.model, window, scfg.eos_id, scfg.max_seq,
+                strict=scfg.strict, paged=scfg.paged,
             )
-            cache, state = _pin(cache, state)
-            return cache, state, toks, oks, emitted, widths
 
-        self.step_fn = jax.jit(decode_step, donate_argnums=(1, 2))
+            def decode_step(params, cache, state, base_key, index=None,
+                            router=None):
+                cache, state, toks, oks, emitted, widths = decode_core(
+                    params, cache, state, base_key, index, router
+                )
+                cache, state = _pin(cache, state)
+                return cache, state, toks, oks, emitted, widths
+
+            return jax.jit(decode_step, donate_argnums=(1, 2))
+
+        self._make_decode_fn = _make_decode_fn
+        self.step_fn = self._decode_fn(scfg.decode_window)
 
         prefill_core = steps_lib.make_prefill_into_cache_step(
             self.model, scfg.max_seq, scfg.eos_id, scfg.max_new_tokens,
-            strict=scfg.strict,
+            strict=scfg.strict, paged=scfg.paged,
         )
 
         def prefill_step(params, cache, state, tokens, lengths, slots, rids,
-                         base_key, index=None):
+                         base_key, index=None, pages=None):
             cache, state, nxt, ok = prefill_core(
                 params, cache, state, tokens, lengths, slots, rids,
-                base_key, index,
+                base_key, index, pages,
             )
             cache, state = _pin(cache, state)
             return cache, state, nxt, ok
@@ -191,7 +306,8 @@ class Server:
                                                 strict=scfg.strict),
             donate_argnums=(1,),
         )
-        self.cache = self.model.init_cache(scfg.batch_slots, scfg.max_seq)
+        self.cache = self.model.init_cache(scfg.batch_slots, scfg.max_seq,
+                                           paged=paged_layout)
         self.key = jax.random.key(scfg.seed)
         self.stats = {
             "steps": 0, "tokens": 0, "ok": 0, "fallbacks": 0,
@@ -201,6 +317,19 @@ class Server:
             # adaptive probe: emitted-token counts per effective probe
             # width {width: count} — empty on fixed-width serving
             "probe_width_hist": {},
+            # continuous-batching gauges (last-seen + peak): admission
+            # queue depth, live-slot occupancy, block-pool utilization,
+            # and admission stalls caused by an empty block free-list
+            "queue_depth": 0, "queue_depth_peak": 0,
+            "slot_occupancy": 0, "slot_occupancy_peak": 0,
+            "block_util": 0.0, "block_util_peak": 0.0,
+            "block_stalls": 0,
+            # HBM bytes resident in the serving cache (pool or rings +
+            # SSM/LRU state) — the denominator of the paged-concurrency win
+            "cache_bytes": sum(
+                leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(self.cache)
+            ),
         }
         # head MIPS index: built once over the frozen output embedding
         # (a ShardedIndex on a TP mesh — per-slice probe inside the
@@ -223,6 +352,14 @@ class Server:
 
         self._reset_slots = _reset_slots
 
+    def _decode_fn(self, window: int):
+        """The jitted fused-decode variant for ``window`` tokens/dispatch
+        (compiled lazily — the fifo scheduler only ever touches one)."""
+        fn = self._decode_fns.get(window)
+        if fn is None:
+            fn = self._decode_fns[window] = self._make_decode_fn(window)
+        return fn
+
     def _index_health(self, where: str) -> None:
         """Surface index health where an operator looks: ``stats`` carries
         the index's device-HBM footprint and its coverage shortfall, and
@@ -234,24 +371,22 @@ class Server:
             self.index.memory_bytes() if self.index is not None else 0
         )
         if dropped:  # coverage contract (DESIGN.md §3) violated
-            print(f"[server] WARNING: index {where} dropped {dropped} "
-                  f"rows — raise overflow_frac")
+            _warn(f"index {where} dropped {dropped} rows — raise "
+                  f"overflow_frac")
         if short:
             hc = self.model.head_cfg
-            if hc.adaptive_probe:
-                # fixed n_probe is the wrong knob once width is dynamic:
-                # the pool is sized by the per-query effective width, so
-                # the ceiling (and the certificate slack driving widening)
-                # is what the operator should move
-                print(
-                    f"[server] WARNING: re-rank pool short {short} slots "
-                    f"at effective probe width <= {hc.n_probe_max} "
-                    f"(adaptive; see stats['probe_width_hist']) — lower "
-                    f"PQConfig.rerank or raise n_probe_max"
-                )
-            else:
-                print(f"[server] WARNING: re-rank pool short {short} slots "
-                      f"— lower PQConfig.rerank or raise n_probe")
+            # one call site, remedy keyed on the probe mode: with a fixed
+            # width the knob is n_probe; once width is dynamic the pool is
+            # sized by the per-query effective width, so the ceiling (and
+            # the certificate slack driving widening) is what to move
+            knob = (
+                f"at effective probe width <= {hc.n_probe_max} (adaptive; "
+                f"see stats['probe_width_hist']) — lower PQConfig.rerank "
+                f"or raise n_probe_max"
+                if hc.adaptive_probe
+                else "— lower PQConfig.rerank or raise n_probe"
+            )
+            _warn(f"re-rank pool short {short} slots {knob}")
 
     def _make_router(self):
         """Build the adaptive probe's stage router per ``scfg.probe_router``
@@ -265,8 +400,8 @@ class Server:
         if not spec:
             return None
         if not hc.adaptive_probe or self.index is None:
-            print("[server] WARNING: probe_router set but adaptive probe "
-                  "is off (head_adaptive_probe) — router ignored")
+            _warn("probe_router set but adaptive probe is off "
+                  "(head_adaptive_probe) — router ignored")
             return None
         from repro.models import router as router_lib
 
@@ -274,8 +409,8 @@ class Server:
             return router_lib.load_router(spec)
         state = getattr(self.index, "state", None)
         if state is None or not hasattr(state, "centroids"):
-            print("[server] WARNING: probe_router='fit' needs a "
-                  "single-device clustered index — router disabled")
+            _warn("probe_router='fit' needs a single-device clustered "
+                  "index — router disabled")
             return None
         emb = self.model.head_index_db(self.params)
         stride = max(1, emb.shape[0] // 512)
@@ -337,21 +472,36 @@ class Server:
             prompt = prompt[-s.prompt_cap:]
         return prompt
 
-    def _intake(self, prompts, results: list):
-        """Validate + enqueue every prompt. Returns (queue of rids,
+    def _intake(self, prompts, results: list, t_start: float,
+                arrivals=None, priorities=None):
+        """Validate + register every prompt. ``arrivals`` (per-request
+        enqueue offsets from run start, seconds — the open-loop load
+        model) and ``priorities`` (lower = more urgent, slo scheduler)
+        default to 0. Returns (arrival-ordered [(t_enq, rid)] list,
         rid -> request record); rejected prompts land in ``results``."""
-        queue = collections.deque()
+        due: list[tuple[float, int]] = []
         reqs: dict[int, dict] = {}
         for rid, prompt in enumerate(prompts):
             p = self._validate(rid, prompt, results)
             if p is None:
                 continue
+            t_enq = t_start + (float(arrivals[rid]) if arrivals is not None
+                               else 0.0)
             reqs[rid] = {
                 "rid": rid, "prompt": p, "out": [], "ok": 0, "fed": 0,
-                "t_enq": time.perf_counter(), "t_first": None, "t_last": None,
+                "t_enq": t_enq, "t_admit": None,
+                "t_first": None, "t_last": None,
+                "priority": (int(priorities[rid]) if priorities is not None
+                             else 0),
+                "blocks": [],
+                "pages_needed": (
+                    self.spec.pages_needed(len(p), self.scfg.max_new_tokens)
+                    if self.spec is not None else 0
+                ),
             }
-            queue.append(rid)
-        return queue, reqs
+            due.append((t_enq, rid))
+        due.sort()
+        return due, reqs
 
     def _finalize(self, req: dict, results: list) -> None:
         now = time.perf_counter()
@@ -364,8 +514,13 @@ class Server:
             ok_rate=req["ok"] / max(n, 1),
             latency_s=now - req["t_enq"],
             ttft_s=(req["t_first"] or now) - req["t_enq"],
-            itl_ms=itl, prompt_len=len(req["prompt"]),
+            itl_ms=itl,
+            queue_time_s=max(0.0, (req["t_admit"] or now) - req["t_enq"]),
+            prompt_len=len(req["prompt"]),
         ))
+        if self.alloc is not None and req["blocks"]:
+            self.alloc.free(req["blocks"])
+            req["blocks"] = []
 
     def _mirror_done(self, req: dict) -> bool:
         """Host mirror of the device's done rule (see steps._advance):
@@ -379,21 +534,49 @@ class Server:
         return len(req["prompt"]) + n > s.max_seq - 1
 
     # ---------------------------------------------------------------- run
-    def run(self, prompts: list[list[int]]) -> list[RequestResult]:
+    def run(self, prompts: list[list[int]], *, arrivals=None,
+            priorities=None) -> list[RequestResult]:
         """Decode all prompts with continuous batching; returns one
-        RequestResult per prompt (rejected ones flagged)."""
+        RequestResult per prompt (rejected ones flagged).
+
+        ``arrivals``: optional per-request enqueue offsets (seconds from
+        run start) — the open-loop load model: a request only becomes
+        admissible once its arrival passes, and ``queue_time_s``/TTFT are
+        measured from it. ``priorities``: optional per-request priority
+        (lower = more urgent; consumed by the slo scheduler)."""
         if self.scfg.engine == "reference":
+            if arrivals is not None or priorities is not None:
+                raise ValueError(
+                    "arrivals/priorities need the pipelined engine"
+                )
             return self._run_reference(prompts)
-        return self._run_engine(prompts)
+        return self._run_engine(prompts, arrivals=arrivals,
+                                priorities=priorities)
 
     # ------------------------------------------------------- pipelined engine
-    def _run_engine(self, prompts: list[list[int]]) -> list[RequestResult]:
+    def _gauges(self, n_queued: int, slot_req: list) -> None:
+        occ = sum(r is not None for r in slot_req)
+        st = self.stats
+        st["queue_depth"] = n_queued
+        st["queue_depth_peak"] = max(st["queue_depth_peak"], n_queued)
+        st["slot_occupancy"] = occ
+        st["slot_occupancy_peak"] = max(st["slot_occupancy_peak"], occ)
+        if self.alloc is not None:
+            st["block_util"] = self.alloc.utilization
+            st["block_util_peak"] = max(st["block_util_peak"],
+                                        st["block_util"])
+
+    def _run_engine(self, prompts: list[list[int]], arrivals=None,
+                    priorities=None) -> list[RequestResult]:
         s = self.scfg
         nslots = s.batch_slots
         results: list[RequestResult] = []
         t_start = time.perf_counter()
         self.key, base_key = jax.random.split(self.key)
-        queue, reqs = self._intake(prompts, results)
+        due, reqs = self._intake(prompts, results, t_start,
+                                 arrivals, priorities)
+        due = collections.deque(due)  # arrival-sorted (t_enq, rid)
+        waiting: list[int] = []  # arrived, not yet admitted
 
         state = {
             "ids": jnp.zeros((nslots,), jnp.int32),
@@ -402,6 +585,9 @@ class Server:
             "budget": jnp.zeros((nslots,), jnp.int32),
             "rid": jnp.full((nslots,), -1, jnp.int32),
         }
+        if self.spec is not None:
+            state["pages"] = jnp.full((nslots, self.spec.n_pages),
+                                      self.spec.sentinel, jnp.int32)
         cache = self.cache
         if self._cache_sh is not None:  # one jit signature across runs
             state = jax.device_put(state, self._state_sh)
@@ -411,6 +597,15 @@ class Server:
         # dispatch pipeline: FIFO of un-synced device results; one entry is
         # kept in flight so host bookkeeping overlaps device compute
         pending: collections.deque = collections.deque()
+
+        def retire(req, slot) -> None:
+            # device already froze the slot (done computed on-device in the
+            # same dispatch), so any in-flight window has active=False /
+            # write_mask dropping its KV writes — freeing its blocks for
+            # the NEXT admission dispatch is ordered-safe
+            self._finalize(req, results)
+            slot_req[slot] = None
+            free.append(slot)
 
         def process(entry) -> None:
             kind = entry[0]
@@ -430,13 +625,17 @@ class Server:
                     if s.strict and not ok[row]:
                         self.stats["fallbacks"] += 1
                     if self._mirror_done(req):
-                        self._finalize(req, results)
-                        slot_req[slot] = None
-                        free.append(slot)
+                        retire(req, slot)
             else:  # decode window
-                _, arrs, snapshot = entry
+                _, arrs, snapshot, window, t_issue = entry
                 toks, oks, emitted, widths = (np.asarray(a) for a in arrs)
                 self.stats["decode_s"] += time.perf_counter() - t0
+                # per-token wall EWMA — the slo scheduler's window-cost
+                # estimate (includes pipeline overlap: a consistent,
+                # slightly pessimistic feedback signal)
+                dt_ms = (time.perf_counter() - t_issue) * 1e3 / window
+                self._itl_ms = (dt_ms if self._itl_ms == 0.0
+                                else 0.7 * self._itl_ms + 0.3 * dt_ms)
                 self._bin_widths(widths, emitted)
                 now = time.perf_counter()
                 for t in range(toks.shape[0]):
@@ -455,60 +654,106 @@ class Server:
                         if s.strict and not oks[t, slot]:
                             self.stats["fallbacks"] += 1
                         if self._mirror_done(req):
-                            self._finalize(req, results)
-                            slot_req[slot] = None
-                            free.append(slot)
+                            retire(req, slot)
 
         while len(results) < len(prompts):
-            # 1) admit into free slots: one batched-prefill dispatch
-            if queue and free:
+            now = time.perf_counter()
+            # 0) open-loop arrivals: requests become admissible as their
+            # enqueue time passes
+            while due and due[0][0] <= now:
+                waiting.append(due.popleft()[1])
+            self._gauges(len(waiting) + len(due), slot_req)
+            # 1) streaming admission: whenever a slot AND (paged) blocks
+            # free up, in scheduler order — one batched-prefill dispatch
+            if waiting and free:
                 free.sort()
-                take = min(len(free), len(queue))
-                batch = [queue.popleft() for _ in range(take)]
-                slots_h = [free.pop(0) for _ in range(take)]
-                for rid, slot in zip(batch, slots_h):
-                    slot_req[slot] = rid
-                lp = _bucket(max(len(reqs[r]["prompt"]) for r in batch),
-                             s.prefill_chunk)
-                tokens = np.zeros((nslots, lp), np.int32)
-                lengths = np.ones((nslots,), np.int32)
-                slots = np.full((nslots,), nslots, np.int32)  # pad: dropped
-                rids = np.full((nslots,), -1, np.int32)
-                for row, (rid, slot) in enumerate(zip(batch, slots_h)):
-                    p = reqs[rid]["prompt"]
-                    tokens[row, : len(p)] = p
-                    lengths[row] = len(p)
-                    slots[row] = slot
-                    rids[row] = rid
-                cache, state, nxt, ok = self.prefill_fn(
-                    self.params, cache, state, jnp.asarray(tokens),
-                    jnp.asarray(lengths), jnp.asarray(slots),
-                    jnp.asarray(rids), base_key, self.index,
+                batch: list[int] = []
+                slots_h: list[int] = []
+                rows: list[np.ndarray] = []
+                for rid in self.sched.order(waiting, reqs, now):
+                    if not free:
+                        break
+                    req = reqs[rid]
+                    if self.alloc is not None:
+                        if not self.alloc.can_alloc(req["pages_needed"]):
+                            self.stats["block_stalls"] += 1
+                            if self.sched.skip_blocked:
+                                continue  # smaller requests may still fit
+                            break  # fifo: strict head-of-line order
+                        req["blocks"] = self.alloc.alloc(req["pages_needed"])
+                        rows.append(paging.page_row(self.spec, req["blocks"]))
+                    batch.append(rid)
+                    slots_h.append(free.pop(0))
+                if batch:
+                    t_admit = time.perf_counter()
+                    for rid, slot in zip(batch, slots_h):
+                        waiting.remove(rid)
+                        slot_req[slot] = rid
+                        reqs[rid]["t_admit"] = t_admit
+                    lp = _bucket(max(len(reqs[r]["prompt"]) for r in batch),
+                                 s.prefill_chunk)
+                    tokens = np.zeros((nslots, lp), np.int32)
+                    lengths = np.ones((nslots,), np.int32)
+                    slots = np.full((nslots,), nslots, np.int32)  # pad rows
+                    rids = np.full((nslots,), -1, np.int32)
+                    for row, (rid, slot) in enumerate(zip(batch, slots_h)):
+                        p = reqs[rid]["prompt"]
+                        tokens[row, : len(p)] = p
+                        lengths[row] = len(p)
+                        slots[row] = slot
+                        rids[row] = rid
+                    pages_arg = None
+                    if self.spec is not None:
+                        pg = np.full((nslots, self.spec.n_pages),
+                                     self.spec.sentinel, np.int32)
+                        for row, pr in enumerate(rows):
+                            pg[row] = pr
+                        pages_arg = jnp.asarray(pg)
+                    cache, state, nxt, ok = self.prefill_fn(
+                        self.params, cache, state, jnp.asarray(tokens),
+                        jnp.asarray(lengths), jnp.asarray(slots),
+                        jnp.asarray(rids), base_key, self.index, pages_arg,
+                    )
+                    pending.append(("prefill", (nxt, ok), batch, slots_h))
+                    self.stats["prefill_dispatches"] += 1
+                    self.stats["steps"] += 1
+                    self.stats["prefill_tokens"] += int(
+                        sum(len(reqs[r]["prompt"]) for r in batch)
+                    )
+                    # re-sample: occupancy/block gauges peak right after
+                    # admission fills slots, not at next loop-top (by which
+                    # point a uniform wave may have retired in lockstep)
+                    self._gauges(len(waiting) + len(due), slot_req)
+            # 2) fused decode over the slots the host believes live, window
+            # picked per dispatch (slo: shrinks under TTFT pressure)
+            live = any(r is not None for r in slot_req)
+            if live:
+                window = self.sched.pick_window(
+                    waiting, reqs, now, self._itl_ms, self._windows
                 )
-                pending.append(("prefill", (nxt, ok), batch, slots_h))
-                self.stats["prefill_dispatches"] += 1
-                self.stats["steps"] += 1
-                self.stats["prefill_tokens"] += int(
-                    sum(len(reqs[r]["prompt"]) for r in batch)
-                )
-            # 2) fused decode over the slots the host believes live
-            if any(r is not None for r in slot_req):
-                cache, state, toks, oks, emitted, widths = self.step_fn(
-                    self.params, cache, state, base_key, self.index,
-                    self.router,
-                )
+                t_issue = time.perf_counter()
+                cache, state, toks, oks, emitted, widths = self._decode_fn(
+                    window
+                )(self.params, cache, state, base_key, self.index,
+                  self.router)
                 pending.append(("decode", (toks, oks, emitted, widths),
-                                list(slot_req)))
+                                list(slot_req), window, t_issue))
                 self.stats["decode_dispatches"] += 1
                 self.stats["steps"] += 1
             # 3) sync all but the newest dispatch (double buffering)
             while len(pending) > 1:
                 process(pending.popleft())
-            if not (queue or any(r is not None for r in slot_req)):
-                break  # nothing left to dispatch: drain below
+            if not live and not waiting and not pending:
+                if not due:
+                    break  # nothing left to dispatch: drain below
+                # idle until the next open-loop arrival
+                time.sleep(max(0.0, min(
+                    due[0][0] - time.perf_counter(), 0.05
+                )))
 
         while pending:
             process(pending.popleft())
+        self._gauges(0, slot_req)  # final sample: drained, slots retired
 
         self.cache = cache
         self.stats["wall_s"] = time.perf_counter() - t_start
@@ -525,7 +770,8 @@ class Server:
         results: list[RequestResult] = []
         t_start = time.perf_counter()
         self.key, base_key = jax.random.split(self.key)
-        queue, reqs = self._intake(prompts, results)
+        due, reqs = self._intake(prompts, results, t_start)
+        queue = collections.deque(rid for _, rid in due)
 
         active: list[int | None] = [None] * nslots
         ids_h = np.zeros((nslots,), np.int32)
@@ -537,6 +783,7 @@ class Server:
             if not queue:
                 return
             rid = queue.popleft()
+            reqs[rid]["t_admit"] = time.perf_counter()
             active[slot] = rid
             rids_h[slot] = rid
             pos_h[slot] = 0

@@ -1,0 +1,328 @@
+"""Paged block pool + continuous-batching scheduler behaviour.
+
+Host-side allocator invariants (LIFO reuse, double-free rejection,
+whole-lifetime accounting), page-table geometry (sentinel fill, divisor
+validation, overflow feasibility at Server construction), admission
+schedulers (fifo head-of-line vs slo deadline order + adaptive window),
+and the load-bearing equivalence: the paged layout must decode BITWISE
+the tokens of the dense slot-reserved layout under mixed lengths, EOS
+re-admission, slot recycling, and block-exhaustion stalls — including
+identical adaptive-probe width traces.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+
+import repro.models.transformer as T
+from repro.configs import get_smoke
+from repro.models.model import Model
+from repro.serve import paging
+from repro.serve.scheduler import make_scheduler
+from repro.serve.server import ServeConfig, Server
+
+
+@pytest.fixture(autouse=True)
+def _no_remat(monkeypatch):
+    monkeypatch.setattr(T, "REMAT", False)
+
+
+def _spec(block_len=8, n_blocks=8, n_pages=4):
+    return paging.PagedSpec(block_len=block_len, n_blocks=n_blocks,
+                            n_pages=n_pages)
+
+
+# --------------------------------------------------------- host allocator
+def test_allocator_lifo_reuse_and_counts():
+    al = paging.BlockAllocator(_spec(n_blocks=6))
+    assert al.n_free == 6 and al.n_used == 0 and al.utilization == 0.0
+    a = al.alloc(3)
+    assert a == [0, 1, 2]  # free list pops lowest id first
+    assert al.n_free == 3 and al.n_used == 3 and al.utilization == 0.5
+    al.free([1])
+    assert al.alloc(1) == [1]  # LIFO: the just-freed block is reused first
+    al.free(a)
+    assert al.n_used == 0 and sorted(al._free) == list(range(6))
+
+
+def test_allocator_rejects_double_free_and_exhaustion():
+    al = paging.BlockAllocator(_spec(n_blocks=4))
+    blocks = al.alloc(4)
+    assert not al.can_alloc(1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.alloc(1)
+    al.free(blocks[:1])
+    with pytest.raises(RuntimeError, match="double-free|not currently held"):
+        al.free(blocks[:1])
+    with pytest.raises(RuntimeError):  # never-allocated id
+        al.free([99])
+    al.free(blocks[1:])
+    assert al.n_free == 4
+
+
+def test_pages_needed_whole_lifetime_and_ring_clamp():
+    sp = _spec(block_len=8, n_pages=4)
+    assert sp.pages_needed(1, 0) == 1
+    assert sp.pages_needed(8, 0) == 1
+    assert sp.pages_needed(9, 0) == 2
+    assert sp.pages_needed(8, 8) == 2  # decode tokens counted up front
+    # SWA ring wrap: positions alias mod n_pages*block_len, table saturates
+    assert sp.pages_needed(100, 100) == 4
+
+
+def test_page_row_sentinel_fill():
+    sp = _spec(block_len=8, n_blocks=10, n_pages=4)
+    row = paging.page_row(sp, [7, 2])
+    assert row.dtype == np.int32
+    assert row.tolist() == [7, 2, sp.sentinel, sp.sentinel]
+    assert sp.sentinel == 10  # == n_blocks: OOB for device scatter/gather
+    with pytest.raises(ValueError):
+        paging.page_row(sp, [0, 1, 2, 3, 4])
+
+
+def test_spec_block_len_must_divide_ring():
+    cfg = get_smoke("tinyllama-1.1b")
+    sp = paging.PagedSpec.from_arch(cfg, 64, 16, 8)
+    assert sp.n_pages * sp.block_len == 64  # full ring covered
+    with pytest.raises(ValueError):
+        paging.PagedSpec.from_arch(cfg, 64, 7, 8)
+    # griffin: ring is the 32-position local window, not max_seq
+    gcfg = get_smoke("recurrentgemma-9b")
+    assert paging.PagedSpec.from_arch(gcfg, 64, 8, 8).n_pages == 4
+
+
+# ------------------------------------------------------------- schedulers
+def test_fifo_scheduler_order_and_window():
+    s = make_scheduler("fifo")
+    assert s.name == "fifo" and not s.skip_blocked
+    reqs = {i: {"t_enq": float(i)} for i in range(3)}
+    assert s.order([2, 0, 1], reqs, now=9.0) == [2, 0, 1]  # arrival order
+    assert s.pick_window([0], reqs, 9.0, 5.0, [1, 2, 8]) == 8
+
+
+def test_slo_scheduler_deadline_order_and_adaptive_window():
+    s = make_scheduler("slo", ttft_slo_s=0.1)
+    assert s.skip_blocked  # blocked head never blocks smaller requests
+    reqs = {
+        0: {"t_enq": 0.0, "priority": 1},
+        1: {"t_enq": 5.0, "priority": 0},  # lower priority value wins ...
+        2: {"t_enq": -5.0, "priority": 1},  # ... then earlier deadline
+    }
+    assert s.order([0, 1, 2], reqs, now=9.0) == [1, 2, 0]
+    windows = [1, 2, 8]
+    # empty queue or no ITL estimate yet: full fused window
+    assert s.pick_window([], reqs, 0.0, 5.0, windows) == 8
+    assert s.pick_window([0], reqs, 0.0, 0.0, windows) == 8
+    # deadline blown: smallest window, reach the admission point fastest
+    assert s.pick_window([0], reqs, now=99.0, itl_ms=5.0,
+                         windows=windows) == 1
+    # slack 50ms, itl 5ms/tok: w=8 costs 40ms <= slack -> full window
+    assert s.pick_window([0], reqs, now=0.05, itl_ms=5.0,
+                         windows=windows) == 8
+    # slack 12ms: w=8 (40ms) misses, w=2 (10ms) fits
+    assert s.pick_window([0], reqs, now=0.088, itl_ms=5.0,
+                         windows=windows) == 2
+    with pytest.raises(ValueError):
+        make_scheduler("edf")
+
+
+# ------------------------------------------------- config validation
+def test_paged_config_validation():
+    cfg, params = _mk(vocab=512)
+    base = dict(batch_slots=2, max_seq=32, max_new_tokens=8)
+    with pytest.raises(ValueError, match="pipelined"):
+        Server(cfg, params, ServeConfig(engine="reference", block_len=8,
+                                        **base))
+    with pytest.raises(ValueError, match="scheduler"):
+        Server(cfg, params, ServeConfig(sched="edf", **base))
+    with pytest.raises(ValueError):  # 7 does not divide the 32-pos ring
+        Server(cfg, params, ServeConfig(block_len=7, **base))
+    # page-table overflow regression: a pool that cannot hold the maximal
+    # admissible request (prompt_cap 24 + 8 new = 32 pos = 4 blocks) would
+    # stall forever at admission — rejected at construction instead
+    with pytest.raises(ValueError, match="maximal"):
+        Server(cfg, params, ServeConfig(block_len=8, n_blocks=3, **base))
+    Server(cfg, params, ServeConfig(block_len=8, n_blocks=4, **base))
+    # attention-free trunks have no KV to page
+    mcfg = get_smoke("mamba2-780m")
+    mparams = Model(mcfg).init(jax.random.key(0))
+    with pytest.raises(ValueError):
+        Server(mcfg, mparams, ServeConfig(block_len=8, **base))
+    # open-loop arrivals are an engine feature, not a reference-loop one
+    ref = Server(cfg, params, ServeConfig(engine="reference", **base))
+    with pytest.raises(ValueError):
+        ref.run([[1, 2, 3]], arrivals=[0.0])
+
+
+# ----------------------------------------------------- layout equivalence
+@functools.lru_cache(maxsize=None)
+def _mk_cached(arch="tinyllama-1.1b", **scale):
+    cfg = get_smoke(arch).scaled(**scale)
+    model = Model(cfg)
+    return cfg, model.init(jax.random.key(0))
+
+
+def _mk(arch="tinyllama-1.1b", **scale):
+    return _mk_cached(arch, **scale)
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab, size=int(n))) for n in lengths]
+
+
+def test_paged_matches_reference_bitwise():
+    """Dense reference loop (1 dispatch/token) vs paged fused engine: the
+    sample key derives from (request, position), so cache layout cannot
+    shift randomness — token streams must be identical."""
+    cfg, params = _mk(vocab=512)
+    prompts = _prompts(cfg, [3, 9, 5, 12, 7, 4])
+    base = dict(batch_slots=2, max_seq=32, max_new_tokens=6, seed=11)
+    ref = Server(cfg, params, ServeConfig(engine="reference", **base))
+    pg = Server(cfg, params, ServeConfig(decode_window=8, block_len=8,
+                                         **base))
+    r_ref, r_pg = ref.run(prompts), pg.run(prompts)
+    assert [r.tokens for r in r_ref] == [r.tokens for r in r_pg]
+    assert [r.ok_rate for r in r_ref] == [r.ok_rate for r in r_pg]
+    assert pg.alloc.n_used == 0  # every admitted request freed its blocks
+
+
+@pytest.mark.parametrize("mips", ["ivf", "ivfpq"])
+def test_paged_parity_index_heads(mips):
+    """Quantized / inverted-file heads: the paged layout must reproduce
+    tokens AND per-token certificate outcomes (ok_rate) — the head reads
+    hidden states, never cache placement."""
+    cfg, params = _mk(vocab=4096, head_mode="amortized", head_mips=mips)
+    prompts = _prompts(cfg, [4, 11, 6, 9], seed=2)
+    base = dict(batch_slots=2, max_seq=32, max_new_tokens=4, seed=5,
+                decode_window=4)
+    dense = Server(cfg, params, ServeConfig(**base))
+    pg = Server(cfg, params, ServeConfig(block_len=8, **base))
+    r_d, r_p = dense.run(prompts), pg.run(prompts)
+    assert [r.tokens for r in r_d] == [r.tokens for r in r_p]
+    assert [r.ok_rate for r in r_d] == [r.ok_rate for r in r_p]
+
+
+def test_paged_griffin_ring_wrap():
+    """Griffin pages the 32-position sliding-window ring, not max_seq:
+    decoding past the window wraps pages in place. Paged must stay bitwise
+    with the dense pipelined engine at the same window through the wrap."""
+    cfg, params = _mk("recurrentgemma-9b")
+    prompts = _prompts(cfg, [10, 4, 7, 12])
+    base = dict(batch_slots=2, max_seq=64, max_new_tokens=30, seed=3,
+                decode_window=8)  # prompt+new > 32: the ring wraps
+    dense = Server(cfg, params, ServeConfig(**base))
+    pg = Server(cfg, params, ServeConfig(block_len=8, **base))
+    r_d, r_p = dense.run(prompts), pg.run(prompts)
+    assert all(len(r.tokens) == 30 for r in r_p)
+    assert [r.tokens for r in r_d] == [r.tokens for r in r_p]
+
+
+def test_block_exhaustion_recoverable_never_oob():
+    """A pool far smaller than slots x pages forces admission stalls; they
+    must resolve as running requests retire (whole-lifetime allocation =
+    no mid-decode stall), with zero leaked blocks and unchanged tokens."""
+    cfg, params = _mk(vocab=512)
+    prompts = _prompts(cfg, [2, 14, 5, 9, 13, 3, 8, 11], seed=4)
+    base = dict(batch_slots=3, max_seq=32, max_new_tokens=8, seed=2,
+                decode_window=4)
+    dense = Server(cfg, params, ServeConfig(**base))
+    # minimum feasible pool: exactly the maximal single request (4 blocks)
+    tight = Server(cfg, params, ServeConfig(block_len=8, n_blocks=4, **base))
+    r_d, r_t = dense.run(prompts), tight.run(prompts)
+    assert [r.tokens for r in r_d] == [r.tokens for r in r_t]
+    assert all(r.status == "ok" for r in r_t)
+    assert tight.stats["block_stalls"] > 0  # the pool did run dry ...
+    assert tight.alloc.n_used == 0  # ... and fully recovered
+    assert tight.stats["block_util_peak"] > 0.5
+
+
+def test_queue_time_and_gauges():
+    cfg, params = _mk(vocab=512)
+    srv = Server(cfg, params, ServeConfig(
+        batch_slots=2, max_seq=32, max_new_tokens=6, decode_window=4,
+        block_len=8))
+    rs = srv.run(_prompts(cfg, [5, 3, 8, 6, 4, 7], seed=1))
+    for r in rs:
+        assert r.queue_time_s >= 0.0
+        assert r.ttft_s >= r.queue_time_s  # queue wait is a TTFT component
+    st = srv.stats
+    assert st["slot_occupancy_peak"] == 2  # both slots filled under backlog
+    assert st["queue_depth_peak"] >= 1
+    assert 0.0 < st["block_util_peak"] <= 1.0
+    assert st["cache_bytes"] > 0
+    assert st["slot_occupancy"] == 0  # drained at exit
+
+
+# ------------------------------------------- randomized admission traces
+# Property: for ANY admission trace — mixed prompt lengths (including
+# truncation-length), EOS early-exit re-admission, slot recycling, block
+# stalls — the paged and dense layouts emit identical per-request token
+# streams. Runs on 3 fixed seeds via tests/_hyp.py when hypothesis is not
+# installed; full search strategies when it is. Server pairs are built
+# once per config (module cache) so examples only pay dispatch time.
+@functools.lru_cache(maxsize=None)
+def _pair(kind):
+    if kind == "eos":  # tiny vocab: streams hit EOS fast -> re-admission
+        cfg, params = _mk(vocab=32)
+        base = dict(batch_slots=2, max_seq=32, max_new_tokens=12, eos_id=7,
+                    seed=6, decode_window=4)
+        dense = Server(cfg, params, ServeConfig(**base))
+        # 6 blocks < 2 slots x 4 pages: stalls interleave with re-admission
+        pg = Server(cfg, params, ServeConfig(block_len=8, n_blocks=6, **base))
+    else:  # adaptive-probe IVF head: per-token certificate-driven widths
+        cfg, params = _mk(vocab=4096, head_mode="amortized", head_mips="ivf",
+                          head_adaptive_probe=True)
+        base = dict(batch_slots=2, max_seq=32, max_new_tokens=4, seed=6,
+                    decode_window=4)
+        dense = Server(cfg, params, ServeConfig(**base))
+        pg = Server(cfg, params, ServeConfig(block_len=8, **base))
+    return cfg, dense, pg
+
+
+def _run_pair(kind, lengths, seed):
+    cfg, dense, pg = _pair(kind)
+    prompts = _prompts(cfg, lengths, seed=seed)
+    hist0_d = dict(dense.stats["probe_width_hist"])
+    hist0_p = dict(pg.stats["probe_width_hist"])
+    r_d, r_p = dense.run(prompts), pg.run(prompts)
+    assert [r.tokens for r in r_d] == [r.tokens for r in r_p], (
+        f"layout divergence: lengths={lengths} seed={seed}"
+    )
+    assert [r.ok_rate for r in r_d] == [r.ok_rate for r in r_p]
+    assert pg.alloc.n_used == 0
+    # identical probe-width traces: the emitted (rid, pos) set is equal, so
+    # the per-width token histograms this run added must be equal too
+    delta = lambda h1, h0: {  # noqa: E731 - tiny local helper
+        k: v - h0.get(k, 0) for k, v in h1.items() if v != h0.get(k, 0)
+    }
+    assert (delta(dense.stats["probe_width_hist"], hist0_d)
+            == delta(pg.stats["probe_width_hist"], hist0_p))
+    return r_d
+
+
+@settings(max_examples=3, deadline=None)
+@given(data=st.data())
+def test_admission_trace_property_eos_recycling(data):
+    n = data.draw(st.integers(min_value=5, max_value=9))
+    lengths = data.draw(st.lists(st.integers(min_value=1, max_value=20),
+                                 min_size=n, max_size=n))
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rs = _run_pair("eos", tuple(lengths), seed)
+    for r in rs:  # EOS truncates identically in both layouts (asserted
+        # above); here just pin the EOS contract itself
+        if len(r.tokens) < 12:
+            assert r.tokens[-1] == 7
+
+
+@settings(max_examples=3, deadline=None)
+@given(data=st.data())
+def test_admission_trace_property_probe_widths(data):
+    n = data.draw(st.integers(min_value=4, max_value=6))
+    lengths = data.draw(st.lists(st.integers(min_value=1, max_value=20),
+                                 min_size=n, max_size=n))
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    _run_pair("adaptive", tuple(lengths), seed)
