@@ -9,7 +9,10 @@ Prints ``name,us_per_call,derived`` CSV. Select subsets with
 merges EVERY selected suite's rows and structured results into one record
 per run, so successive PRs can record comparable baselines (entries so
 far: BENCH_20260802_train.json [train], BENCH_20260802_serve_pq.json
-[serve+train+pq], BENCH_20260808_decode_fused.json [decode_fused];
+[serve+train+pq], BENCH_20260808_decode_fused.json [decode_fused],
+BENCH_20260808_adaptive_probe.json [adaptive],
+BENCH_20260809_serve_load.json [serve_load],
+BENCH_20260809_index_refresh.json [refresh];
 regenerate with the same command to extend the trajectory).
 
 ``--compare ENTRY [ENTRY ...]`` reads committed entries back through
@@ -26,7 +29,7 @@ import time
 SCHEMA = "bench-trajectory-v1"
 # suites accepting a reduced CI grid (fn(report, smoke=True))
 SMOKE_SUITES = ("serve", "train", "pq", "decode_fused", "adaptive",
-                "serve_load")
+                "serve_load", "refresh")
 
 
 def load_trajectory(paths: list[str]) -> list[dict]:

@@ -18,6 +18,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
@@ -25,6 +26,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_train_mesh(dp: int = 1, tp: int = 1):
+    """Explicit small-scale train mesh: ``("data", "model") = (dp, tp)``
+    over the first ``dp*tp`` devices (the production helper above assumes a
+    full pod). The data axis is pure batch parallelism: the ShardedIndex
+    spans the model axis only — its leaf specs are ``P("model", ...)``, so
+    its state replicates over "data" automatically and ``dp`` scales batch
+    throughput without touching index placement or refresh programs."""
+    n = dp * tp
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh ({dp},{tp}) needs {n} devices, have {len(devs)} (CPU: "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n})"
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(dp, tp), ("data", "model")
+    )
 
 
 def fsdp_axes(mesh) -> tuple[str, ...]:
@@ -115,6 +135,21 @@ def data_shardings(batch_shapes: Any, mesh) -> Any:
         bdim = leaf.shape[0]
         ax = fa if (fa and _dim_ok(bdim, mesh, fa)) else None
         return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def stacked_data_shardings(batch_shapes: Any, mesh) -> Any:
+    """Fused-loop batches ``(T, global_batch, ...)``: the leading dim is
+    the lax.scan axis (never sharded); the global-batch dim (axis 1) shards
+    over ("pod","data") — the data-parallel training axis."""
+    fa = fsdp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        ax = fa if (fa and _dim_ok(leaf.shape[1], mesh, fa)) else None
+        return NamedSharding(mesh, P(None, ax, *([None] * (leaf.ndim - 2))))
 
     return jax.tree.map(one, batch_shapes)
 

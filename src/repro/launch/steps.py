@@ -123,7 +123,14 @@ def make_train_loop_step(model: Model, tcfg: TrainConfig):
                the trainer chunks the run (log/ckpt/refresh boundaries).
       index:   optional head MIPS index pytree; held FIXED across the
                fused window — staleness-triggered refresh is hoisted to
-               fused-loop boundaries by the trainer.
+               fused-loop boundaries by the trainer. This frozen-window
+               contract is also what makes the trainer's async
+               double-buffered refresh (repro.train.refresh) safe: the
+               side thread rebuilds from a snapshot while chunks keep
+               dispatching against the stale buffer, and the swap is just
+               a different pytree VALUE at the next dispatch — same
+               treedef, same canonical shardings, so the jit cache (and
+               with it this function's compiled graphs) is untouched.
 
     Returns the new state and per-step metrics stacked to ``(T,)`` leaves;
     the host decides when to actually sync them (every ``log_every`` steps

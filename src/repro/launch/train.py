@@ -56,6 +56,20 @@ def main() -> None:
                     help="R > 0: refresh the head MIPS index every R steps")
     ap.add_argument("--index-drift-threshold", type=float, default=0.0,
                     help="> 0: refresh when relative embedding drift exceeds")
+    ap.add_argument("--async-refresh", action="store_true",
+                    help="double-buffered index refresh: rebuild on a side "
+                         "thread while stepping against the stale buffer; "
+                         "atomic swap at the next fused-chunk boundary")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis size (devices used: "
+                         "dp*tp; the sharded index spans the model axis "
+                         "only, so dp scales batch throughput without "
+                         "touching index placement)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel (model) mesh axis size")
+    ap.add_argument("--sharded-ckpt", action="store_true",
+                    help="per-host sharded checkpoint save/restore "
+                         "(automatic on multi-process runs)")
     ap.add_argument("--adaptive-probe", action="store_true",
                     help="certificate-gated staged probe widening in the "
                          "head's MIPS queries (ivf/ivfpq)")
@@ -84,6 +98,11 @@ def main() -> None:
             head_n_probe_init=args.n_probe_init,
             head_n_probe_max=args.n_probe_max,
         )
+    mesh = None
+    if args.dp * args.tp > 1:
+        from repro.launch import mesh as meshlib
+
+        mesh = meshlib.make_train_mesh(args.dp, args.tp)
     run = RunConfig(
         num_steps=args.steps,
         batch=args.batch,
@@ -92,6 +111,8 @@ def main() -> None:
         fuse_steps=args.fuse_steps,
         index_refresh_every=args.index_refresh_every,
         index_drift_threshold=args.index_drift_threshold,
+        async_refresh=args.async_refresh,
+        sharded_ckpt=True if args.sharded_ckpt else None,
         fit_probe_router=args.probe_router,
         train=TrainConfig(
             opt=OptConfig(lr=args.lr, total_steps=args.steps),
@@ -99,9 +120,10 @@ def main() -> None:
             precision=args.precision,
         ),
     )
-    trainer = Trainer(cfg, run, args.workdir)
+    trainer = Trainer(cfg, run, args.workdir, mesh=mesh)
     result = trainer.train()
     result["index_refreshes"] = trainer.index_refreshes
+    result["index_swaps"] = trainer.index_swaps
     print(json.dumps(result, indent=1))
 
 

@@ -1,0 +1,98 @@
+"""Asynchronous double-buffered MIPS-index refresh (DESIGN.md §7).
+
+The synchronous path calls ``index.refresh(db)`` eagerly at a fused-loop
+boundary, stalling the one-dispatch-in-flight training pipeline for the
+full rebuild. :class:`AsyncIndexRefresher` moves the rebuild onto a side
+thread driving its own dispatch: ``kick`` takes the already-snapshotted db
+(the trainer owns the copy discipline — see
+``Trainer._index_db_and_snapshot``), starts the jitted rebuild, and
+returns immediately; the trainer keeps stepping against the STALE buffer
+and calls ``swap`` at the NEXT fused-chunk boundary, which joins the
+thread — by then the rebuild has overlapped with the chunk's device
+execution — and returns the fresh index for an atomic, recompile-free
+pytree swap (index state is shape-stable and canonically sharded, so the
+jitted step's cache is untouched).
+
+Determinism: the swap point is a deterministic function of the chunk
+schedule — always the first boundary after the kick; ``swap`` blocks on
+any unfinished residual rather than deferring — so a run's numerics depend
+only on its config, never on rebuild wall-clock. Staleness is therefore
+exactly the kicked chunk's length in optimizer steps, which the trainer
+reports together with the measured drift of the buffer that was served.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import jax
+
+__all__ = ["AsyncIndexRefresher"]
+
+
+class AsyncIndexRefresher:
+    """At most one rebuild in flight; ``kick``/``swap``/``abandon`` are
+    called from the trainer thread only."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self._result: Any = None
+        self._error: BaseException | None = None
+        self.kick_step: int | None = None
+        self.snapshot: Any = None  # drift snapshot paired with the kicked db
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None
+
+    def kick(self, index: Any, db: Any, snapshot: Any, step: int) -> None:
+        """Start ``index.refresh(db)`` on the side thread. ``db`` must be a
+        copy the trainer will not donate or mutate; ``snapshot`` becomes
+        the drift baseline once the rebuild is swapped in."""
+        assert self._thread is None, "one rebuild in flight at a time"
+        self.kick_step = step
+        self.snapshot = snapshot
+
+        def _rebuild():
+            try:
+                new = index.refresh(db)
+                # materialize on device INSIDE the side thread, so swap()
+                # hands over finished buffers (a pointer exchange), not a
+                # deferred execution the train step would then wait on
+                jax.block_until_ready(jax.tree_util.tree_leaves(new))
+                self._result = new
+            except BaseException as e:  # re-raised at swap()
+                self._error = e
+
+        self._thread = threading.Thread(
+            target=_rebuild, name="index-refresh", daemon=True
+        )
+        self._thread.start()
+
+    def swap(self) -> tuple[Any, Any, int]:
+        """Join the rebuild (blocking only on its unfinished residual) and
+        return ``(fresh_index, snapshot, kick_step)``."""
+        assert self._thread is not None, "no rebuild in flight"
+        self._thread.join()
+        if self._error is not None:
+            err = self._error
+            self._reset()
+            raise err
+        out = (self._result, self.snapshot, self.kick_step)
+        self._reset()
+        return out
+
+    def abandon(self) -> None:
+        """Preemption path: drain the thread and drop its result. The index
+        is never checkpointed — it is a pure function of the params — so a
+        resume rebuilds it, which counts as a refresh (DESIGN.md §7)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._reset()
+
+    def _reset(self) -> None:
+        self._thread = None
+        self._result = None
+        self._error = None
+        self.kick_step = None
+        self.snapshot = None

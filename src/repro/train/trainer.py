@@ -1,6 +1,7 @@
 """Training loop: fused multi-step engine, deterministic resume, preemption
-handling, straggler watchdog, staleness-aware MIPS-index refresh, async
-checkpoints.
+handling, straggler watchdog, staleness-aware MIPS-index refresh (sync or
+async double-buffered), async (optionally sharded) checkpoints, optional
+DP×TP mesh.
 
 Fused multi-step engine (DESIGN.md §9): the jitted step function is
 :func:`repro.launch.steps.make_train_loop_step` — ``fuse_steps`` full
@@ -35,23 +36,42 @@ never retrigger compilation. Refresh decisions are hoisted to fused-loop
 boundaries: the index is frozen within a fused window (drift over
 ``fuse_steps`` optimizer steps is what the threshold now bounds).
 
+``RunConfig.async_refresh`` removes the rebuild stall itself: the trainer
+snapshots the drifted rows at the boundary, kicks the jitted rebuild onto
+a side thread (:mod:`repro.train.refresh`), keeps stepping against the
+stale buffer, and swaps the fresh index in atomically at the NEXT
+fused-chunk boundary — a deterministic point in the chunk schedule, so the
+run's numerics never depend on rebuild wall-clock. Staleness is reported
+explicitly: ``index_stale_steps`` / ``index_drift_served`` land in the
+metrics log and the flush log lines, and ``refresh_events`` records every
+kick→swap pair.
+
 Fault-tolerance contract (DESIGN.md §6):
 * every state element (params, optimizer, data cursor, RNG) lives in the
   checkpoint => restart-identical training (the MIPS index is NOT
   checkpointed: it is a pure function of the params, rebuilt on restore —
-  a resume therefore counts as a refresh);
+  a resume therefore counts as a refresh; a preemption landing mid-rebuild
+  abandons the in-flight buffer for the same reason);
 * SIGTERM or a ``PREEMPT`` flag file triggers save-and-exit with a clean
   return code, matching cluster preemption semantics;
 * wall-clock per flush window is tracked with an EMA — windows slower than
   ``straggler_factor x EMA`` per step are counted and logged (at real
   scale the hook re-dispatches the batch to a backup replica; on one host
   we record them);
-* checkpoints are mesh-elastic (checkpoint/manager.py), so a restart may
-  use a different data-parallel width.
+* checkpoints are mesh-elastic (checkpoint/manager.py) and, on
+  multi-process runs, sharded per host with a merged manifest, so a
+  restart may use a different data-parallel width or host count.
+
+Diagnostics go through the ``repro.train`` logger (lazy handler, same
+pattern as ``repro.serve``): message text is unchanged from the historical
+``print`` lines — ``[trainer] ...`` / ``[trainer] WARNING: ...`` — so
+operator greps and the launcher smokes keep working, while embedding
+applications can now route or silence the stream.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import signal
 import time
@@ -63,12 +83,45 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import mips
 from repro.data.synthetic import DataConfig, SyntheticStream
+from repro.launch import mesh as meshlib
 from repro.launch import steps as steps_lib
 from repro.models.config import ArchConfig
 from repro.models.model import Model
 from repro.optim import adamw
+from repro.train.refresh import AsyncIndexRefresher
 
 __all__ = ["RunConfig", "Trainer"]
+
+_LOG = logging.getLogger("repro.train")
+
+
+class _TrainerFormatter(logging.Formatter):
+    """``[trainer] <msg>`` at INFO, ``[trainer] WARNING: <msg>`` above —
+    byte-identical to the historical print lines."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        lvl = (f"{record.levelname}: "
+               if record.levelno >= logging.WARNING else "")
+        return f"[trainer] {lvl}{record.getMessage()}"
+
+
+def _ensure_handler() -> None:
+    if _LOG.level == logging.NOTSET:
+        _LOG.setLevel(logging.INFO)
+    if not _LOG.handlers and not logging.getLogger().handlers:
+        h = logging.StreamHandler()
+        h.setFormatter(_TrainerFormatter())
+        _LOG.addHandler(h)
+
+
+def _log(msg: str) -> None:
+    _ensure_handler()
+    _LOG.info(msg)
+
+
+def _warn(msg: str) -> None:
+    _ensure_handler()
+    _LOG.warning(msg)
 
 
 @dataclasses.dataclass
@@ -84,6 +137,11 @@ class RunConfig:
     straggler_factor: float = 3.0
     index_refresh_every: int = 0  # R > 0: refresh the head index every R steps
     index_drift_threshold: float = 0.0  # > 0: refresh when rel. L2 drift exceeds
+    async_refresh: bool = False  # double-buffered refresh: rebuild on a side
+    #   thread while stepping against the stale buffer; atomic swap at the
+    #   next fused-chunk boundary (DESIGN.md §7)
+    sharded_ckpt: bool | None = None  # per-host sharded checkpoint layout
+    #   (None: auto — sharded iff multi-process)
     fit_probe_router: bool = False  # adaptive probe: fit the stage router
     #   (repro.models.router) against logged probe traces at every index
     #   refresh boundary and save it to workdir/router.npz
@@ -108,7 +166,9 @@ class Trainer:
         self.data = SyntheticStream(
             cfg, DataConfig(batch=run.batch, seq=run.seq, seed=run.seed)
         )
-        self.ckpt = CheckpointManager(workdir, keep=run.keep_ckpts)
+        self.ckpt = CheckpointManager(
+            workdir, keep=run.keep_ckpts, sharded=run.sharded_ckpt
+        )
         # the fused engine: {params, opt} state donated in place, one
         # dispatch per chunk of <= fuse_steps optimizer steps
         self.step_fn = jax.jit(
@@ -121,6 +181,11 @@ class Trainer:
         # ---- staleness-aware head-index refresh (DESIGN.md §7) ----
         self.head_index = None  # stateful MIPS index (None => exact path)
         self.index_refreshes = 0
+        self.index_swaps = 0  # async path: completed kick->swap pairs
+        # async refresh telemetry: one dict per kick->swap pair with
+        # {kick, swap, stale_steps, drift_served}
+        self.refresh_events: list[dict] = []
+        self._refresher = AsyncIndexRefresher() if run.async_refresh else None
         # adaptive probe telemetry: {effective width: query count} logged
         # from the refresh-boundary probe traces (empty when fixed-width)
         self.probe_width_hist: dict[int, int] = {}
@@ -129,17 +194,33 @@ class Trainer:
             lambda emb, snap: jnp.linalg.norm(emb - snap)
             / (jnp.linalg.norm(snap) + 1e-30)
         )
+        # DP×TP mesh: precompute the state shardings once (params by
+        # launch.mesh.param_spec; Adam moments mirror their params; the
+        # step counter and batch leaves shard per helpers below)
+        self._shardings = self._state_shardings() if mesh is not None else None
         # un-synced fused chunks: list of (first_step, n_steps, metrics)
         self._pending: list[tuple[int, int, dict]] = []
         self._flush_t0 = 0.0
         self._ema = None  # per-step wall EMA (flush granularity)
 
     # ------------------------------------------------------------- state
+    def _state_shardings(self):
+        shapes = jax.eval_shape(self.model.init, jax.random.key(0))
+        p_sh = meshlib.param_shardings(shapes, self.mesh, self.cfg)
+        rep = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec()
+        )
+        return {"params": p_sh, "opt": {"m": p_sh, "v": p_sh, "step": rep}}
+
     def init_state(self) -> dict:
         params = self.model.init(jax.random.key(self.run.seed))
+        opt = adamw.init(params)
+        if self._shardings is not None:
+            params = jax.device_put(params, self._shardings["params"])
+            opt = jax.device_put(opt, self._shardings["opt"])
         return {
             "params": params,
-            "opt": adamw.init(params),
+            "opt": opt,
             "meta": {"step": 0, "data": self.data.state()},
         }
 
@@ -147,11 +228,13 @@ class Trainer:
         if self.ckpt.latest_step() is not None:
             target = jax.eval_shape(self.init_state)
             target = {k: v for k, v in target.items() if k != "meta"}
-            state, meta, step = self.ckpt.restore(target)
+            state, meta, step = self.ckpt.restore(
+                target, shardings=self._shardings
+            )
             state = jax.tree.map(jnp.asarray, state)
             self.data.restore(meta["data"])
             state["meta"] = meta
-            print(f"[trainer] resumed from step {meta['step']}")
+            _log(f"resumed from step {meta['step']}")
             return state
         return self.init_state()
 
@@ -183,11 +266,16 @@ class Trainer:
         which travels through the fused train step next to the DONATED
         params — XLA rejects a buffer that is both donated and used in the
         same Execute(), and the donated buffer dies after the call anyway
-        (the long-standing reason the snapshot is a copy). Sharded index
-        state never aliases its build inputs (shard_map outputs), so only
-        the snapshot needs copying there."""
+        (the long-standing reason the snapshot is a copy). The same copy is
+        what makes the ASYNC rebuild safe: the side thread only ever reads
+        this frozen buffer while the train loop keeps donating the live
+        params. Sharded index state never aliases its build inputs
+        (shard_map outputs), so a SYNC refresh there may build straight
+        from the live rows and only the snapshot needs copying — but the
+        async rebuild must get a frozen copy too, or the side thread reads
+        a buffer the next chunk dispatch has already donated away."""
         emb = self._head_emb(params)
-        if self.model._head_mesh() is None:
+        if self.model._head_mesh() is None or self._refresher is not None:
             cp = jnp.array(emb, copy=True)
             return cp, cp
         return emb, jnp.array(emb, copy=True)
@@ -201,11 +289,29 @@ class Trainer:
         if self.head_index is not None:
             self._index_snapshot = snap
 
-    def _maybe_refresh_index(self, params, done: int) -> float:
-        """Refresh the head index on schedule or on embedding drift.
+    def _report_index_health(self, done: int) -> None:
+        """Coverage warnings after a (re)build — the ONE call site shared
+        by the sync refresh, the async swap, and both backends' knobs."""
+        dropped, short = mips.index_spill_parts(self.head_index)
+        if dropped:
+            _warn(f"index refresh at step {done} dropped {dropped} rows "
+                  f"(overflow buffer full) — raise overflow_frac")
+        if short:
+            hc = self.model.head_cfg
+            knob = (
+                # the pool is sized by the per-query EFFECTIVE width under
+                # adaptive probing — fixed n_probe is no longer the knob;
+                # the ceiling is
+                f"at effective probe width <= {hc.n_probe_max} (adaptive; "
+                f"hist {self.probe_width_hist}) — lower PQConfig.rerank "
+                f"or raise n_probe_max"
+                if hc.adaptive_probe
+                else "— lower PQConfig.rerank or raise n_probe"
+            )
+            _warn(f"re-rank pool short {short} slots {knob}")
 
-        Returns the measured relative drift (0.0 when not measured).
-        """
+    def _refresh_wanted(self, params, done: int) -> tuple[bool, bool, float]:
+        """(refresh due, drift-tripped, measured drift) at this boundary."""
         run = self.run
         drift = 0.0
         if run.index_drift_threshold > 0:
@@ -216,38 +322,77 @@ class Trainer:
         tripped = (
             run.index_drift_threshold > 0 and drift > run.index_drift_threshold
         )
-        if due or tripped:
-            db, snap = self._index_db_and_snapshot(params)
-            # eager call on purpose: IVF's refresh is internally one jitted
-            # XLA program (shard-local under shard_map for a ShardedIndex),
-            # while LSH's is host-side — both work here
-            self.head_index = self.head_index.refresh(db)
-            self._index_snapshot = snap
-            self.index_refreshes += 1
-            dropped, short = mips.index_spill_parts(self.head_index)
-            if dropped:
-                print(f"[trainer] WARNING: index refresh at step {done} "
-                      f"dropped {dropped} rows (overflow buffer full) — "
-                      f"raise overflow_frac")
-            if short:
-                hc = self.model.head_cfg
-                if hc.adaptive_probe:
-                    # the pool is sized by the per-query EFFECTIVE width
-                    # under adaptive probing — fixed n_probe is no longer
-                    # the knob; the ceiling is
-                    print(f"[trainer] WARNING: re-rank pool short {short} "
-                          f"slots at effective probe width <= "
-                          f"{hc.n_probe_max} (adaptive; hist "
-                          f"{self.probe_width_hist}) — lower "
-                          f"PQConfig.rerank or raise n_probe_max")
-                else:
-                    print(f"[trainer] WARNING: re-rank pool short {short} "
-                          f"slots — lower PQConfig.rerank or raise n_probe")
-            if tripped:
-                print(f"[trainer] index refresh at step {done}: "
-                      f"drift {drift:.4f} > {run.index_drift_threshold}")
-            self._probe_trace(params, done)
+        return due or tripped, tripped, drift
+
+    def _maybe_refresh_index(self, params, done: int) -> float:
+        """Refresh the head index on schedule or on embedding drift.
+
+        Sync path: rebuild in place (the boundary stalls for the rebuild).
+        Async path: kick the rebuild onto the side thread and keep serving
+        the stale buffer — the swap lands at the next fused-chunk boundary
+        (:meth:`_swap_index`). One rebuild in flight at a time: while busy,
+        the drift trigger stays armed and is re-checked after the swap
+        rather than queueing a second rebuild.
+
+        Returns the measured relative drift (0.0 when not measured).
+        """
+        wanted, tripped, drift = self._refresh_wanted(params, done)
+        if not wanted:
+            return drift
+        if self._refresher is not None:
+            if not self._refresher.in_flight and done < self.run.num_steps:
+                db, snap = self._index_db_and_snapshot(params)
+                self._refresher.kick(self.head_index, db, snap, done)
+                self._kicked(done, drift)
+            return drift
+        db, snap = self._index_db_and_snapshot(params)
+        # eager call on purpose: IVF's refresh is internally one jitted
+        # XLA program (shard-local under shard_map for a ShardedIndex),
+        # while LSH's is host-side — both work here
+        self.head_index = self.head_index.refresh(db)
+        self._index_snapshot = snap
+        self.index_refreshes += 1
+        self._report_index_health(done)
+        if tripped:
+            _log(f"index refresh at step {done}: "
+                 f"drift {drift:.4f} > {self.run.index_drift_threshold}")
+        self._probe_trace(params, done)
         return drift
+
+    def _kicked(self, done: int, drift: float) -> None:
+        """Kick-side log (separate method: tests hook it to inject a
+        preemption deterministically mid-rebuild)."""
+        _log(f"async index refresh kicked at step {done} "
+             f"(drift {drift:.4f}); serving the stale buffer until the "
+             f"next chunk boundary")
+
+    def _swap_index(self, params, done: int) -> None:
+        """Atomic double-buffer swap at the first fused-chunk boundary
+        after the kick. Deterministic in the chunk schedule: the join
+        blocks on the rebuild's unfinished residual (normally ~0 — the
+        rebuild overlapped the chunk's device execution) instead of
+        deferring, so numerics never depend on rebuild wall-clock. The
+        buffer served during the window was ``stale_steps`` stale; its
+        measured drift (current embedding vs the snapshot it was built
+        from) is reported so the staleness the run tolerated is observable,
+        not just assumed."""
+        new_index, snap, kicked = self._refresher.swap()
+        stale = done - kicked
+        drift_served = float(
+            self._drift_fn(self._head_emb(params), self._index_snapshot)
+        )
+        self.head_index = new_index
+        self._index_snapshot = snap
+        self.index_refreshes += 1
+        self.index_swaps += 1
+        self.refresh_events.append({
+            "kick": kicked, "swap": done, "stale_steps": stale,
+            "drift_served": drift_served,
+        })
+        self._report_index_health(done)
+        _log(f"async index swap at step {done}: kicked at {kicked}, "
+             f"served {stale} steps stale, drift_served={drift_served:.4f}")
+        self._probe_trace(params, done)
 
     def _probe_trace(self, params, done: int) -> None:
         """Adaptive-probe telemetry + router fit at a refresh boundary.
@@ -279,10 +424,10 @@ class Trainer:
             self.probe_width_hist[int(v)] = (
                 self.probe_width_hist.get(int(v), 0) + int(n)
             )
-        print(f"[trainer] adaptive probe at step {done}: avg effective "
-              f"n_probe {w.mean():.2f} (ceiling {hc.n_probe_max}), "
-              f"certified {float(np.asarray(atk.certified).mean()):.2f}, "
-              f"width hist {self.probe_width_hist}")
+        _log(f"adaptive probe at step {done}: avg effective "
+             f"n_probe {w.mean():.2f} (ceiling {hc.n_probe_max}), "
+             f"certified {float(np.asarray(atk.certified).mean()):.2f}, "
+             f"width hist {self.probe_width_hist}")
         if self.run.fit_probe_router:
             from repro.models import router as router_lib
 
@@ -291,8 +436,7 @@ class Trainer:
             )
             path = os.path.join(self.workdir, "router.npz")
             router_lib.save_router(path, r)
-            print(f"[trainer] probe router fitted on {qs.shape[0]} traces "
-                  f"-> {path}")
+            _log(f"probe router fitted on {qs.shape[0]} traces -> {path}")
 
     # --------------------------------------------------------- fused loop
     def _next_boundary(self, step: int) -> int:
@@ -319,7 +463,12 @@ class Trainer:
 
     def _stack_batches(self, t: int) -> dict:
         bs = [next(self.data) for _ in range(t)]
-        return jax.tree.map(lambda *xs: np.stack(xs), *bs)
+        batches = jax.tree.map(lambda *xs: np.stack(xs), *bs)
+        if self.mesh is not None:
+            batches = jax.device_put(
+                batches, meshlib.stacked_data_shardings(batches, self.mesh)
+            )
+        return batches
 
     def _flush(self, log: bool = True) -> dict:
         """Sync all pending fused chunks to host: block once (on the
@@ -337,9 +486,9 @@ class Trainer:
         else:
             if dt > self.run.straggler_factor * self._ema:
                 self.straggler_count += 1
-                print(f"[trainer] straggler window ending at step "
-                      f"{self._pending[-1][0] + self._pending[-1][1] - 1}: "
-                      f"{dt:.3f}s/step vs ema {self._ema:.3f}s/step")
+                _log(f"straggler window ending at step "
+                     f"{self._pending[-1][0] + self._pending[-1][1] - 1}: "
+                     f"{dt:.3f}s/step vs ema {self._ema:.3f}s/step")
             self._ema = 0.9 * self._ema + 0.1 * dt
         # index health at flush granularity: the operator-visible log line
         # carries the head index's HBM footprint and coverage shortfall
@@ -362,6 +511,10 @@ class Trainer:
                     wd * n for wd, n in self.probe_width_hist.items()
                 ) / max(tot, 1)
                 index_note += f" probe_w={avg:.1f}"
+            if self.refresh_events:  # async refresh: staleness accounting
+                ev = self.refresh_events[-1]
+                index_note += (f" stale_steps={ev['stale_steps']} "
+                               f"drift_served={ev['drift_served']:.4f}")
         for s0, t, metrics in self._pending:
             host = jax.tree.map(np.asarray, metrics)
             for i in range(t):
@@ -372,9 +525,9 @@ class Trainer:
                 self.metrics_log.append(entry)
                 if (log and self.run.log_every > 0
                         and (s0 + i) % self.run.log_every == 0):
-                    print(f"[trainer] step {s0 + i} "
-                          f"loss={entry.get('loss'):.4f} "
-                          f"({dt * 1e3:.0f}ms/step){index_note}")
+                    _log(f"step {s0 + i} "
+                         f"loss={entry.get('loss'):.4f} "
+                         f"({dt * 1e3:.0f}ms/step){index_note}")
         self._pending = []
         return dict(self.metrics_log[-1])
 
@@ -419,10 +572,36 @@ class Trainer:
                 run.ckpt_every > 0 and done % run.ckpt_every == 0
             ) or done == run.num_steps
             preempt = self._preempt_requested()
-            if not (log_due or refresh_due or ckpt_due or preempt
-                    or done == run.num_steps):
+            swap_due = (
+                self._refresher is not None and self._refresher.in_flight
+            )
+            flush_due = (log_due or refresh_due or ckpt_due or preempt
+                         or done == run.num_steps)
+            if not (flush_due or swap_due):
+                continue
+            swapped = False
+            if swap_due and preempt:
+                # mid-rebuild preemption: drop the in-flight buffer; the
+                # resume's index rebuild counts as the refresh (§6/§7)
+                self._refresher.abandon()
+            elif swap_due:
+                # the swap is boundary cost, not step cost: keep its
+                # residual out of the per-step window the straggler
+                # watchdog sees (pending chunks stay un-flushed here)
+                t0 = time.perf_counter()
+                self._swap_index(dev["params"], done)
+                self._flush_t0 += time.perf_counter() - t0
+                swapped = True
+            if not flush_due:
                 continue
             last = self._flush()
+            if swapped and self.metrics_log:
+                ev = self.refresh_events[-1]
+                self.metrics_log[-1]["index_stale_steps"] = ev["stale_steps"]
+                self.metrics_log[-1]["index_drift_served"] = (
+                    ev["drift_served"]
+                )
+                last = dict(self.metrics_log[-1])
             if refresh_due:
                 drift = self._maybe_refresh_index(dev["params"], done)
                 self.metrics_log[-1]["index_drift"] = drift
@@ -434,7 +613,7 @@ class Trainer:
                     "meta": {"step": done, "data": self.data.state()},
                 })
             if preempt:
-                print(f"[trainer] preemption at step {done}; checkpointing")
+                _log(f"preemption at step {done}; checkpointing")
                 self.ckpt.wait()
                 self.ckpt.save_async(done, {
                     "params": dev["params"], "opt": dev["opt"],
@@ -448,5 +627,7 @@ class Trainer:
             # pre-fused loop, which timed step_fn exclusively)
             self._flush_t0 = time.perf_counter()
         last = self._flush()
+        if self._refresher is not None:
+            self._refresher.abandon()  # safety net; drained at run end
         self.ckpt.wait()
         return {**last, "status": "done", "step": run.num_steps}

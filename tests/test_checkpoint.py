@@ -97,6 +97,113 @@ def test_async_manager(tmp_path):
     assert m.latest_step() == 10
 
 
+def test_save_async_snapshot_not_delayed_by_slow_prior_save(tmp_path,
+                                                           monkeypatch):
+    """Regression (async-refresh PR): ``save_async`` must snapshot the
+    state to host FIRST and only then queue the disk write behind the
+    previous save. The old implementation joined the previous writer
+    thread BEFORE snapshotting, so one slow disk write stalled the train
+    loop for its full duration. Here save #1 is gated on an event the
+    main thread controls: save #2's snapshot must return while save #1
+    is still stuck, and the writes must still land in order."""
+    import threading
+    import time
+
+    d = str(tmp_path)
+    m = ckpt.CheckpointManager(d, keep=3)
+    release = threading.Event()
+    orig_save = ckpt.save
+    order = []
+
+    def gated_save(workdir, step, state, keep=3):
+        order.append(step)
+        if step == 1:
+            # the buggy order would deadlock here (main thread stuck in
+            # join); the timeout turns that into a measurable slow path
+            release.wait(timeout=10)
+        return orig_save(workdir, step, state, keep=keep)
+
+    monkeypatch.setattr(ckpt, "save", gated_save)
+    m.save_async(1, _state(1))
+    t0 = time.perf_counter()
+    m.save_async(2, _state(2))  # must return while save 1 is still gated
+    dt = time.perf_counter() - t0
+    release.set()
+    m.wait()
+    assert dt < 5.0, f"snapshot stalled {dt:.1f}s behind the prior save"
+    assert order == [1, 2], order  # chained writer: one ordered file stream
+    assert m.latest_step() == 2
+
+
+def test_sharded_roundtrip_single_process_bitwise(tmp_path):
+    """``sharded=True`` layout on one process: per-process shard npz +
+    merged manifest, restored bit-identical — including extended-dtype
+    (bf16) leaves, which travel as uint8 views like the dense layout."""
+    d = str(tmp_path)
+    s = _state(7)
+    s["opt"]["ema"] = jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4) * 1.7
+    m = ckpt.CheckpointManager(d, keep=2, sharded=True)
+    m.save_async(7, s)
+    m.wait()
+    assert m.latest_step() == 7
+    cdir = os.path.join(d, "ckpt_00000007")
+    with open(os.path.join(cdir, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["sharded"] and man["complete"] and man["processes"] == 1
+    assert os.path.exists(os.path.join(cdir, "shards_p00000.npz"))
+
+    target = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        {k: v for k, v in s.items() if k != "meta"},
+    )
+    got, meta, step = ckpt.restore(d, target)
+    assert step == 7 and meta["step"] == 7
+    for (pa, la), (pb, lb) in zip(
+        jax.tree_util.tree_leaves_with_path(got),
+        jax.tree_util.tree_leaves_with_path(
+            {k: v for k, v in s.items() if k != "meta"}
+        ),
+    ):
+        want = np.asarray(lb)
+        have = np.asarray(la)
+        assert have.dtype == want.dtype, pa
+        assert have.tobytes() == want.tobytes(), pa
+
+    # explicit shardings: the sharded layout re-device_puts on load too
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), target
+    )
+    got2, _, _ = ckpt.restore(d, target, shardings=shardings)
+    assert got2["params"]["w"].sharding.device_set == {jax.devices()[0]}
+    assert got2["opt"]["ema"].dtype == jnp.bfloat16
+
+
+def test_sharded_keep_n_and_cross_layout_restore(tmp_path):
+    """Sharded saves honor keep-N gc, and a run can restore a checkpoint
+    written under the OTHER layout (scale one host -> many or back)."""
+    d = str(tmp_path)
+    ckpt.save(d, 1, _state(1), keep=2)  # dense layout
+    m = ckpt.CheckpointManager(d, keep=2, sharded=True)
+    for step in (2, 3):
+        m.save_async(step, _state(step))
+        m.wait()
+    assert sorted(os.listdir(d)) == ["ckpt_00000002", "ckpt_00000003"]
+    target = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
+        {k: v for k, v in _state(3).items() if k != "meta"},
+    )
+    # sharded manager restores its own layout...
+    got, _, step = m.restore(target)
+    assert step == 3
+    assert int(np.asarray(got["opt"]["step"])) == 3
+    # ...and an unsharded manager reads the sharded manifest transparently
+    got2, _, step2 = ckpt.CheckpointManager(d, sharded=False).restore(target)
+    assert step2 == 3
+    np.testing.assert_array_equal(
+        np.asarray(got["params"]["w"]), np.asarray(got2["params"]["w"])
+    )
+
+
 def test_elastic_restore_resharding(tmp_path):
     """Restore under explicit shardings re-device_puts (mesh-elastic)."""
     d = str(tmp_path)

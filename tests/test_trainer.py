@@ -146,6 +146,116 @@ def test_index_refresh_lsh_head(tmp_path):
     assert tr.index_refreshes == 2, tr.index_refreshes
 
 
+def _ivf_cfg():
+    return get_smoke("tinyllama-1.1b").scaled(
+        vocab=4096, head_mode="amortized", head_mips="ivf",
+        head_k=96, head_l=96,
+    )
+
+
+def _async_run(steps=12, log_every=100, total=None):
+    return RunConfig(
+        num_steps=steps, ckpt_every=100, log_every=log_every,
+        batch=4, seq=32, fuse_steps=2, index_refresh_every=4,
+        async_refresh=True,
+        train=TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=2,
+                                        total_steps=total or steps)),
+    )
+
+
+def test_async_refresh_swaps_at_next_chunk_boundary(tmp_path):
+    """Double-buffered schedule (fuse=2, R=4, 12 steps): kicks at 4 and 8,
+    swaps exactly one chunk later at 6 and 10 (the kick at 12 is
+    suppressed — nothing would serve the rebuild). Staleness is reported:
+    every kick->swap pair records stale_steps == chunk length and a
+    measured drift of the buffer that was served, and the flushed metrics
+    carry the same numbers."""
+    tr = Trainer(_ivf_cfg(), _async_run(log_every=2), str(tmp_path))
+    out = tr.train()
+    assert out["status"] == "done"
+    assert tr.index_swaps == 2 and tr.index_refreshes == 2
+    assert [(e["kick"], e["swap"], e["stale_steps"])
+            for e in tr.refresh_events] == [(4, 6, 2), (8, 10, 2)]
+    assert all(e["drift_served"] > 0 for e in tr.refresh_events)
+    stale = [m for m in tr.metrics_log if "index_stale_steps" in m]
+    assert [m["step"] for m in stale] == [5, 9]  # last step of each window
+    assert all(m["index_stale_steps"] == 2 and m["index_drift_served"] > 0
+               for m in stale)
+
+
+def test_async_refresh_is_run_to_run_deterministic(tmp_path):
+    """The swap point is a fixed chunk boundary, not a wall-clock event:
+    two identical async runs must produce bitwise-identical final state
+    even though the rebuild races training on a side thread."""
+    finals = []
+    for name in ("a", "b"):
+        d = os.path.join(str(tmp_path), name)
+        tr = Trainer(_ivf_cfg(), _async_run(), d)
+        assert tr.train()["status"] == "done"
+        assert tr.index_swaps == 2
+        state, _, _ = tr.ckpt.restore(
+            jax.eval_shape(lambda tr=tr: {
+                k: v for k, v in tr.init_state().items() if k != "meta"
+            })
+        )
+        finals.append(state)
+    for (pa, la), (_, lb) in zip(
+        jax.tree_util.tree_leaves_with_path(finals[0]),
+        jax.tree_util.tree_leaves_with_path(finals[1]),
+    ):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb)), pa
+
+
+class _PreemptOnKick(Trainer):
+    """Deterministic mid-rebuild preemption: drop the PREEMPT flag the
+    moment a rebuild is kicked, so the next boundary sees the preemption
+    while the side thread is (logically) still in flight."""
+
+    def _kicked(self, done, drift):
+        super()._kicked(done, drift)
+        os.makedirs(self.workdir, exist_ok=True)
+        open(os.path.join(self.workdir, "PREEMPT"), "w").close()
+
+
+def test_preempt_mid_rebuild_resumes_and_retriggers_refresh(tmp_path):
+    """A preemption landing mid-rebuild abandons the in-flight buffer
+    (no swap) and checkpoints; the resume's index rebuild counts as the
+    refresh (DESIGN.md §6/§7), the async schedule re-arms, and training
+    continues bitwise-reproducibly (two resumes from copies of the same
+    checkpoint agree exactly)."""
+    import shutil
+
+    wd = os.path.join(str(tmp_path), "run")
+    tr1 = _PreemptOnKick(_ivf_cfg(), _async_run(), wd)
+    out = tr1.train()
+    assert out["status"] == "preempted" and out["step"] == 6
+    assert tr1.index_swaps == 0  # abandoned, not swapped
+    assert not tr1._refresher.in_flight
+    assert tr1.ckpt.latest_step() == 6
+
+    finals = []
+    for name in ("a", "b"):
+        d = os.path.join(str(tmp_path), name)
+        shutil.copytree(wd, d)
+        os.remove(os.path.join(d, "PREEMPT"))
+        tr = Trainer(_ivf_cfg(), _async_run(), d)
+        out = tr.train()
+        assert out["status"] == "done"
+        # refresh re-triggered after resume: kick at 8, swap at 10
+        assert [(e["kick"], e["swap"]) for e in tr.refresh_events] == [(8, 10)]
+        state, _, _ = tr.ckpt.restore(
+            jax.eval_shape(lambda tr=tr: {
+                k: v for k, v in tr.init_state().items() if k != "meta"
+            })
+        )
+        finals.append(state)
+    for (pa, la), (_, lb) in zip(
+        jax.tree_util.tree_leaves_with_path(finals[0]),
+        jax.tree_util.tree_leaves_with_path(finals[1]),
+    ):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb)), pa
+
+
 def test_preemption_flag_checkpoints_and_exits(tmp_path):
     cfg = get_smoke("tinyllama-1.1b")
     wd = str(tmp_path)
