@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV. Select subsets with
 ``python -m benchmarks.run
-[fig2|table1|fig4|table2|fig7|refresh|dist|serve|train|pq|decode_fused|roofline]``.
+[fig2|table1|fig4|table2|fig7|refresh|dist|serve|train|pq|decode_fused|roofline|workloads]``.
 
 ``--json-out PATH`` additionally writes one combined JSON document — a
 ``BENCH_*.json`` trajectory entry (schema ``bench-trajectory-v1``) that
@@ -12,7 +12,8 @@ far: BENCH_20260802_train.json [train], BENCH_20260802_serve_pq.json
 [serve+train+pq], BENCH_20260808_decode_fused.json [decode_fused],
 BENCH_20260808_adaptive_probe.json [adaptive],
 BENCH_20260809_serve_load.json [serve_load],
-BENCH_20260809_index_refresh.json [refresh];
+BENCH_20260809_index_refresh.json [refresh],
+BENCH_20260809_workloads.json [workloads];
 regenerate with the same command to extend the trajectory).
 
 ``--compare ENTRY [ENTRY ...]`` reads committed entries back through
@@ -29,7 +30,7 @@ import time
 SCHEMA = "bench-trajectory-v1"
 # suites accepting a reduced CI grid (fn(report, smoke=True))
 SMOKE_SUITES = ("serve", "train", "pq", "decode_fused", "adaptive",
-                "serve_load", "refresh")
+                "serve_load", "refresh", "workloads")
 
 
 def load_trajectory(paths: list[str]) -> list[dict]:
@@ -95,6 +96,7 @@ def main() -> None:
         serve_engine,
         serve_load,
         train_engine,
+        workloads,
     )
 
     suites = {
@@ -112,6 +114,7 @@ def main() -> None:
         "decode_fused": decode_fused.run,
         "adaptive": adaptive_probe.run,
         "roofline": roofline_report.run,
+        "workloads": workloads.run,
     }
     ap = argparse.ArgumentParser()
     ap.add_argument("suites", nargs="*", metavar="suite",

@@ -41,9 +41,11 @@ from repro.core.complement import sample_complement
 from repro.core.gumbel import (
     SampleResult,
     TopK,
+    TopKSampleResult,
     certificate,
     plan_tail,
     sample_fixed_b,
+    topk_fixed_b,
 )
 
 __all__ = [
@@ -54,12 +56,14 @@ __all__ = [
     "amortized_candidates",
     "topk_only_candidates",
     "stratified_logz",
+    "lsh_sampler_logz",
     "exact_logz",
     "target_partial",
     "loss_partials",
     "combine_loss",
     "combine_loss_psum",
     "local_gumbel_max",
+    "local_gumbel_topk",
     "dense_gumbel_max",
     "combine_sample_pmax",
     "chunked_map",
@@ -239,6 +243,80 @@ def _fused_logz_bwd(res, g):
 
 
 _fused_logz.defvjp(_fused_logz_fwd, _fused_logz_bwd)
+
+
+def lsh_sampler_logz(
+    index: Any, h: jax.Array, *, per_table: bool = False,
+    min_bit_prob: float = 1e-7,
+) -> jax.Array:
+    """Spring–Shrivastava (arXiv 1703.05160) unbiased LSH-sampler estimate
+    of ``log Z`` — the second estimator class behind the Algorithm-3
+    interface, using :class:`repro.core.mips.LSHIndex` buckets as the
+    proposal structure instead of a top-k probe + uniform tail.
+
+    Per table ``t``, every db point ``x`` landing in the query's bucket is
+    importance-weighted by its exact bucket-collision probability
+    ``q1(x) = p(x)^n_bits`` (SRP per-bit agreement ``p = 1 - angle/pi``
+    between the NORM-COMPLETED vectors; the query's augmented coordinate is
+    0, so the scored inner product stays the raw ``h·x``)::
+
+        Z_t = sum_{x in bucket_t(h)} e^{y_x} / q1(x),   E[Z_t] = Z
+
+    and the estimate averages the L iid per-table estimates,
+    ``Z_hat = (1/L) sum_t Z_t`` — unbiased in Z (up to fp rounding of the
+    arccos collision probabilities), with across-table independence giving
+    CLT/Chebyshev intervals for free (tests/test_estimator_stats.py).
+
+    Unbiasedness REQUIRES lossless buckets: a point dropped by the padded
+    bucket cap has retrieval probability below its nominal ``q1`` and
+    biases Z_hat down. Build the index with ``bucket_cap >= max load``
+    and check ``index.dropped_count == 0`` (the counts leaf added for
+    estimator duty) before trusting the estimate.
+
+    Args:
+      index: an LSHIndex (duck-typed: needs proj / table_ids / db_aug /
+        n_bits). All partials are fp32 (ESTIMATOR_DTYPE) per DESIGN.md §9.
+      h: (t, d) queries.
+      per_table: return the (t, L) per-table ``log Z_t`` matrix instead of
+        the combined (t,) ``log Z_hat`` — the stats suite builds its
+        across-table confidence intervals from these.
+      min_bit_prob: floor on the per-bit collision probability. A RETRIEVED
+        point's fp-rounded probability can hit exactly 0 only for
+        near-antipodal pairs (a probability-~0 retrieval); the floor keeps
+        the weight finite at negligible (downward) bias.
+
+    Returns (t,) ``log Z_hat`` — or (t, L) per-table ``log Z_t`` (empty
+    buckets give -inf, a legitimate ``Z_t = 0`` sample).
+    """
+    hf = h.astype(jnp.float32)
+    tq = hf.shape[0]
+    q_aug = jnp.concatenate([hf, jnp.zeros((tq, 1), jnp.float32)], axis=1)
+    proj = index.proj  # (L, d+1, bits)
+    n_bits = index.n_bits
+    bits = jnp.einsum("bd,tdc->tbc", q_aug, proj) >= 0
+    pows = (1 << jnp.arange(n_bits)).astype(jnp.int32)
+    codes = jnp.tensordot(bits.astype(jnp.int32), pows, axes=1)  # (L, t)
+    cand = jnp.take_along_axis(
+        index.table_ids, codes[:, :, None], axis=1
+    )  # (L, t, cap)
+    vecs = index.db_aug[jnp.maximum(cand, 0)]  # (L, t, cap, d+1)
+    # q_aug's last coordinate is 0: this IS the raw h·x, fp32 accumulated
+    y = jnp.einsum("ltcd,td->ltc", vecs, q_aug).astype(ESTIMATOR_DTYPE)
+    norms = jnp.linalg.norm(vecs, axis=-1) * jnp.linalg.norm(
+        q_aug, axis=-1
+    )[None, :, None]
+    cosv = y / jnp.maximum(norms, 1e-30)
+    ang = jnp.arccos(jnp.clip(cosv, -1.0, 1.0))
+    p_bit = jnp.maximum(1.0 - ang / jnp.pi, min_bit_prob)
+    log_q1 = n_bits * jnp.log(p_bit)  # (L, t, cap) log collision prob
+    w = jnp.where(cand >= 0, y - log_q1, -jnp.inf)
+    log_zt = jax.nn.logsumexp(w, axis=2)  # (L, t)
+    if per_table:
+        return jnp.moveaxis(log_zt, 0, 1)  # (t, L)
+    n_tables = proj.shape[0]
+    return jax.nn.logsumexp(log_zt, axis=0) - jnp.log(
+        jnp.float32(n_tables)
+    )
 
 
 def exact_logz(emb: jax.Array, h: jax.Array, n_valid=None) -> jax.Array:
@@ -493,6 +571,65 @@ def _fused_tail_argmax(
         lambda v, bb, mv, ov: certificate(v, bb, c, mv, ov)
     )(values, b, max_val, plan.overflow)
     return SampleResult(idx, ok, plan.m_used, max_val, bound, plan.overflow)
+
+
+def local_gumbel_topk(
+    key: jax.Array | None,
+    emb: jax.Array,
+    h: jax.Array,
+    *,
+    num: int,
+    k: int,
+    l: int,
+    index: Any = None,
+    n_valid=None,
+    c: float = 0.0,
+    m_cap: int | None = None,
+    keys: jax.Array | None = None,
+) -> TopKSampleResult:
+    """Batched lazy-Gumbel top-``num`` WITHOUT replacement over the local
+    rows: :func:`local_gumbel_max`'s probe/sanitize/key discipline with
+    :func:`repro.core.gumbel.topk_fixed_b` as the finish, so each token
+    gets the ``num`` largest perturbed values of ONE joint Gumbel draw
+    (Kool et al. 2019) plus the Algorithm-2 exactness certificate on the
+    whole kept set. This is the candidate-draw primitive behind stochastic
+    beam search (repro.workloads.structured): each beam expansion is one
+    call, ``num`` = beam width, and the per-beam ``ok`` flag gates the
+    beam's exactness.
+
+    Returns a TopKSampleResult with leading dim t: ids/values/scores are
+    (t, num) (values perturbed, descending; scores the matching raw y);
+    ok/m/bound/overflow are (t,). ``keys`` ((t,) typed PRNG keys) pins
+    per-token randomness as in :func:`local_gumbel_max` — beam search
+    derives them from the node path so a beam's draw is independent of
+    which other beams share the batch. ``key`` may be None when ``keys``
+    is given.
+    """
+    t = h.shape[0]
+    nv = emb.shape[0] if n_valid is None else n_valid
+    if m_cap is None:
+        m_cap = int(l + 6 * math.sqrt(l) + 8)
+    embf = emb.astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    topk = topk_probe(embf, hf, k, index=index, n_valid=n_valid)
+    ids_clean, k_valid = sanitize_topk(topk, nv)
+    if keys is None:
+        if key is None:
+            raise ValueError("local_gumbel_topk needs key or keys")
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            key, jnp.arange(t, dtype=jnp.uint32)
+        )
+
+    def one(kk, tk_ids, tk_vals, kv, hh):
+        score_fn = (
+            lambda ids: embf[jnp.minimum(ids, emb.shape[0] - 1)] @ hh
+        )
+        return topk_fixed_b(
+            kk, TopK(tk_ids, tk_vals), nv, score_fn, num=num, l=l,
+            m_cap=m_cap, c=c, k_valid=kv,
+        )
+
+    return jax.vmap(one)(keys, ids_clean, topk.values, k_valid, hf)
 
 
 def dense_gumbel_max(

@@ -49,12 +49,14 @@ from repro.core.complement import sample_complement
 __all__ = [
     "TopK",
     "SampleResult",
+    "TopKSampleResult",
     "TailPlan",
     "plan_tail",
     "certificate",
     "gap_certificate",
     "sample_adaptive_b",
     "sample_fixed_b",
+    "topk_fixed_b",
     "gumbel_max_dense",
     "default_kl",
 ]
@@ -262,3 +264,98 @@ def sample_fixed_b(
     lam = jnp.float32(l)
     return _finish(k_t, topk, n, score_fn, b, lam, m_cap, c, pert_s,
                    k_valid=k_valid)
+
+
+class TopKSampleResult(NamedTuple):
+    """Perturbed top-``num`` of one lazy-Gumbel draw (best first).
+
+    The ``num`` largest perturbed values of ONE joint Gumbel perturbation —
+    i.e. Gumbel top-k sampling *without replacement* (the first num atoms
+    of the Plackett–Luce process), not num independent samples. Dead output
+    slots (fewer than num live candidates) carry id -1 / value -inf, the
+    repo-wide pad convention."""
+
+    ids: jax.Array  # (num,) int32 — perturbed top-num ids, -1 pads
+    values: jax.Array  # (num,) f32 — perturbed values, descending
+    scores: jax.Array  # (num,) f32 — the ids' UNperturbed log-probs y
+    ok: jax.Array  # () bool — top-num provably exact (given MIPS gap <= c)
+    m: jax.Array  # () int32 — tail candidates materialized
+    bound: jax.Array  # () f32 — S_min + c + B: non-materialized points are
+    #   provably below this perturbed value
+    overflow: jax.Array  # () bool — static tail buffer overflowed
+
+
+def topk_fixed_b(
+    key: jax.Array,
+    topk: TopK,
+    n,
+    score_fn: Callable[[jax.Array], jax.Array],
+    *,
+    num: int,
+    l: int,
+    m_cap: int | None = None,
+    c: float = 0.0,
+    k_valid=None,
+) -> TopKSampleResult:
+    """Algorithm-2 lazy Gumbels, keeping the top ``num`` perturbed values
+    instead of the argmax — Gumbel top-k without replacement (Kool et al.
+    2019's primitive) over the same S ∪ Poissonized-tail candidate pool.
+
+    Key discipline, cutoff, atom rate and tail plan are IDENTICAL to
+    :func:`sample_fixed_b` (same splits, same draw shapes), so with
+    ``num=1`` the winning (id, value) is bit-for-bit the SampleResult of
+    :func:`sample_fixed_b` — which tests/test_workloads.py asserts.
+
+    Two deltas vs the argmax path:
+
+    * **Tail dedup.** Tail atom positions are drawn with replacement; a
+      point's true truncated Gumbel is the max over its atoms. The argmax
+      never sees the smaller duplicates, but a top-num WOULD return the
+      same id twice — so every non-maximal duplicate atom is masked to
+      -inf (per-position max kept, in place, preserving atom order).
+    * **Certificate.** Non-materialized points lie below
+      ``bound = S_min + c + B``; the kept set is the true perturbed
+      top-num iff the num-th best kept value clears that bound (and the
+      static buffer did not overflow). When S covers the whole support
+      (``k_valid == n``) the cutoff ``B = log(0) = -inf`` makes the
+      certificate pass vacuously — nothing is non-materialized.
+    """
+    k = topk.ids.shape[0]
+    kv = k if k_valid is None else k_valid
+    if m_cap is None:
+        m_cap = int(l + 6 * math.sqrt(l) + 8)
+    k_s, k_t = jax.random.split(key)
+    g_s = jax.random.gumbel(k_s, (k,), dtype=jnp.float32)
+    pert_s = topk.values.astype(jnp.float32) + g_s
+    b = jnp.log((jnp.asarray(n, jnp.float32) - kv) / l)
+    lam = jnp.float32(l)
+
+    plan = plan_tail(k_t, topk.ids, n, b, lam, m_cap, k_valid=k_valid)
+    y_tail = score_fn(plan.pos).astype(jnp.float32)  # (m_cap,)
+    live = jnp.arange(m_cap, dtype=jnp.int32) < plan.m_used
+    pert_t = jnp.where(live, y_tail + plan.heights, -jnp.inf)
+    # per-position max over duplicate tail atoms: stable-sort atoms by
+    # (position, descending perturbed value), mark each position's first
+    # (= largest, live-before-dead) occurrence, scatter the mark back so
+    # atom order — and therefore argmax tie-breaking — is untouched
+    order = jnp.lexsort((-pert_t, plan.pos))
+    sorted_pos = plan.pos[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_pos[1:] != sorted_pos[:-1]]
+    )
+    keep = jnp.zeros((m_cap,), bool).at[order].set(first)
+    pert_t = jnp.where(keep, pert_t, -jnp.inf)
+
+    pert = jnp.concatenate([pert_s, pert_t])
+    ids = jnp.concatenate([topk.ids.astype(jnp.int32), plan.pos])
+    scores = jnp.concatenate([topk.values.astype(jnp.float32), y_tail])
+    vals, pos = jax.lax.top_k(pert, num)
+    out_ids = ids[pos]
+    out_scores = scores[pos]
+    dead = jnp.isneginf(vals)
+    out_ids = jnp.where(dead, jnp.int32(-1), out_ids)
+    out_scores = jnp.where(dead, -jnp.inf, out_scores)
+    ok, bound = certificate(topk.values, b, c, vals[num - 1], plan.overflow)
+    return TopKSampleResult(
+        out_ids, vals, out_scores, ok, plan.m_used, bound, plan.overflow
+    )

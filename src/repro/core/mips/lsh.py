@@ -52,8 +52,20 @@ def _hash_codes(x_aug: np.ndarray, proj: np.ndarray) -> np.ndarray:
 
 def _build_tables(
     db_np: np.ndarray, proj: np.ndarray, n_bits: int, bucket_cap: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Returns (table_ids (t, 2**bits, cap), db_aug (n, d+1))."""
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (table_ids (t, 2**bits, cap), db_aug (n, d+1),
+    counts (t, 2**bits) — TRUE bucket loads, uncapped).
+
+    Vectorized per table: a stable argsort by bucket code groups members
+    while preserving ascending db order inside each bucket, so the cap
+    keeps each bucket's lowest-index members — the same first-come-kept
+    drop policy as the original insertion loop. Points past the cap are
+    dropped from that table only (other tables still cover them, standard
+    LSH behavior); ``counts`` records the uncapped loads so estimator
+    clients can detect drops (LSHIndex.dropped_count) — the unbiased
+    LSH-sampler (core/estimators.lsh_sampler_logz) is only unbiased when
+    there are none.
+    """
     n = db_np.shape[0]
     norms = np.linalg.norm(db_np, axis=1)
     m_norm = float(norms.max()) + 1e-6
@@ -63,22 +75,23 @@ def _build_tables(
 
     n_tables = proj.shape[0]
     table_ids = np.full((n_tables, 2**n_bits, bucket_cap), -1, dtype=np.int32)
-    counts = np.zeros((n_tables, 2**n_bits), dtype=np.int64)
+    counts = np.zeros((n_tables, 2**n_bits), dtype=np.int32)
     for t in range(n_tables):
-        for i in range(n):
-            b = codes[t, i]
-            if counts[t, b] < bucket_cap:
-                table_ids[t, b, counts[t, b]] = i
-                counts[t, b] += 1
-            # bucket overflow: silently dropped from this table; other
-            # tables still cover the point (standard LSH behavior).
-    return table_ids, db_aug
+        counts[t] = np.bincount(codes[t], minlength=2**n_bits)
+        order = np.argsort(codes[t], kind="stable")  # (n,) ids by bucket
+        sc = codes[t][order]
+        rank = np.arange(n) - np.searchsorted(sc, sc, side="left")
+        kept = rank < bucket_cap
+        table_ids[t, sc[kept], rank[kept]] = order[kept].astype(np.int32)
+    return table_ids, db_aug, counts
 
 
 @base.register_backend(LSHConfig)
 @jax.tree_util.register_pytree_node_class
 class LSHIndex:
-    """Stateful SRP-LSH index: frozen config + (proj, tables, db_aug) state."""
+    """Stateful SRP-LSH index: frozen config + (proj, tables, db_aug,
+    counts) state. ``counts`` carries the TRUE (uncapped) bucket loads so
+    estimator clients can verify losslessness (see dropped_count)."""
 
     def __init__(
         self,
@@ -86,11 +99,13 @@ class LSHIndex:
         proj: jax.Array,  # (n_tables, d+1, n_bits) f32 — SRP hyperplanes
         table_ids: jax.Array,  # (n_tables, 2**n_bits, cap) i32, -1 padded
         db_aug: jax.Array,  # (n, d+1) — norm-completed db (for scoring)
+        counts: jax.Array,  # (n_tables, 2**n_bits) i32 — true bucket loads
     ):
         self.config = config
         self.proj = proj
         self.table_ids = table_ids
         self.db_aug = db_aug
+        self.counts = counts
 
     @property
     def n_tables(self) -> int:
@@ -99,6 +114,38 @@ class LSHIndex:
     @property
     def n_bits(self) -> int:
         return self.proj.shape[2]
+
+    @property
+    def bucket_cap(self) -> int:
+        return self.table_ids.shape[2]
+
+    @property
+    def dropped_count(self) -> int:
+        """Total member slots lost to the padded bucket cap, across tables
+        (host-side diagnostic; 0 means lossless buckets — a precondition
+        for the unbiased LSH-sampler estimator)."""
+        over = np.maximum(
+            np.asarray(self.counts, np.int64) - self.bucket_cap, 0
+        )
+        return int(over.sum())
+
+    def bucket_log_probs(self, q: jax.Array) -> jax.Array:
+        """(b, n) per-table log bucket-collision probability of every db
+        point with each query: ``n_bits * log(1 - angle/pi)`` over the
+        norm-completed vectors — the exact importance weights the unbiased
+        LSH-sampler divides by (same tables => same probability for every
+        table, so one (b, n) matrix serves all L)."""
+        qf = q.astype(jnp.float32)
+        q_aug = jnp.concatenate(
+            [qf, jnp.zeros((qf.shape[0], 1), jnp.float32)], axis=1
+        )
+        dots = q_aug @ self.db_aug.T  # (b, n) == q·x (aug coord of q is 0)
+        norms = jnp.linalg.norm(q_aug, axis=1)[:, None] * jnp.linalg.norm(
+            self.db_aug, axis=1
+        )[None, :]
+        cosv = dots / jnp.maximum(norms, 1e-30)
+        p_bit = 1.0 - jnp.arccos(jnp.clip(cosv, -1.0, 1.0)) / jnp.pi
+        return self.n_bits * jnp.log(jnp.maximum(p_bit, 1e-30))
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -111,19 +158,22 @@ class LSHIndex:
             np.float32
         )
         bucket_cap = cfg.bucket_cap or default_bucket_cap(n, cfg.n_bits)
-        table_ids, db_aug = _build_tables(db_np, proj, cfg.n_bits, bucket_cap)
+        table_ids, db_aug, counts = _build_tables(
+            db_np, proj, cfg.n_bits, bucket_cap
+        )
         return cls(
             cfg,
             proj=jnp.asarray(proj),
             table_ids=jnp.asarray(table_ids),
             db_aug=jnp.asarray(db_aug),
+            counts=jnp.asarray(counts),
         )
 
     def refresh(self, db: jax.Array) -> "LSHIndex":
         """Rehash a drifted db with the SAME projections and bucket_cap."""
         db_np = np.asarray(db, dtype=np.float32)
         proj = np.asarray(self.proj)
-        table_ids, db_aug = _build_tables(
+        table_ids, db_aug, counts = _build_tables(
             db_np, proj, self.n_bits, self.table_ids.shape[2]
         )
         return LSHIndex(
@@ -131,6 +181,7 @@ class LSHIndex:
             proj=self.proj,
             table_ids=jnp.asarray(table_ids),
             db_aug=jnp.asarray(db_aug),
+            counts=jnp.asarray(counts),
         )
 
     # -------------------------------------------------------------- queries
@@ -179,11 +230,15 @@ class LSHIndex:
         return TopK(res.ids[0], res.values[0])
 
     def memory_bytes(self) -> int:
-        return base.state_bytes((self.proj, self.table_ids, self.db_aug))
+        return base.state_bytes(
+            (self.proj, self.table_ids, self.db_aug, self.counts)
+        )
 
     # --------------------------------------------------------------- pytree
     def tree_flatten(self):
-        return (self.proj, self.table_ids, self.db_aug), self.config
+        return (
+            self.proj, self.table_ids, self.db_aug, self.counts
+        ), self.config
 
     @classmethod
     def tree_unflatten(cls, config, children):

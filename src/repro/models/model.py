@@ -168,6 +168,31 @@ class Model:
         total = loss.mean() + _AUX_WEIGHT * aux
         return total, {"nll": loss.mean(), "aux": aux, "log_z": log_z}
 
+    # ---------------------------------------------------------------- taps
+    def trunk_taps(self, params, batch, lengths=None) -> jax.Array:
+        """Mean-pooled per-tap trunk representations for deep-kNN
+        attribution (repro.workloads.dknn): (n_taps, B, d) fp32.
+
+        Taps are the block-group scan-step boundary activations plus the
+        final normed output (transformer.apply_trunk ``return_taps``),
+        mean-pooled over valid positions. ``lengths`` ((B,) optional)
+        masks right-padded positions out of the pool; None pools over the
+        full length. Rows are NOT normalized — dknn unit-normalizes so
+        its MIPS probes rank by cosine."""
+        cfg = self.cfg
+        x, pos, prefix = self._embed_inputs(params, batch)
+        _, _, taps = transformer.apply_trunk(
+            params, cfg, x, pos, prefix=prefix, mesh=self.mesh,
+            return_taps=True,
+        )  # (n_taps, B, L, d)
+        if lengths is None:
+            return taps.mean(axis=2)
+        ok = (
+            jnp.arange(taps.shape[2])[None, :] < lengths[:, None]
+        )  # (B, L)
+        denom = jnp.maximum(lengths.astype(jnp.float32), 1.0)[None, :, None]
+        return (taps * ok[None, :, :, None]).sum(axis=2) / denom
+
     # ---------------------------------------------------------------- decode
     def init_cache(self, batch: int, max_seq: int, dtype=None, paged=None):
         """``paged`` (a :class:`repro.models.transformer.PagedLayout`) swaps

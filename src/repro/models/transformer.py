@@ -204,11 +204,23 @@ def apply_trunk(
     *,
     prefix: int = 0,
     mesh=None,
-) -> tuple[jax.Array, jax.Array]:
-    """Returns (h (B, L, d), aux_loss)."""
+    return_taps: bool = False,
+) -> tuple[jax.Array, jax.Array] | tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (h (B, L, d), aux_loss) — or (h, aux_loss, taps) with
+    ``return_taps``.
+
+    Taps are the scan-step boundary activations the remat machinery
+    already saves: one (B, L, d) fp32 slice per block-group step (a whole
+    layer-group period, e.g. Griffin's (rec, rec, attn)), plus the final
+    normed output as the last row — stacked to (n_taps, B, L, d). Deep-kNN
+    attribution (repro.workloads.dknn) builds one index per tap; emitting
+    them as scan ys keeps HLO size depth-independent, same as the trunk
+    itself.
+    """
     aux0 = jnp.zeros((), jnp.float32)
     x = _constrain_batch(x, mesh)
 
+    taps = []
     for stack, (pattern, count) in zip(params["blocks"], block_groups(cfg)):
 
         def body(carry, layer_p, pattern=pattern):
@@ -218,12 +230,19 @@ def apply_trunk(
                 h, a = _apply_block(layer_p[str(j)], cfg, kind, h, positions,
                                     prefix, mesh=mesh)
                 aux = aux + a
-            return (_constrain_batch(h, mesh), aux), None
+            h = _constrain_batch(h, mesh)
+            ys = h.astype(jnp.float32) if return_taps else None
+            return (h, aux), ys
 
         if REMAT:
             body = jax.checkpoint(body)
-        (x, aux0), _ = jax.lax.scan(body, (x, aux0), stack)
+        (x, aux0), ys = jax.lax.scan(body, (x, aux0), stack)
+        if return_taps:
+            taps.append(ys)  # (count, B, L, d)
     h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_taps:
+        taps.append(h.astype(jnp.float32)[None])
+        return h, aux0, jnp.concatenate(taps, axis=0)
     return h, aux0
 
 

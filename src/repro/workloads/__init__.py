@@ -1,0 +1,21 @@
+"""Workloads on the estimator core — the paper's "as many scenarios as
+you can imagine" leg (ROADMAP: scenario diversity).
+
+Three thin clients of :mod:`repro.core.estimators` + the Index protocol,
+none of which owns estimator math of its own:
+
+* :mod:`repro.workloads.dknn` — deep-kNN classification/attribution over
+  trunk activation taps, with conformal credibility/confidence;
+* :mod:`repro.workloads.structured` — perturb-and-MAP structured
+  inference: sequence MAP and Gumbel top-k sampling-without-replacement
+  (stochastic beam search), certificate-gated;
+* the unbiased LSH-sampler estimator itself lives in the core
+  (:func:`repro.core.estimators.lsh_sampler_logz`) behind the same
+  interface as Algorithm 3.
+
+CLI: ``PYTHONPATH=src python -m repro.launch.workloads {dknn,structured,
+estimator} ...``; benchmark suite: ``python -m benchmarks.run workloads``.
+"""
+from repro.workloads import dknn, structured
+
+__all__ = ["dknn", "structured"]

@@ -1,0 +1,245 @@
+"""Perturb-and-MAP structured inference: sequence MAP and stochastic beam
+search on the amortized estimator core.
+
+Both modes run the same certificate-gated beam recursion; each beam
+expansion draws its candidate children THROUGH the head index (any
+backend) instead of a dense vocab scan:
+
+* **MAP** (``mode="map"``): beams expand through
+  :func:`repro.core.estimators.topk_probe`; the pooled top-W prefixes by
+  total log-prob are a certified exact beam step whenever every live
+  parent's ``num``-th candidate clears ``S_min + c`` (Def 3.1's gap
+  bound on the unprobed scores).
+* **Stochastic beam search** (``mode="sbs"``, Kool et al. 2019): Gumbel
+  top-k sampling WITHOUT replacement over complete sequences. Each
+  expansion is one :func:`repro.core.estimators.local_gumbel_topk` call
+  (the lazy-Gumbel Algorithm-2 machinery extended to top-``num``), then
+  children are conditioned on the parent's perturbed value via the
+  numerically-stable max-shift (:func:`shift_gumbel`), so a beam of width
+  W maintains exactly the W largest conditioned perturbed prefixes — and
+  the surviving leaves are a sample of W sequences without replacement
+  from the sequence distribution.
+
+Key discipline: every tree node owns a typed PRNG key — the root gets the
+user's key, a child's key is ``fold_in(parent_key, token)`` — so a node's
+Gumbel draw depends only on its path, never on which other beams share
+the batch (the serving engine's batch-composition-invariance discipline).
+That is what makes beam-width-W search bitwise-comparable to brute-force
+enumeration (beam width = |V|^horizon) in tests/test_workloads.py.
+
+Exactness flags: a beam's ``exact`` flag is the AND, along its path, of
+(a) its parent expansion's Algorithm-2 certificate (or the MAP gap
+certificate) and (b) EVERY live parent's certificate at each pooled step
+(a failed sibling expansion may hide a candidate that belonged in the
+pooled top-W). Flags certify the search given the scoring: with
+``logz="amortized"`` the per-step log Z is itself an Algorithm-3
+estimate and the flags are conditional on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimators as est
+from repro.models import transformer
+
+__all__ = [
+    "BeamConfig",
+    "Beams",
+    "shift_gumbel",
+    "make_search_fn",
+    "search",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamConfig:
+    n_beams: int = 4
+    horizon: int = 8
+    expand_k: int = 64  # probe width per expansion (candidate pool size)
+    l: int = 64  # lazy-Gumbel tail atom rate per expansion (sbs)
+    c: float = 0.0  # MIPS gap slack (Def 3.1) for the certificates
+    mode: str = "sbs"  # "sbs" | "map"
+    logz: str = "exact"  # "exact" | "amortized" per-step log Z
+    logz_l: int = 64  # tail draws for the amortized log Z
+
+
+class Beams(NamedTuple):
+    tokens: jax.Array  # (W, horizon) int32 generated tokens, best first
+    logp: jax.Array  # (W,) f32 sequence log-prob (model, given log Z path)
+    gumbel: jax.Array  # (W,) f32 conditioned perturbed log-prob (sbs;
+    #   == logp for map)
+    exact: jax.Array  # (W,) bool certificate-gated exactness flags
+    live: jax.Array  # (W,) bool — False: fewer than W sequences exist
+    ok_rate: jax.Array  # () f32 fraction of expansion certificates passed
+
+
+def shift_gumbel(
+    g_parent: jax.Array, z: jax.Array, g_tilde: jax.Array
+) -> jax.Array:
+    """Condition children's perturbed values so their max equals the
+    parent's (Kool et al. 2019, eq. 11's stable form):
+    ``G = -log(exp(-g_parent) - exp(-z) + exp(-g_tilde))`` with
+    ``z = max g_tilde``, computed via softplus so the argmax child maps
+    EXACTLY to ``g_parent`` and -inf children stay -inf."""
+    v = g_parent - g_tilde + jnp.log1p(
+        -jnp.exp(jnp.minimum(g_tilde - z, 0.0))
+    )
+    return g_parent - jnp.maximum(v, 0.0) - jnp.log1p(jnp.exp(-jnp.abs(v)))
+
+
+def _certificate_map(values: jax.Array, num: int, c: float) -> jax.Array:
+    """MAP gap certificate per beam: kept top-``num`` provably exact iff
+    the num-th value clears ``S_min + c`` (every unprobed score is below
+    that by Def 3.1). ``values`` (W, k) descending probe values."""
+    vals = values.astype(jnp.float32)
+    s_min = jnp.min(
+        jnp.where(jnp.isneginf(vals), jnp.inf, vals), axis=1
+    )
+    return vals[:, num - 1] >= s_min + c
+
+
+def make_search_fn(model, bcfg: BeamConfig, prompt_len: int):
+    """Build the jit-compiled beam search: ``fn(params, prompt (P,) int32,
+    key, index) -> Beams``. One compile per (model cfg, bcfg, P)."""
+    cfg = model.cfg
+    w = bcfg.n_beams
+    vocab = cfg.vocab
+    kk = min(bcfg.expand_k, vocab)
+    num = min(w, kk)
+    # pooled top-W completeness is arguable statically only when each
+    # parent contributes its full top-W (num == w) or its every child
+    # (num == vocab); otherwise flags are conservatively False
+    exact_static = (num == w) or (num >= vocab)
+    max_seq = prompt_len + bcfg.horizon + 1
+    p_len = prompt_len
+
+    def run(params, prompt, key, index=None) -> Beams:
+        emb = model._out_embed(params)[:vocab].astype(jnp.float32)
+
+        toks_in = jnp.broadcast_to(prompt[None], (w, p_len))
+        x = params["embed"][toks_in].astype(model.compute_dtype)
+        pos = jnp.broadcast_to(jnp.arange(p_len), (w, p_len))
+        h, cache = transformer.apply_trunk_prefill(
+            params, cfg, x, pos, max_seq=max_seq
+        )
+        hq = h[:, -1].astype(jnp.float32)  # (W, d)
+
+        def logz_fn(hh, nkeys):
+            if bcfg.logz == "exact":
+                return est.exact_logz(emb, hh)
+            zkeys = jax.vmap(jax.random.fold_in, (0, None))(
+                nkeys, jnp.uint32(vocab + 1)
+            )
+            topk = est.topk_probe(emb, hh, kk, index=index)
+            ids, log_w = est.amortized_candidates(
+                zkeys[0], est.TopK(*map(jax.lax.stop_gradient, topk)),
+                vocab, bcfg.logz_l,
+            )
+            return est.stratified_logz(emb, hh, ids, log_w)
+
+        def step(carry, t):
+            hq, cache, toks, nkeys, logp, g_cond, exact, live, okc, expc = (
+                carry
+            )
+            log_z = logz_fn(hq, nkeys)  # (W,)
+            base = logp - log_z  # per-parent additive constant
+            if bcfg.mode == "sbs":
+                res = est.local_gumbel_topk(
+                    None, emb, hq, num=num, k=kk, l=bcfg.l, index=index,
+                    c=bcfg.c, keys=nkeys,
+                )
+                cand_ids = res.ids  # (W, num)
+                phi = base[:, None] + res.scores
+                g_tilde = base[:, None] + res.values
+                z = jnp.max(g_tilde, axis=1, keepdims=True)
+                metric = shift_gumbel(g_cond[:, None], z, g_tilde)
+                ok_b = res.ok
+            else:  # map
+                tk = est.topk_probe(emb, hq, kk, index=index)
+                cand_ids = tk.ids[:, :num]
+                phi = base[:, None] + tk.values[:, :num]
+                metric = phi
+                ok_b = _certificate_map(tk.values, num, bcfg.c)
+
+            msk = live[:, None] & (cand_ids >= 0)
+            pool = jnp.where(msk, metric, -jnp.inf).reshape(-1)
+            top_v, top_i = jax.lax.top_k(pool, w)
+            parent = top_i // num
+            new_live = ~jnp.isneginf(top_v)
+            token = jnp.where(
+                new_live, cand_ids.reshape(-1)[top_i], 0
+            ).astype(jnp.int32)
+            all_ok = jnp.all(ok_b | ~live)
+            new_exact = (
+                exact[parent] & all_ok & new_live & exact_static
+            )
+            new_logp = jnp.where(
+                new_live, phi.reshape(-1)[top_i], -jnp.inf
+            )
+            new_g = jnp.where(new_live, top_v, -jnp.inf)
+            new_toks = toks[parent].at[:, t].set(token)
+            cache = jax.tree.map(lambda a: a[:, parent], cache)
+            nk = jax.vmap(jax.random.fold_in)(
+                nkeys[parent], token.astype(jnp.uint32)
+            )
+            okc = okc + jnp.sum(jnp.where(live, ok_b, False))
+            expc = expc + jnp.sum(live)
+
+            xt = params["embed"][token][:, None].astype(model.compute_dtype)
+            hh, cache = transformer.apply_trunk_decode(
+                params, cfg, xt, cache, jnp.full((w,), p_len + t, jnp.int32)
+            )
+            return (
+                hh[:, 0].astype(jnp.float32), cache, new_toks, nk,
+                new_logp, new_g, new_exact, new_live, okc, expc,
+            ), None
+
+        live0 = jnp.arange(w) == 0  # one root node: only beam 0 is real
+        carry0 = (
+            hq,
+            cache,
+            jnp.zeros((w, bcfg.horizon), jnp.int32),
+            jnp.broadcast_to(key, (w,)),
+            jnp.where(live0, 0.0, -jnp.inf),
+            jnp.where(live0, 0.0, -jnp.inf),  # root perturbed value := 0
+            jnp.full((w,), True),
+            live0,
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+        )
+        carry, _ = jax.lax.scan(
+            step, carry0, jnp.arange(bcfg.horizon, dtype=jnp.int32)
+        )
+        _, _, toks, _, logp, g_cond, exact, live, okc, expc = carry
+        return Beams(
+            tokens=toks,
+            logp=logp,
+            gumbel=g_cond if bcfg.mode == "sbs" else logp,
+            exact=exact & live,
+            live=live,
+            ok_rate=okc.astype(jnp.float32)
+            / jnp.maximum(expc, 1).astype(jnp.float32),
+        )
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=32)
+def _cached_search_fn(model, bcfg: BeamConfig, prompt_len: int):
+    return make_search_fn(model, bcfg, prompt_len)
+
+
+def search(
+    model, params, prompt, key, bcfg: BeamConfig, index: Any = None
+) -> Beams:
+    """Convenience wrapper: (re)uses a cached jitted search for this
+    (model, bcfg, len(prompt)) — models cache by identity, BeamConfig by
+    value (frozen dataclass)."""
+    prompt = jnp.asarray(prompt, jnp.int32)
+    fn = _cached_search_fn(model, bcfg, int(prompt.shape[0]))
+    return fn(params, prompt, key, index)

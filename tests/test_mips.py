@@ -254,3 +254,100 @@ def test_lsh_refresh_preserves_structure():
     np.testing.assert_array_equal(
         np.asarray(index.proj), np.asarray(refreshed.proj)
     )
+
+
+# --------------------------------------------------- LSH estimator duty
+# The unbiased LSH-sampler (core/estimators.lsh_sampler_logz) reads the
+# bucket tables as a proposal distribution, so the index must (a) report
+# TRUE bucket loads in ``counts`` and (b) lose nothing to caps/pads when
+# the cap is lossless. Property-tested via tests/_hyp.py (real hypothesis
+# when installed, a seeded deterministic loop otherwise).
+from _hyp import given, settings, strategies as st  # noqa: E402
+
+
+def _lsh_union_bruteforce(index, q):
+    """Host reference: union of the query's colliding buckets, uncapped."""
+    db_aug = np.asarray(index.db_aug)
+    proj = np.asarray(index.proj)
+    q_aug = np.concatenate([np.asarray(q, np.float32), [0.0]])
+    pows = 1 << np.arange(index.n_bits)
+    union: set[int] = set()
+    for t in range(index.n_tables):
+        q_code = int(((q_aug @ proj[t] >= 0) * pows).sum())
+        codes = ((db_aug @ proj[t] >= 0) * pows).sum(axis=1)
+        union |= set(np.flatnonzero(codes == q_code).tolist())
+    return union
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(64, 256),
+    n_bits=st.integers(2, 5),
+    n_tables=st.integers(2, 6),
+    seed=st.integers(0, 10_000),
+)
+def test_lsh_counts_are_true_bucket_loads(n, n_bits, n_tables, seed):
+    """``counts`` must be the uncapped per-bucket loads (sum = n per
+    table) regardless of how small the cap is, and ``dropped_count`` must
+    equal the total overflow beyond the cap."""
+    db = _db(n=n, d=8, seed=seed % 7)
+    cap = max(1, n // (2 ** (n_bits + 1)))  # deliberately lossy
+    index = mips.build_index(
+        mips.LSHConfig(
+            n_tables=n_tables, n_bits=n_bits, bucket_cap=cap, seed=seed
+        ),
+        db,
+    )
+    counts = np.asarray(index.counts)
+    assert counts.shape == (n_tables, 2**n_bits)
+    assert (counts.sum(axis=1) == n).all()
+    db_aug = np.asarray(index.db_aug)
+    proj = np.asarray(index.proj)
+    pows = 1 << np.arange(n_bits)
+    for t in range(n_tables):
+        codes = ((db_aug @ proj[t] >= 0) * pows).sum(axis=1)
+        np.testing.assert_array_equal(
+            counts[t], np.bincount(codes, minlength=2**n_bits)
+        )
+    kept = np.asarray(index.table_ids)
+    assert int((kept >= 0).sum()) == int(np.minimum(counts, cap).sum())
+    assert index.dropped_count == int(np.maximum(counts - cap, 0).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(64, 256),
+    n_bits=st.integers(2, 5),
+    n_tables=st.integers(2, 6),
+    seed=st.integers(0, 10_000),
+)
+def test_lsh_lossless_cap_candidates_unbiased(n, n_bits, n_tables, seed):
+    """With a lossless cap (>= max bucket load) the capped+padded
+    ``topk_batch`` must return EXACTLY the top-k of the uncapped
+    brute-force bucket union — caps and -1 pads never add, drop, or
+    reorder candidates."""
+    db = _db(n=n, d=8, seed=seed % 7)
+    index = mips.build_index(
+        mips.LSHConfig(
+            n_tables=n_tables, n_bits=n_bits, bucket_cap=n, seed=seed
+        ),
+        db,
+    )
+    assert index.dropped_count == 0
+    q = np.asarray(
+        jax.random.normal(jax.random.key(seed + 1), (8,)), np.float32
+    )
+    union = _lsh_union_bruteforce(index, q)
+    k = 16
+    tk = index.topk(jnp.asarray(q), k)
+    ids = np.asarray(tk.ids)
+    vals = np.asarray(tk.values)
+    got = set(ids[ids >= 0].tolist())
+    scores = np.asarray(db @ q)
+    want = set(
+        sorted(union, key=lambda i: -scores[i])[: min(k, len(union))]
+    )
+    assert got == want, (got ^ want, len(union))
+    # dead slots are exactly the shortfall when the union is small
+    assert int((ids >= 0).sum()) == min(k, len(union))
+    assert np.isneginf(vals[ids < 0]).all()

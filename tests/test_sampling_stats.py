@@ -16,9 +16,11 @@ these tests check the DISTRIBUTIONS the paper promises:
   measured drift term joins the bound.
 
 False-positive budget (documented, pre-registered): every chi-square /
-coverage assertion runs at alpha = 1e-3 per (test, seed); the suite makes
+coverage assertion runs at alpha = 1e-3 per (test, seed); this file makes
 15 chi-square/TV assertions (2 samplers + 3 TV-ish x 3 seeds), so a fresh
-seed set would spuriously fail with probability < 1.5%. All seeds below are
+seed set would spuriously fail with probability < 1.5%. (The estimator
+suite, tests/test_estimator_stats.py, keeps its own ledger — 30 coverage
+assertions at the same per-assertion alpha.) All seeds below are
 FIXED, so the suite is deterministic — the budget describes the design
 risk taken when the seeds were chosen (they were not tuned: first three
 integers). No test relies on a single lucky seed: each runs and must pass

@@ -1,0 +1,383 @@
+"""Workloads subsystem: deep-kNN conformal attribution, Gumbel top-k
+sampling without replacement, and perturb-and-MAP structured inference.
+
+The load-bearing test is the stochastic-beam-search exactness check:
+because every tree node's randomness is keyed by its path (root key +
+fold_in(token) per edge), running the SAME search at beam width |V|^H
+IS brute-force enumeration of all sequences — so the width-k run must
+reproduce the top-k enumerated leaves BITWISE (ids, conditioned
+perturbations, and log-probs), exercising per-row batch-composition
+invariance of prefill/decode along the way."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.transformer as T
+from repro.configs import get_smoke
+from repro.core import estimators as est
+from repro.core import gumbel, mips
+from repro.models.model import Model
+from repro.workloads import dknn, structured
+
+
+@pytest.fixture(autouse=True)
+def _no_remat(monkeypatch):
+    monkeypatch.setattr(T, "REMAT", False)
+
+
+def _model(vocab):
+    cfg = get_smoke("tinyllama-1.1b").scaled(vocab=vocab)
+    model = Model(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+# ------------------------------------------------------ gumbel top-k WOR
+def test_topk_fixed_b_num1_matches_sample_fixed_b_bitwise():
+    """topk_fixed_b is sample_fixed_b's strict generalization: num=1 must
+    reproduce the Algorithm-2 sampler BITWISE (same key split, same tail
+    plan), so every sample_fixed_b statistical guarantee transfers."""
+    n, k, l = 512, 48, 64
+    key0 = jax.random.key(3)
+    scores = jax.random.normal(jax.random.fold_in(key0, 1), (n,)) * 3.0
+
+    def score_fn(ids):
+        return scores[jnp.minimum(ids, n - 1)]
+
+    top_v, top_i = jax.lax.top_k(scores, k)
+    topk = gumbel.TopK(top_i.astype(jnp.int32), top_v)
+    for trial in range(5):
+        key = jax.random.fold_in(key0, 100 + trial)
+        one = est.sample_fixed_b(key, topk, n, score_fn, l=l)
+        many = gumbel.topk_fixed_b(
+            key, topk, n, score_fn, num=4, l=l
+        )
+        assert int(many.ids[0]) == int(one.index)
+        assert float(many.values[0]) == float(one.max_val)
+        assert bool(many.ok) == bool(one.ok)
+        # WOR: no duplicate ids among live slots
+        ids = np.asarray(many.ids)
+        live = ids >= 0
+        assert len(set(ids[live].tolist())) == live.sum()
+        # descending perturbed values, scores consistent
+        vals = np.asarray(many.values)
+        assert np.all(np.diff(vals[live]) <= 0)
+        np.testing.assert_array_equal(
+            np.asarray(many.scores)[live], np.asarray(scores)[ids[live]]
+        )
+
+
+def test_topk_fixed_b_full_s_certificate_vacuous():
+    """k >= n: the tail is empty (b = -inf), the certificate passes
+    vacuously, and the result is the exact perturbed top-num."""
+    n, num = 32, 8
+    scores = jax.random.normal(jax.random.key(5), (n,))
+    top_v, top_i = jax.lax.top_k(scores, n)
+    topk = gumbel.TopK(top_i.astype(jnp.int32), top_v)
+    res = gumbel.topk_fixed_b(
+        jax.random.key(7), topk, n, lambda i: scores[jnp.minimum(i, n - 1)],
+        num=num, l=16,
+    )
+    assert bool(res.ok)
+    ids = np.asarray(res.ids)
+    assert (ids >= 0).all() and len(set(ids.tolist())) == num
+    assert np.all(np.diff(np.asarray(res.values)) <= 0)
+
+
+def test_shift_gumbel_identities():
+    """Kool conditioning: the argmax child maps EXACTLY to the parent's
+    value; -inf children stay -inf; order is preserved."""
+    g_tilde = jnp.array([1.5, 0.2, -3.0, -jnp.inf], jnp.float32)
+    z = jnp.max(g_tilde)
+    parent = jnp.float32(-0.7)
+    g = structured.shift_gumbel(parent, z, g_tilde)
+    assert float(g[0]) == float(parent)  # argmax child == parent, bitwise
+    assert np.isneginf(np.asarray(g)[3])
+    gn = np.asarray(g)
+    assert np.all(np.diff(gn[:3]) < 0)  # strictly ordered like g_tilde
+    assert np.all(gn[1:3] < -0.7)  # children bounded by the parent
+
+
+# ----------------------------------------------------------------- dknn
+def _toy_reps(n_per, n_classes, d, seed, spread=0.15):
+    """Two taps of well-separated class clusters on the sphere. Class
+    centers and the second-tap rotation are FIXED across calls (seed 77)
+    so train/cal/test splits share the class geometry; ``seed`` only
+    varies the per-point noise."""
+    geo = np.random.default_rng(77)
+    centers = geo.normal(size=(n_classes, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    rot = np.linalg.qr(geo.normal(size=(d, d)))[0]
+    rng = np.random.default_rng(seed)
+    labels = np.repeat(np.arange(n_classes), n_per)
+    pts = centers[labels] + spread * rng.normal(size=(len(labels), d))
+    reps = np.stack([pts, pts @ rot]).astype(np.float32)
+    return jnp.asarray(reps), jnp.asarray(labels, jnp.int32)
+
+
+@pytest.mark.parametrize("backend", ["exact", "ivf"])
+def test_dknn_classifies_separable_clusters(backend):
+    icfg = (
+        mips.ExactConfig() if backend == "exact"
+        else mips.IVFConfig(n_clusters=8, n_probe=8, kmeans_iters=4)
+    )
+    cfg = dknn.DKNNConfig(n_classes=4, k=8, index_cfg=icfg)
+    train, tl = _toy_reps(64, 4, 16, seed=0)
+    cal, cl = _toy_reps(16, 4, 16, seed=1)
+    test, wl = _toy_reps(16, 4, 16, seed=2)
+    state = dknn.fit(train, tl, cal, cl, cfg)
+    res = dknn.classify(state, dknn.normalize_reps(test), cfg)
+    acc = float(jnp.mean(res.pred == wl))
+    assert acc >= 0.95, acc
+    # conformal sanity: p-values are valid probabilities; confidence and
+    # credibility come from the top-2 p-values
+    p = np.asarray(res.p_values)
+    assert (p > 0).all() and (p <= 1).all()
+    np.testing.assert_allclose(np.asarray(res.credibility), p.max(axis=1))
+    top2 = np.sort(p, axis=1)[:, -2]
+    np.testing.assert_allclose(np.asarray(res.confidence), 1.0 - top2)
+    # neighbors are valid train ids from every tap
+    neigh = np.asarray(res.neighbors)
+    assert neigh.shape == (2, 64, 8)
+    assert (neigh[neigh >= 0] < train.shape[1]).all()
+
+
+def test_dknn_credibility_flags_ood():
+    """Off-manifold queries must get LOW credibility (no class conforms):
+    the conformal score that makes DkNN an attribution/abstention tool."""
+    cfg = dknn.DKNNConfig(n_classes=4, k=8)
+    train, tl = _toy_reps(64, 4, 16, seed=0)
+    cal, cl = _toy_reps(16, 4, 16, seed=1)
+    state = dknn.fit(train, tl, cal, cl, cfg)
+    test, _ = _toy_reps(16, 4, 16, seed=2)
+    rng = np.random.default_rng(9)
+    ood = dknn.normalize_reps(
+        jnp.asarray(rng.normal(size=(2, 24, 16)), jnp.float32)
+    )
+    r_in = dknn.classify(state, dknn.normalize_reps(test), cfg)
+    r_ood = dknn.classify(state, ood, cfg)
+    in_cred = float(r_in.credibility.mean())
+    ood_cred = float(r_ood.credibility.mean())
+    assert ood_cred < 0.5 * in_cred, (in_cred, ood_cred)
+
+
+def test_dknn_classify_is_jittable():
+    cfg = dknn.DKNNConfig(n_classes=4, k=4)
+    train, tl = _toy_reps(32, 4, 8, seed=0)
+    cal, cl = _toy_reps(8, 4, 8, seed=1)
+    state = dknn.fit(train, tl, cal, cl, cfg)
+    test, _ = _toy_reps(8, 4, 8, seed=2)
+    fn = jax.jit(lambda s, r: dknn.classify(s, r, cfg))
+    a = fn(state, dknn.normalize_reps(test))
+    b = dknn.classify(state, dknn.normalize_reps(test), cfg)
+    np.testing.assert_array_equal(np.asarray(a.pred), np.asarray(b.pred))
+    np.testing.assert_allclose(
+        np.asarray(a.p_values), np.asarray(b.p_values), rtol=1e-6
+    )
+
+
+# ------------------------------------------------------------ activation taps
+def test_trunk_taps_shapes_and_pooling():
+    model, params = _model(vocab=64)
+    toks = jax.random.randint(jax.random.key(2), (3, 10), 0, 64)
+    taps = model.trunk_taps(params, {"tokens": toks})
+    assert taps.ndim == 3 and taps.shape[1] == 3
+    assert taps.dtype == jnp.float32
+    # masked pooling: padding positions must not contribute
+    lengths = jnp.array([10, 4, 7])
+    tl = model.trunk_taps(params, {"tokens": toks}, lengths=lengths)
+    toks_cut = toks.at[1, 4:].set(0)
+    tl2 = model.trunk_taps(params, {"tokens": toks_cut}, lengths=lengths)
+    np.testing.assert_allclose(
+        np.asarray(tl[:, 1]), np.asarray(tl2[:, 1]), rtol=1e-5
+    )
+
+
+# ----------------------------------------------------- structured: SBS/MAP
+def test_sbs_matches_bruteforce_enumeration_bitwise():
+    """Beam width |V|^H enumerates every sequence (it IS brute force);
+    the width-k run must return the top-k enumerated leaves bitwise."""
+    V, H, W = 6, 3, 3
+    model, params = _model(vocab=V)
+    prompt = jnp.array([1, 2], jnp.int32)
+    key = jax.random.key(9)
+    small = structured.search(
+        model, params, prompt, key,
+        structured.BeamConfig(n_beams=W, horizon=H, expand_k=V, l=8),
+    )
+    full = structured.search(
+        model, params, prompt, key,
+        structured.BeamConfig(n_beams=V**H, horizon=H, expand_k=V, l=8),
+    )
+    live = np.asarray(full.live)
+    assert live.sum() == V**H  # every sequence enumerated...
+    seqs = {tuple(r) for r in np.asarray(full.tokens)[live]}
+    assert len(seqs) == V**H  # ...exactly once
+    order = np.argsort(-np.asarray(full.gumbel))[:W]
+    np.testing.assert_array_equal(
+        np.asarray(full.tokens)[order], np.asarray(small.tokens)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.gumbel)[order], np.asarray(small.gumbel)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full.logp)[order], np.asarray(small.logp)
+    )
+
+
+def test_sbs_logp_matches_teacher_forcing():
+    """The search's per-beam logp must equal the model's teacher-forced
+    sequence log-prob (log-softmax chain over the generated tokens)."""
+    model, params = _model(vocab=64)
+    cfg = model.cfg
+    prompt = jnp.array([3, 5, 7], jnp.int32)
+    out = structured.search(
+        model, params, prompt, jax.random.key(42),
+        structured.BeamConfig(n_beams=4, horizon=5, expand_k=64, l=16),
+    )
+    emb = model._out_embed(params)[: cfg.vocab].astype(jnp.float32)
+    for b in range(4):
+        toks = jnp.concatenate([prompt, out.tokens[b]])
+        x = params["embed"][toks][None].astype(model.compute_dtype)
+        pos = jnp.arange(toks.shape[0])[None]
+        h, _ = T.apply_trunk_prefill(
+            params, cfg, x, pos, max_seq=int(toks.shape[0])
+        )
+        lsm = jax.nn.log_softmax(
+            h[0].astype(jnp.float32) @ emb.T, axis=-1
+        )
+        want = sum(
+            float(lsm[prompt.shape[0] - 1 + i, int(t)])
+            for i, t in enumerate(np.asarray(out.tokens[b]))
+        )
+        assert abs(want - float(out.logp[b])) < 5e-3, (b, want)
+
+
+def test_sbs_distinct_and_deterministic():
+    model, params = _model(vocab=64)
+    prompt = jnp.array([3, 5], jnp.int32)
+    bcfg = structured.BeamConfig(n_beams=4, horizon=6, expand_k=64, l=16)
+    a = structured.search(model, params, prompt, jax.random.key(1), bcfg)
+    b = structured.search(model, params, prompt, jax.random.key(1), bcfg)
+    c = structured.search(model, params, prompt, jax.random.key(2), bcfg)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert not np.array_equal(np.asarray(a.tokens), np.asarray(c.tokens))
+    assert len({tuple(r) for r in np.asarray(a.tokens)}) == 4
+    g = np.asarray(a.gumbel)
+    assert np.all(np.diff(g) <= 0)  # best-first
+
+
+def test_map_contains_greedy_and_dominates():
+    """MAP beam search with full-width expansion: the best beam's logp
+    must be >= the greedy rollout's, beams come back best-first, and on
+    the exact backend every certificate passes."""
+    model, params = _model(vocab=64)
+    cfg = model.cfg
+    prompt = jnp.array([2, 4], jnp.int32)
+    out = structured.search(
+        model, params, prompt, jax.random.key(0),
+        structured.BeamConfig(n_beams=4, horizon=4, expand_k=64, mode="map"),
+    )
+    assert np.all(np.diff(np.asarray(out.logp)) <= 1e-6)
+    assert np.asarray(out.exact).all() and float(out.ok_rate) == 1.0
+    # greedy rollout via the same trunk
+    emb = model._out_embed(params)[: cfg.vocab].astype(jnp.float32)
+    toks = list(np.asarray(prompt))
+    lp = 0.0
+    for _ in range(4):
+        tt = jnp.asarray(toks, jnp.int32)
+        x = params["embed"][tt][None].astype(model.compute_dtype)
+        pos = jnp.arange(len(toks))[None]
+        h, _ = T.apply_trunk_prefill(
+            params, cfg, x, pos, max_seq=len(toks)
+        )
+        lsm = jax.nn.log_softmax(h[0, -1].astype(jnp.float32) @ emb.T)
+        nxt = int(jnp.argmax(lsm))
+        lp += float(lsm[nxt])
+        toks.append(nxt)
+    assert float(out.logp[0]) >= lp - 5e-3, (float(out.logp[0]), lp)
+
+
+def test_sbs_ivf_flags_consistent_with_recall():
+    """Approximate expansion backends: with a FULL probe (n_probe = all
+    clusters) the IVF index is exhaustive, so the search must agree with
+    the exact backend and may keep its exact flags; with a narrow probe
+    whose beams diverge from the exact run, flags/certificates are the
+    only honesty channel — a diverged run must not report a higher
+    conditioned perturbation than the exact search found."""
+    model, params = _model(vocab=256)
+    emb = model._out_embed(params)[:256].astype(jnp.float32)
+    prompt = jnp.array([7, 3], jnp.int32)
+    bcfg = structured.BeamConfig(n_beams=4, horizon=4, expand_k=32, l=64)
+    exact_run = structured.search(
+        model, params, prompt, jax.random.key(5), bcfg
+    )
+    assert float(exact_run.ok_rate) == 1.0  # l sized so certs are airtight
+    full_ivf = mips.build_index(
+        mips.IVFConfig(n_clusters=8, n_probe=8, kmeans_iters=4), emb
+    )
+    assert int(full_ivf.state.spill_count) == 0
+    ivf_run = structured.search(
+        model, params, prompt, jax.random.key(5), bcfg, full_ivf
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact_run.tokens), np.asarray(ivf_run.tokens)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact_run.exact), np.asarray(ivf_run.exact)
+    )
+    assert np.asarray(ivf_run.exact).all()
+    # narrow probe: the Algorithm-2 certificate is CONDITIONAL on the
+    # Def-3.1 gap bound (slack c), so flags may stay true while the probe
+    # misses mass — any divergence from the exact search must then be
+    # explained by measured probe recall < 1 at the decision states
+    # (the repo's TV-at-measured-recall accounting, not the flags).
+    narrow = mips.build_index(
+        mips.IVFConfig(n_clusters=16, n_probe=1, kmeans_iters=4), emb
+    )
+    nrun = structured.search(
+        model, params, prompt, jax.random.key(5), bcfg, narrow
+    )
+    if not np.array_equal(
+        np.asarray(nrun.tokens), np.asarray(exact_run.tokens)
+    ):
+        recalls = []
+        for t in range(bcfg.horizon):
+            for b in range(bcfg.n_beams):
+                toks = jnp.concatenate([prompt, exact_run.tokens[b, :t]])
+                x = params["embed"][toks][None].astype(model.compute_dtype)
+                pos = jnp.arange(toks.shape[0])[None]
+                h, _ = T.apply_trunk_prefill(
+                    params, model.cfg, x, pos, max_seq=int(toks.shape[0])
+                )
+                hq = h[0, -1].astype(jnp.float32)
+                got = set(np.asarray(narrow.topk(hq, 32).ids).tolist())
+                want = set(
+                    np.argsort(-np.asarray(emb @ hq))[:32].tolist()
+                )
+                recalls.append(len(got & want) / 32)
+        assert min(recalls) < 1.0, (
+            "beams diverged but the probe never missed a candidate"
+        )
+
+
+# ------------------------------------------------- lsh_sampler interface
+def test_lsh_sampler_per_table_consistency():
+    db = jax.random.normal(jax.random.key(0), (512, 16))
+    db = db / jnp.linalg.norm(db, axis=1, keepdims=True)
+    h = db[:3] * 4.0
+    index = mips.build_index(
+        mips.LSHConfig(n_tables=8, n_bits=4, bucket_cap=512), db
+    )
+    assert index.dropped_count == 0
+    per = est.lsh_sampler_logz(index, h, per_table=True)
+    combined = est.lsh_sampler_logz(index, h)
+    assert per.shape == (3, 8)
+    np.testing.assert_allclose(
+        np.asarray(jax.nn.logsumexp(per, axis=1) - jnp.log(8.0)),
+        np.asarray(combined),
+        rtol=1e-5,
+    )
+    # same interface as Algorithm 3: (t,) log Z-hat, fp32, finite
+    assert combined.shape == (3,) and combined.dtype == jnp.float32
+    assert np.isfinite(np.asarray(combined)).all()
